@@ -1,0 +1,57 @@
+"""Shared benchmark plumbing: timers, graph prep, row records, persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.graphs.generators import build_suite
+
+RESULTS_DIR = os.environ.get("BENCH_OUT", os.path.join(
+    os.path.dirname(__file__), "..", "results", "bench"))
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
+    """Returns (result_of_last, best_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def sources_for(g: CSRGraph, n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    # sample from vertices that have outgoing edges
+    deg = g.out_degree()
+    cand = np.flatnonzero(deg > 0)
+    return rng.choice(cand, size=min(n, cand.size), replace=False)
+
+
+def save_rows(name: str, rows: list):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return path
+
+
+def fmt_table(rows: list, cols: list) -> str:
+    widths = [max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols]
+    out = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(w)
+                             for c, w in zip(cols, widths)))
+    return "\n".join(out)
+
+
+def rnd(x, k=3):
+    return float(np.round(float(x), k))

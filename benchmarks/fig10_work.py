@@ -1,0 +1,66 @@
+"""Figure 10 analogue: cache efficiency and work efficiency.
+
+Edges processed per FPP query: ForkGraph vs the global-frontier engine vs
+the sequential oracle (Dijkstra / push-PPR edge counts).  The paper's
+acceptance band for ForkGraph: 10.4-16.7x sequential on BC/LL and
+5.2-9.4x on NCP, while global engines can exceed 129x.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import rnd, sources_for, timed
+from repro.core import oracles
+from repro.core.baselines import global_minplus, global_push
+from repro.core.queries import prepare, run_ppr, run_sssp
+from repro.graphs.generators import build_suite
+
+
+def run(quick: bool = True):
+    rows = []
+    graphs = ["road-ca", "social-lj"] if quick else \
+        ["road-ca", "road-us", "social-lj", "social-or"]
+    nq = 8 if quick else 32
+    for gname in graphs:
+        g = build_suite(gname)
+        srcs = sources_for(g, nq, seed=5)
+        bg, perm = prepare(g, 256)
+        # sequential oracle work
+        seq_edges = float(np.mean([oracles.dijkstra(g, int(s))[1]
+                                   for s in srcs]))
+        res = run_sssp(bg, perm[srcs])
+        base = global_minplus(bg, perm[srcs])
+        rows.append({
+            "app": "LL/SSSP", "graph": gname,
+            "seq_edges_per_q": rnd(seq_edges, 0),
+            "forkgraph_x_seq": rnd(res.edges_processed.mean()
+                                   / max(seq_edges, 1), 1),
+            "global_x_seq": rnd(base.edges_processed.mean()
+                                / max(seq_edges, 1), 1),
+            "fg_traffic_GB": rnd(res.stats.modeled_bytes / 1e9, 4),
+            "base_traffic_GB": rnd(base.modeled_bytes / 1e9, 4),
+            "traffic_red_x": rnd(base.modeled_bytes
+                                 / max(res.stats.modeled_bytes, 1e-9), 1)})
+        seq_pedges = float(np.mean([oracles.ppr_push(g, int(s),
+                                                     eps=1e-3)[2]
+                                    for s in srcs]))
+        resp = run_ppr(bg, perm[srcs], eps=1e-3)
+        basep = global_push(bg, perm[srcs], eps=1e-3)
+        rows.append({
+            "app": "NCP/PPR", "graph": gname,
+            "seq_edges_per_q": rnd(seq_pedges, 0),
+            "forkgraph_x_seq": rnd(resp.edges_processed.mean()
+                                   / max(seq_pedges, 1), 1),
+            "global_x_seq": rnd(basep.edges_processed.mean()
+                                / max(seq_pedges, 1), 1),
+            "fg_traffic_GB": rnd(resp.stats.modeled_bytes / 1e9, 4),
+            "base_traffic_GB": rnd(basep.modeled_bytes / 1e9, 4),
+            "traffic_red_x": rnd(basep.modeled_bytes
+                                 / max(resp.stats.modeled_bytes, 1e-9),
+                                 1)})
+    return rows
+
+
+COLUMNS = ["app", "graph", "seq_edges_per_q", "forkgraph_x_seq",
+           "global_x_seq", "fg_traffic_GB", "base_traffic_GB",
+           "traffic_red_x"]

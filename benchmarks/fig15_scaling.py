@@ -1,0 +1,41 @@
+"""Figure 15 analogue: throughput scaling with the number of FPP queries.
+
+The paper's finding: throughput grows with more queries (the buffered
+execution amortizes partition loads over more queries) — PPR/RW scale
+best, SSSP/BFS hold steady.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import rnd, sources_for, timed
+from repro.core.queries import prepare, run_ppr, run_rw, run_sssp
+from repro.graphs.generators import build_suite
+
+
+def run(quick: bool = True):
+    g = build_suite("social-lj")
+    bg, perm = prepare(g, 256)
+    counts = (8, 32, 128) if quick else (8, 32, 128, 512)
+    rows = []
+    for nq in counts:
+        srcs = sources_for(g, nq, seed=8)
+        res, secs = timed(run_sssp, bg, perm[srcs])
+        rows.append({"query": "SSSP", "n_queries": nq,
+                     "runtime_s": rnd(secs),
+                     "qps": rnd(nq / max(secs, 1e-9), 1),
+                     "visits": res.stats.visits})
+        res, secs = timed(run_ppr, bg, perm[srcs], eps=1e-3)
+        rows.append({"query": "PPR", "n_queries": nq,
+                     "runtime_s": rnd(secs),
+                     "qps": rnd(nq / max(secs, 1e-9), 1),
+                     "visits": res.stats.visits})
+        wres, secs = timed(run_rw, bg, perm[srcs], length=16)
+        rows.append({"query": "RW", "n_queries": nq,
+                     "runtime_s": rnd(secs),
+                     "qps": rnd(nq / max(secs, 1e-9), 1),
+                     "visits": getattr(wres, "visits", "")})
+    return rows
+
+
+COLUMNS = ["query", "n_queries", "runtime_s", "qps", "visits"]

@@ -1,0 +1,35 @@
+"""Figure 16 analogue: effect of partition (block) size.
+
+The paper finds LLC-sized partitions optimal: larger thrashes the cache,
+smaller multiplies scheduling overhead.  The TPU analogue sweeps the VMEM
+block size B; the modeled-traffic curve shows the same U-shape driver
+(visits x block bytes).
+"""
+from __future__ import annotations
+
+from benchmarks.common import rnd, sources_for, timed
+from repro.core.partition import edge_cut_fraction
+from repro.core.queries import prepare, run_sssp
+from repro.graphs.generators import build_suite
+
+
+def run(quick: bool = True):
+    g = build_suite("road-ca")
+    nq = 16 if quick else 64
+    srcs = sources_for(g, nq, seed=9)
+    rows = []
+    sizes = (128, 256, 512) if quick else (64, 128, 256, 512, 1024)
+    for bs in sizes:
+        bg, perm = prepare(g, bs)
+        res, secs = timed(run_sssp, bg, perm[srcs])
+        rows.append({
+            "block_size": bs, "partitions": bg.num_parts,
+            "edge_cut": rnd(edge_cut_fraction(bg), 3),
+            "runtime_s": rnd(secs), "visits": res.stats.visits,
+            "traffic_GB": rnd(res.stats.modeled_bytes / 1e9, 4),
+            "edges_per_q": rnd(res.edges_processed.mean(), 0)})
+    return rows
+
+
+COLUMNS = ["block_size", "partitions", "edge_cut", "runtime_s", "visits",
+           "traffic_GB", "edges_per_q"]

@@ -1,0 +1,58 @@
+"""Table 1 / Figure 1 analogue: inter- vs intra-query parallelism profile.
+
+The paper profiles 10k PPRs on LiveJournal under three schemes (1 thread;
+t=10 intra-query; t=1 inter-query) and shows the t=1 scheme is fastest but
+LLC-miss-bound.  Hardware counters don't exist here, so the cache-miss
+analogue is the *modeled HBM->VMEM traffic*: blocks streamed x block bytes,
+with t=1 counting per-query (uncoordinated) streams and t=10 counting
+per-query sequential streams (paper Table 1 columns), vs ForkGraph's
+buffered execution (one stream per partition visit shared by all queries).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import rnd, sources_for, timed
+from repro.core.baselines import global_push
+from repro.core.queries import prepare, run_ppr
+from repro.graphs.generators import build_suite
+
+
+def run(quick: bool = True):
+    g = build_suite("social-lj")
+    nq = 32 if quick else 128
+    srcs = sources_for(g, nq, seed=1)
+    bg, perm = prepare(g, block_size=256)
+    rows = []
+
+    # ForkGraph buffered execution
+    res, secs = timed(run_ppr, bg, perm[srcs], eps=1e-3)
+    rows.append({
+        "scheme": "forkgraph(buffered)", "queries": nq,
+        "runtime_s": rnd(secs), "edges": rnd(res.edges_processed.sum(), 0),
+        "modeled_traffic_GB": rnd(res.stats.modeled_bytes / 1e9, 4),
+        "visits": res.stats.visits})
+
+    # Global frontier engine: one pass over all queries concurrently
+    base, bsecs = timed(global_push, bg, perm[srcs], eps=1e-3)
+    rows.append({
+        "scheme": "global t=1 (uncoordinated)", "queries": nq,
+        "runtime_s": rnd(bsecs), "edges": rnd(base.edges_processed.sum(), 0),
+        "modeled_traffic_GB": rnd(base.modeled_bytes / 1e9, 4),
+        "visits": base.rounds})
+    rows.append({
+        "scheme": "global t=10 (shared-lb)", "queries": nq,
+        "runtime_s": rnd(bsecs), "edges": rnd(base.edges_processed.sum(), 0),
+        "modeled_traffic_GB": rnd(base.modeled_bytes_shared / 1e9, 4),
+        "visits": base.rounds})
+
+    fg, un = rows[0]["modeled_traffic_GB"], rows[1]["modeled_traffic_GB"]
+    rows.append({"scheme": "traffic_reduction_xN",
+                 "queries": nq, "runtime_s": "",
+                 "modeled_traffic_GB": rnd(un / max(fg, 1e-12), 1),
+                 "edges": "", "visits": ""})
+    return rows
+
+
+COLUMNS = ["scheme", "queries", "runtime_s", "edges",
+           "modeled_traffic_GB", "visits"]

@@ -1,0 +1,53 @@
+"""Table 4 analogue: scheduling policies and yield-threshold sweeps (BC/Us).
+
+A: scheduling policy {random, max_ops, fifo, priority} with yielding on.
+B: yield heuristic 1 sweep {0.25μ, 0.5μ, μ, 2μ, 4μ, ∞}.
+C: yield heuristic 2 sweep {0.25Δ, 0.5Δ, Δ, 2Δ, 4Δ, ∞}.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import rnd, sources_for, timed
+from repro.core.queries import prepare, run_sssp
+from repro.core.yielding import YieldConfig, default_delta
+from repro.graphs.generators import build_suite
+
+
+def run(quick: bool = True):
+    g = build_suite("road-ca" if quick else "road-us")
+    nq = 16 if quick else 100
+    srcs = sources_for(g, nq, seed=7)
+    bg, perm = prepare(g, 256)
+    wmax = float(np.nanmax(np.where(np.isfinite(bg.blocks), bg.blocks,
+                                    np.nan)))
+    delta = default_delta(wmax)
+    rows = []
+    # A: policies (yielding enabled, Δ)
+    for policy in ("random", "max_ops", "fifo", "priority"):
+        yc = YieldConfig(delta=delta)
+        res, secs = timed(run_sssp, bg, perm[srcs], yield_config=yc,
+                          schedule=policy)
+        rows.append({"sweep": "A:policy", "setting": policy,
+                     "runtime_s": rnd(secs), "visits": res.stats.visits,
+                     "edges_per_q": rnd(res.edges_processed.mean(), 0)})
+    # B: heuristic 1 (edge budget)
+    for mf in (0.25, 0.5, 1.0, 2.0, 4.0, None):
+        yc = YieldConfig(mu_factor=mf)
+        label = f"{mf}mu" if mf else "no_yield"
+        res, secs = timed(run_sssp, bg, perm[srcs], yield_config=yc)
+        rows.append({"sweep": "B:mu", "setting": label,
+                     "runtime_s": rnd(secs), "visits": res.stats.visits,
+                     "edges_per_q": rnd(res.edges_processed.mean(), 0)})
+    # C: heuristic 2 (Δ window)
+    for df in (0.25, 0.5, 1.0, 2.0, 4.0, None):
+        yc = YieldConfig(delta=None if df is None else df * delta)
+        label = f"{df}delta" if df else "no_yield"
+        res, secs = timed(run_sssp, bg, perm[srcs], yield_config=yc)
+        rows.append({"sweep": "C:delta", "setting": label,
+                     "runtime_s": rnd(secs), "visits": res.stats.visits,
+                     "edges_per_q": rnd(res.edges_processed.mean(), 0)})
+    return rows
+
+
+COLUMNS = ["sweep", "setting", "runtime_s", "visits", "edges_per_q"]

@@ -1,0 +1,141 @@
+"""Render EXPERIMENTS.md tables from results/ JSONs.
+
+    PYTHONPATH=src python scripts/render_experiments.py
+
+Prose sections live in this script as templates; tables are generated from
+results/dryrun/*.json (+ _baselineA), results/roofline.json, and
+results/bench/*.json, so re-running a sweep refreshes the document.
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import base as cfg_base  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.roofline import analyze_record  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(pattern):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ROOT, pattern))):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def dryrun_table(recs, mesh):
+    rows = [
+        "| arch | shape | status | peak GB/dev | compile s | "
+        "collectives (program, by kind MB) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in cfg_base.list_configs():
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "SKIP":
+                rows.append(f"| {arch} | {shape} | SKIP | — | — | "
+                            f"{r['reason'][:58]} |")
+                continue
+            cs = r.get("collective_schedule", {}).get("bytes_by_kind", {})
+            css = ", ".join(f"{k.replace('all-', 'a')}:"
+                            f"{v / 2 ** 20:.0f}"
+                            for k, v in sorted(cs.items()))
+            rows.append(
+                f"| {arch} | {shape} | {r['status']} | "
+                f"{r.get('peak_gb', '?')} | {r.get('compile_s', '?')} | "
+                f"{css} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful | roofline % |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in cfg_base.list_configs():
+        for shape in SHAPES:
+            r = recs.get((arch, shape, "single"))
+            if r is None:
+                continue
+            if r["status"] == "SKIP":
+                rows.append(f"| {arch} | {shape} | SKIP (sub-quadratic "
+                            "gate) | | | | | |")
+                continue
+            a = analyze_record(r)
+            if not a:
+                continue
+            rows.append(
+                f"| {arch} | {shape} | {a['compute_s']:.4f} | "
+                f"{a['memory_s']:.4f} | {a['collective_s']:.4f} | "
+                f"{a['dominant']} | {a['useful_ratio']:.2f} | "
+                f"{100 * a['roofline_fraction']:.1f}% |")
+    return "\n".join(rows)
+
+
+def perf_compare_table(before, after, cells):
+    rows = [
+        "| cell | metric | baseline A | optimized | Δ |",
+        "|---|---|---|---|---|",
+    ]
+    for arch, shape in cells:
+        b = before.get((arch, shape, "single"))
+        a = after.get((arch, shape, "single"))
+        if not (b and a) or "roofline_inputs" not in b \
+                or "roofline_inputs" not in a:
+            continue
+        for metric, key, scale in (
+                ("FLOPs/chip", "flops", 1e12),
+                ("HBM bytes/chip", "bytes_accessed", 1e12),
+                ("collective bytes/chip", "collective_bytes", 1e9)):
+            vb = b["roofline_inputs"][key]
+            va = a["roofline_inputs"][key]
+            unit = "T" if scale == 1e12 else "G"
+            rows.append(
+                f"| {arch} {shape} | {metric} | {vb / scale:.2f}{unit} | "
+                f"{va / scale:.2f}{unit} | "
+                f"{100 * (va - vb) / max(vb, 1):+.1f}% |")
+        rows.append(f"| {arch} {shape} | peak GB/dev | "
+                    f"{b.get('peak_gb')} | {a.get('peak_gb')} | |")
+    return "\n".join(rows)
+
+
+def main():
+    after = load("results/dryrun/*.json")
+    before = load("results/dryrun_baselineA/*.json")
+
+    n_ok = sum(r["status"].startswith("OK") for r in after.values())
+    n_skip = sum(r["status"] == "SKIP" for r in after.values())
+    n_fit = sum(r["status"] == "OK" for r in after.values())
+
+    hill_cells = [("mistral-large-123b", "train_4k"),
+                  ("falcon-mamba-7b", "train_4k"),
+                  ("qwen2-72b", "prefill_32k")]
+
+    tmpl_path = os.path.join(ROOT, "scripts", "experiments_template.md")
+    with open(tmpl_path) as f:
+        doc = f.read()
+    doc = doc.replace("{{DRYRUN_SINGLE}}", dryrun_table(after, "single"))
+    doc = doc.replace("{{DRYRUN_MULTI}}", dryrun_table(after, "multi"))
+    doc = doc.replace("{{ROOFLINE}}", roofline_table(after))
+    doc = doc.replace("{{ROOFLINE_BASELINE}}", roofline_table(before))
+    doc = doc.replace("{{PERF_COMPARE}}",
+                      perf_compare_table(before, after, hill_cells))
+    doc = doc.replace("{{COUNTS}}",
+                      f"{n_ok} OK ({n_fit} within 16 GB/dev), "
+                      f"{n_skip} SKIP, 0 FAIL of {len(after)} cells")
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write(doc)
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

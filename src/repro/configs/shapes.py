@@ -1,0 +1,54 @@
+"""Assigned input-shape set (LM-family: seq_len x global_batch).
+
+decode_* / long_* lower ``serve_step`` (one new token against a seq_len KV
+cache), not ``train_step``.  long_500k requires sub-quadratic attention —
+it runs only for archs with ``subquadratic=True`` (falcon-mamba,
+recurrentgemma); full-attention archs record a SKIP (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def list_shapes():
+    return list(SHAPES)
+
+
+def applicable(cfg: ArchConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic context handling."""
+    if shape == "long_500k":
+        return bool(cfg.subquadratic)
+    return True
+
+
+def skip_reason(cfg: ArchConfig, shape: str) -> str:
+    if not applicable(cfg, shape):
+        return (f"{cfg.name} is a full-attention arch; long_500k targets "
+                "the sub-quadratic regime (SSM/hybrid). Recorded per "
+                "DESIGN.md §5.")
+    return ""
+
+
+def reduced_shape(shape: ShapeConfig) -> ShapeConfig:
+    """CPU smoke-test variant."""
+    return ShapeConfig(shape.name, shape.kind,
+                       seq_len=min(shape.seq_len, 32),
+                       global_batch=min(shape.global_batch, 2))

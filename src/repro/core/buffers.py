@@ -1,0 +1,66 @@
+"""Dense per-partition operation buffers + consolidation semantics.
+
+The paper buffers ops ``<q, v, val>`` in dynamic per-partition vectors and
+consolidates them per query (one thread per query => atomic-free; duplicates
+merged; priority order inside each query's ops).  The TPU-dense adaptation
+stores, for every partition, the single best pending value per (query, vertex):
+
+    buf[P + 1, Q, B]   min-combine (SSSP/BFS)  identity +inf
+                       sum-combine (PPR)       identity 0
+
+Consolidation is therefore *free by construction*: a min/sum write merges
+duplicate ops, and no two writers ever race because writes are whole-tensor
+functional updates.  Row ``P`` is a trash row used to drop emissions through
+padded neighbor slots (see engine.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+MIN_IDENTITY = jnp.inf
+SUM_IDENTITY = 0.0
+
+
+class MinBuffers(NamedTuple):
+    buf: jax.Array  # [P+1, Q, B] float32, +inf empty
+
+    @staticmethod
+    def init(num_parts: int, num_queries: int, block_size: int) -> "MinBuffers":
+        return MinBuffers(jnp.full((num_parts + 1, num_queries, block_size),
+                                   MIN_IDENTITY, dtype=jnp.float32))
+
+    def push(self, part_idx: jax.Array, cand: jax.Array) -> "MinBuffers":
+        """Consolidating write: keep the best op per (q, v). part_idx may be a
+        vector of destinations (padded with P = trash row)."""
+        return MinBuffers(self.buf.at[part_idx].min(cand))
+
+    def take(self, p: jax.Array) -> jax.Array:
+        return self.buf[p]
+
+    def clear(self, p: jax.Array, keep: jax.Array | None = None,
+              keep_vals: jax.Array | None = None) -> "MinBuffers":
+        row = (jnp.where(keep, keep_vals, MIN_IDENTITY)
+               if keep is not None else
+               jnp.full_like(self.buf[p], MIN_IDENTITY))
+        return MinBuffers(self.buf.at[p].set(row))
+
+
+class SumBuffers(NamedTuple):
+    buf: jax.Array  # [P+1, Q, B] float32, 0 empty
+
+    @staticmethod
+    def init(num_parts: int, num_queries: int, block_size: int) -> "SumBuffers":
+        return SumBuffers(jnp.zeros((num_parts + 1, num_queries, block_size),
+                                    dtype=jnp.float32))
+
+    def push(self, part_idx: jax.Array, contrib: jax.Array) -> "SumBuffers":
+        return SumBuffers(self.buf.at[part_idx].add(contrib))
+
+    def take(self, p: jax.Array) -> jax.Array:
+        return self.buf[p]
+
+    def clear(self, p: jax.Array) -> "SumBuffers":
+        return SumBuffers(self.buf.at[p].set(jnp.zeros_like(self.buf[p])))

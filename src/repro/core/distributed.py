@@ -1,0 +1,327 @@
+"""Distributed FPP runtime — the buffered execution model at pod scale.
+
+Hierarchy (DESIGN.md §2): the paper's LLC<-DRAM boundary appears twice on a
+TPU pod — VMEM<-HBM inside a chip (handled by the Pallas kernels / BlockSpecs)
+and HBM<-"the pod" across chips.  This module applies the SAME buffered
+execution model at the second level:
+
+  * graph partitions are sharded over the ``model`` mesh axis — each device's
+    HBM permanently holds its partitions (the "cache-resident" set),
+  * queries are sharded over the ``data`` (and ``pod``) axes — FPP queries are
+    independent, so query shards never communicate (inter-query parallelism
+    with zero synchronization, the paper's t=1 advantage without its cache
+    penalty),
+  * one superstep = every device visits its locally best-priority partition
+    (a BSP relaxation of the paper's global priority order; Lemma A.2's
+    yielding bound still applies per visit) and boundary operations are
+    exchanged in batches with a single ``all_to_all`` — Algorithm 2 line 16
+    *is* the collective.
+
+The superstep loop is a single ``lax.while_loop`` inside ``shard_map`` so the
+whole FPP run lowers to one XLA program — this is what the multi-pod dry-run
+compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.graph import BlockGraph
+from repro.core.yielding import YieldConfig
+from repro.kernels.minplus import ops as minplus_ops
+
+INF = jnp.inf
+
+
+@dataclasses.dataclass
+class ShardedGraph:
+    """BlockGraph re-laid-out for P-way partition sharding.
+
+    Every per-device slab owns ``pl = P/ndev`` consecutive partitions and the
+    dense blocks whose *source* partition it owns (it needs them to relax and
+    emit); destinations may be remote.
+    """
+    blocks: np.ndarray     # [ndev, pl, 1+dmax, B, B]; slot 0 = diagonal
+    dst_part: np.ndarray   # [ndev, pl, 1+dmax] global dst partition (-1 pad)
+    row_nnz: np.ndarray    # [ndev, pl, 1+dmax, B]
+    deg: np.ndarray        # [ndev, pl, B]
+    edge_budget: np.ndarray  # [ndev, pl]
+    ndev: int
+    pl: int
+    dmax: int
+    block_size: int
+    num_parts: int
+
+    @staticmethod
+    def build(bg: BlockGraph, ndev: int, yc: YieldConfig,
+              num_queries: int) -> "ShardedGraph":
+        B = bg.block_size
+        P_ = bg.num_parts
+        pl = -(-P_ // ndev)
+        p_pad = pl * ndev
+        dmax = bg.nbr_blk.shape[1]
+        blocks = np.full((ndev, pl, 1 + dmax, B, B), np.inf, dtype=np.float32)
+        dst_part = np.full((ndev, pl, 1 + dmax), -1, dtype=np.int32)
+        row_nnz = np.zeros((ndev, pl, 1 + dmax, B), dtype=np.int32)
+        deg = np.zeros((ndev, pl, B), dtype=np.int32)
+        part_edges = np.zeros(p_pad, dtype=np.int64)
+        np.add.at(part_edges, bg.blk_src, bg.row_nnz.sum(axis=1))
+        for p in range(P_):
+            d, l = divmod(p, pl)
+            kd = bg.diag_blk[p]
+            blocks[d, l, 0] = bg.blocks[kd]
+            dst_part[d, l, 0] = p
+            row_nnz[d, l, 0] = bg.row_nnz[kd]
+            deg[d, l] = bg.deg[p]
+            for s in range(dmax):
+                k = bg.nbr_blk[p, s]
+                if k >= 0:
+                    blocks[d, l, 1 + s] = bg.blocks[k]
+                    dst_part[d, l, 1 + s] = bg.nbr_part[p, s]
+                    row_nnz[d, l, 1 + s] = bg.row_nnz[k]
+        budget = yc.edge_budget(part_edges, num_queries).reshape(ndev, pl)
+        return ShardedGraph(blocks, dst_part, row_nnz, deg, budget,
+                            ndev, pl, dmax, B, P_)
+
+
+@dataclasses.dataclass
+class DistributedResult:
+    values: np.ndarray          # [Q, n]
+    supersteps: int
+    edges_processed: np.ndarray
+
+
+def _superstep_minplus(sg_blocks, sg_dst, sg_nnz, sg_budget, dist, buf, edges,
+                       *, window, max_rounds, pl, dmax, B, ndev, model_axis):
+    """One superstep on one device's shard. dist/buf: [pl, Qs, B]."""
+    # --- local priority-based selection (paper §5.2, per-device) ---
+    pending_all = jnp.isfinite(buf) & (buf <= dist)
+    prio = jnp.min(jnp.where(pending_all, buf, INF), axis=(1, 2))    # [pl]
+    p = jnp.argmin(prio)
+    has_work = jnp.isfinite(prio[p])
+
+    w_all = sg_blocks[p]                 # [1+dmax, B, B]
+    nnz_all = sg_nnz[p]                  # [1+dmax, B]
+    w_pp, nnz_pp = w_all[0], nnz_all[0]
+    d0, bufrow = dist[p], buf[p]
+    pending0 = jnp.isfinite(bufrow) & (bufrow <= d0)
+    pending0 = pending0 & has_work       # no-op visit when empty
+    d1 = jnp.minimum(d0, jnp.where(pending0, bufrow, INF))
+    alpha = jnp.min(jnp.where(pending0, d1, INF), axis=1, keepdims=True)
+    budget = sg_budget[p]
+
+    def cond(c):
+        d, pending, emit, eq, rounds = c
+        active = pending & (d <= alpha + window) & (eq < budget)[:, None]
+        return jnp.logical_and(rounds < max_rounds, jnp.any(active))
+
+    def body(c):
+        d, pending, emit, eq, rounds = c
+        active = pending & (d <= alpha + window) & (eq < budget)[:, None]
+        srcs = jnp.where(active, d, INF)
+        nd = minplus_ops.minplus(srcs, w_pp)
+        eq = eq + jnp.sum(jnp.where(active, nnz_pp[None, :], 0), axis=1)
+        emit = emit | active
+        pending = pending & ~active
+        improved = nd < d
+        d = jnp.minimum(d, nd)
+        pending = pending | improved
+        return d, pending, emit, eq, rounds + 1
+
+    Qs = d1.shape[0]
+    eq0 = jnp.zeros(Qs, dtype=jnp.float32)
+    d, pending, emit, eq, _ = jax.lax.while_loop(
+        cond, body, (d1, pending0, jnp.zeros_like(pending0), eq0,
+                     jnp.int32(0)))
+
+    # --- emissions: one [B,B] relax per (padded) out-slot ---
+    srcs = jnp.where(emit, d, INF)
+    cands = jax.vmap(lambda w: minplus_ops.minplus(srcs, w))(
+        w_all[1:])                                        # [dmax, Qs, B]
+    dsts = sg_dst[p, 1:]                                  # [dmax]
+    eq = eq + jnp.sum(
+        jnp.where(emit[None], nnz_all[1:][:, None, :], 0),
+        axis=(0, 2)).astype(jnp.float32)
+
+    # route to owner devices over the model axis: payload [ndev, dmax, Qs, B]
+    owner = jnp.where(dsts >= 0, dsts // pl, -1)
+    payload = jnp.full((ndev, dmax, Qs, B), INF, dtype=d.dtype)
+    slot_dst = jnp.full((ndev, dmax), -1, dtype=jnp.int32)
+
+    def route(s, c):
+        payload, slot_dst = c
+        o = owner[s]
+        valid = o >= 0
+        oo = jnp.where(valid, o, 0)
+        payload = payload.at[oo, s].set(
+            jnp.where(valid, cands[s], payload[oo, s]))
+        slot_dst = slot_dst.at[oo, s].set(
+            jnp.where(valid, dsts[s] % pl, slot_dst[oo, s]))
+        return payload, slot_dst
+
+    payload, slot_dst = jax.lax.fori_loop(0, dmax, route,
+                                          (payload, slot_dst))
+    recv = jax.lax.all_to_all(payload, model_axis, 0, 0, tiled=False)
+    recv_dst = jax.lax.all_to_all(slot_dst, model_axis, 0, 0, tiled=False)
+    # recv: [ndev, dmax, Qs, B] — contributions from every device
+
+    # keep yielded ops in own buffer, then apply received contributions
+    keep_vals = jnp.where(pending, d, INF)
+    buf = buf.at[p].set(keep_vals)
+    dist = dist.at[p].set(d)
+    flat_recv = recv.reshape(ndev * dmax, Qs, B)
+    flat_dst = recv_dst.reshape(ndev * dmax)
+
+    def apply_one(i, buf):
+        l = flat_dst[i]
+        valid = l >= 0
+        ll = jnp.where(valid, l, 0)
+        new = jnp.minimum(buf[ll], jnp.where(valid, flat_recv[i], INF))
+        return buf.at[ll].set(jnp.where(valid, new, buf[ll]))
+
+    buf = jax.lax.fori_loop(0, ndev * dmax, apply_one, buf)
+    edges = edges + (eq - eq0)
+    return dist, buf, edges
+
+
+def run_distributed_sssp(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
+                         yield_config: Optional[YieldConfig] = None,
+                         max_supersteps: int = 100_000,
+                         query_axes=("data",), part_axis: str = "model"):
+    """Batched SSSP on a (…, data, model) mesh. Returns DistributedResult.
+
+    sources: [Q] in the reordered id space; Q must divide the query-axes size.
+    """
+    yc = yield_config or YieldConfig()
+    ndev = int(np.prod([mesh.shape[a] for a in (part_axis,)]))
+    nq_dev = int(np.prod([mesh.shape[a] for a in query_axes]))
+    Q = len(sources)
+    assert Q % nq_dev == 0, (Q, nq_dev)
+    sg = ShardedGraph.build(bg, ndev, yc, Q)
+    B, pl, dmax = sg.block_size, sg.pl, sg.dmax
+    window = yc.window()
+    max_rounds = yc.max_rounds or B
+
+    # global initial state [P_pad, Q, B]
+    p_pad = sg.ndev * pl
+    dist0 = np.full((p_pad, Q, B), np.inf, dtype=np.float32)
+    buf0 = np.full((p_pad, Q, B), np.inf, dtype=np.float32)
+    parts = np.asarray(sources) // B
+    locs = np.asarray(sources) % B
+    buf0[parts, np.arange(Q), locs] = 0.0
+    edges0 = np.zeros((Q,), dtype=np.float32)
+
+    qspec = P(*((None,) + query_axes + (None,)))     # [P_pad, Q, B]
+    model_first = P(part_axis)
+
+    def stepper(blocks, dstp, nnz, budget, dist, buf, edges):
+        def cond(c):
+            dist, buf, edges, done, steps = c
+            return jnp.logical_and(~done, steps < max_supersteps)
+
+        def body(c):
+            dist, buf, edges, done, steps = c
+            dist, buf, edges = _superstep_minplus(
+                blocks, dstp, nnz, budget, dist, buf, edges,
+                window=window, max_rounds=max_rounds, pl=pl, dmax=dmax,
+                B=B, ndev=ndev, model_axis=part_axis)
+            local_pending = jnp.any(jnp.isfinite(buf) & (buf <= dist))
+            any_pending = local_pending
+            for ax in (part_axis,) + tuple(query_axes):
+                any_pending = jax.lax.pmax(any_pending.astype(jnp.int32),
+                                           ax).astype(bool)
+            return dist, buf, edges, ~any_pending, steps + 1
+
+        dist, buf, edges, _, steps = jax.lax.while_loop(
+            cond, body, (dist, buf, edges, jnp.bool_(False), jnp.int32(0)))
+        return dist, buf, edges, steps
+
+    graph_specs = (P(part_axis), P(part_axis), P(part_axis), P(part_axis))
+    fn = jax.jit(jax.shard_map(
+        stepper, mesh=mesh,
+        in_specs=graph_specs + (
+            P(*((part_axis,) + query_axes + (None,))),   # dist
+            P(*((part_axis,) + query_axes + (None,))),   # buf
+            P(*query_axes),                               # edges
+        ),
+        out_specs=(
+            P(*((part_axis,) + query_axes + (None,))),
+            P(*((part_axis,) + query_axes + (None,))),
+            P(*query_axes),
+            P(),
+        ),
+        check_vma=False,
+    ))
+    dist, buf, edges, steps = fn(
+        sg.blocks.reshape(p_pad, 1 + dmax, B, B),
+        sg.dst_part.reshape(p_pad, 1 + dmax),
+        sg.row_nnz.reshape(p_pad, 1 + dmax, B),
+        sg.edge_budget.reshape(p_pad),
+        dist0, buf0, edges0)
+    n = bg.n
+    vals = np.asarray(dist)[:bg.num_parts].transpose(1, 0, 2).reshape(
+        Q, -1)[:, :n]
+    return DistributedResult(vals, int(np.asarray(steps).max()),
+                             np.asarray(edges))
+
+
+def lower_distributed_sssp(bg: BlockGraph, num_queries: int, mesh: Mesh,
+                           yield_config: Optional[YieldConfig] = None,
+                           query_axes=("data",), part_axis: str = "model",
+                           max_supersteps: int = 1000):
+    """AOT lowering entry used by the multi-pod dry-run (no real data)."""
+    yc = yield_config or YieldConfig()
+    ndev = mesh.shape[part_axis]
+    sgB = bg.block_size
+    pl = -(-bg.num_parts // ndev)
+    p_pad = pl * ndev
+    dmax = bg.nbr_blk.shape[1]
+    Q = num_queries
+
+    def run(blocks, dstp, nnz, budget, dist, buf, edges):
+        def cond(c):
+            dist, buf, edges, done, steps = c
+            return jnp.logical_and(~done, steps < max_supersteps)
+
+        def body(c):
+            dist, buf, edges, done, steps = c
+            dist, buf, edges = _superstep_minplus(
+                blocks, dstp, nnz, budget, dist, buf, edges,
+                window=yc.window(), max_rounds=yc.max_rounds or sgB,
+                pl=pl, dmax=dmax, B=sgB, ndev=ndev, model_axis=part_axis)
+            local_pending = jnp.any(jnp.isfinite(buf) & (buf <= dist))
+            any_pending = local_pending
+            for ax in (part_axis,) + tuple(query_axes):
+                any_pending = jax.lax.pmax(any_pending.astype(jnp.int32),
+                                           ax).astype(bool)
+            return dist, buf, edges, ~any_pending, steps + 1
+
+        dist, buf, edges, _, steps = jax.lax.while_loop(
+            cond, body, (dist, buf, edges, jnp.bool_(False), jnp.int32(0)))
+        return dist, buf, edges, steps
+
+    graph_specs = (P(part_axis), P(part_axis), P(part_axis), P(part_axis))
+    state_spec = P(*((part_axis,) + query_axes + (None,)))
+    fn = jax.jit(jax.shard_map(
+        run, mesh=mesh,
+        in_specs=graph_specs + (state_spec, state_spec, P(*query_axes)),
+        out_specs=(state_spec, state_spec, P(*query_axes), P()),
+        check_vma=False,
+    ))
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((p_pad, 1 + dmax, sgB, sgB), f32),
+        jax.ShapeDtypeStruct((p_pad, 1 + dmax), jnp.int32),
+        jax.ShapeDtypeStruct((p_pad, 1 + dmax, sgB), jnp.int32),
+        jax.ShapeDtypeStruct((p_pad,), f32),
+        jax.ShapeDtypeStruct((p_pad, Q, sgB), f32),
+        jax.ShapeDtypeStruct((p_pad, Q, sgB), f32),
+        jax.ShapeDtypeStruct((Q,), f32),
+    )
+    return fn.lower(*args)

@@ -1,0 +1,130 @@
+"""Golden sequential references — the paper's work-efficiency yardsticks.
+
+Dijkstra (binary heap) for SSSP, deque BFS, Andersen-Chung-Lang push for PPR,
+and an explicit-stack DFS (host-only; see DESIGN.md §2 — DFS has no
+data-parallel TPU mapping).  Each oracle also reports ``edges_processed`` so
+benchmarks can compute the paper's work ratios (Fig. 10 / Appendix A).
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+
+def dijkstra(g: CSRGraph, src: int) -> Tuple[np.ndarray, int]:
+    dist = np.full(g.n, np.inf, dtype=np.float64)
+    dist[src] = 0.0
+    done = np.zeros(g.n, dtype=bool)
+    heap = [(0.0, src)]
+    edges = 0
+    while heap:
+        d, u = heapq.heappop(heap)
+        if done[u]:
+            continue
+        done[u] = True
+        for e in range(g.indptr[u], g.indptr[u + 1]):
+            v = int(g.indices[e])
+            edges += 1
+            nd = d + float(g.weights[e])
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(heap, (nd, v))
+    return dist.astype(np.float32), edges
+
+
+def bfs(g: CSRGraph, src: int) -> Tuple[np.ndarray, int]:
+    dist = np.full(g.n, -1, dtype=np.int32)
+    dist[src] = 0
+    dq = deque([src])
+    edges = 0
+    while dq:
+        u = dq.popleft()
+        for e in range(g.indptr[u], g.indptr[u + 1]):
+            v = int(g.indices[e])
+            edges += 1
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                dq.append(v)
+    return dist, edges
+
+
+def bfs_sigma(g: CSRGraph, src: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """BFS distances + shortest-path counts (for Brandes BC)."""
+    dist = np.full(g.n, -1, dtype=np.int32)
+    sigma = np.zeros(g.n, dtype=np.float64)
+    dist[src] = 0
+    sigma[src] = 1.0
+    dq = deque([src])
+    edges = 0
+    while dq:
+        u = dq.popleft()
+        for e in range(g.indptr[u], g.indptr[u + 1]):
+            v = int(g.indices[e])
+            edges += 1
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                dq.append(v)
+            if dist[v] == dist[u] + 1:
+                sigma[v] += sigma[u]
+    return dist, sigma, edges
+
+
+def ppr_push(g: CSRGraph, src: int, alpha: float = 0.15,
+             eps: float = 1e-4) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Sequential ACL push (the paper reuses Shun et al. [54]'s version).
+
+    Invariant maintained: p + alpha-smoothed residual approximates the PPR
+    vector; terminates when all residuals r[u] < eps * deg(u).
+    """
+    deg = np.maximum(g.out_degree(), 1).astype(np.float64)
+    p = np.zeros(g.n, dtype=np.float64)
+    r = np.zeros(g.n, dtype=np.float64)
+    r[src] = 1.0
+    edges = 0
+    queue = deque([src])
+    inq = np.zeros(g.n, dtype=bool)
+    inq[src] = True
+    while queue:
+        u = queue.popleft()
+        inq[u] = False
+        ru = r[u]
+        if ru < eps * deg[u]:
+            continue
+        p[u] += alpha * ru
+        push = (1.0 - alpha) * ru / deg[u]
+        r[u] = 0.0
+        for e in range(g.indptr[u], g.indptr[u + 1]):
+            v = int(g.indices[e])
+            edges += 1
+            r[v] += push
+            if r[v] >= eps * deg[v] and not inq[v]:
+                inq[v] = True
+                queue.append(v)
+    return p.astype(np.float32), r.astype(np.float32), edges
+
+
+def dfs_order(g: CSRGraph, src: int) -> np.ndarray:
+    """Preorder DFS labels (-1 unreachable). Host-only reference."""
+    label = np.full(g.n, -1, dtype=np.int32)
+    stack = [src]
+    nxt = 0
+    while stack:
+        u = stack.pop()
+        if label[u] >= 0:
+            continue
+        label[u] = nxt
+        nxt += 1
+        for e in range(g.indptr[u + 1] - 1, g.indptr[u] - 1, -1):
+            v = int(g.indices[e])
+            if label[v] < 0:
+                stack.append(v)
+    return label
+
+
+def batch(fn, g: CSRGraph, sources) -> Dict[int, tuple]:
+    return {int(s): fn(g, int(s)) for s in sources}

@@ -1,0 +1,64 @@
+"""Query-type facade: the FPP query types ForkGraph supports (paper §3).
+
+BFS / SSSP ride the minplus engine, PPR rides the push engine, RW has its own
+buffered walker loop, DFS is host-only (oracles.dfs_order; see DESIGN.md §2).
+All functions take sources in the *reordered* vertex id space of ``bg`` (use
+``perm[old_id]`` from partition()).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import EngineResult, FPPEngine
+from repro.core.graph import BlockGraph, CSRGraph
+from repro.core.partition import partition
+from repro.core.randomwalk import WalkResult, run_random_walks
+from repro.core.yielding import YieldConfig, default_delta
+
+
+def run_sssp(bg: BlockGraph, sources: np.ndarray,
+             yield_config: Optional[YieldConfig] = None,
+             schedule: str = "priority", use_pallas: bool = False,
+             **run_kwargs) -> EngineResult:
+    yc = yield_config or YieldConfig(
+        delta=default_delta(float(np.nanmax(np.where(
+            np.isfinite(bg.blocks), bg.blocks, np.nan)))))
+    eng = FPPEngine(bg, mode="minplus", num_queries=len(sources),
+                    yield_config=yc, schedule=schedule, use_pallas=use_pallas)
+    return eng.run(np.asarray(sources), **run_kwargs)
+
+
+def run_bfs(bg_unit: BlockGraph, sources: np.ndarray,
+            yield_config: Optional[YieldConfig] = None,
+            schedule: str = "priority", **run_kwargs) -> EngineResult:
+    """bg_unit must be built from a unit-weight CSR (BFS = SSSP w=1).
+    Returned values are float levels; +inf = unreachable."""
+    yc = yield_config or YieldConfig(delta=1.0)  # Δ=1 == level-synchronous
+    eng = FPPEngine(bg_unit, mode="minplus", num_queries=len(sources),
+                    yield_config=yc, schedule=schedule)
+    return eng.run(np.asarray(sources), **run_kwargs)
+
+
+def run_ppr(bg: BlockGraph, sources: np.ndarray, alpha: float = 0.15,
+            eps: float = 1e-4, yield_config: Optional[YieldConfig] = None,
+            schedule: str = "priority", **run_kwargs) -> EngineResult:
+    yc = yield_config or YieldConfig(mu_factor=100.0)  # paper's NCP setting
+    eng = FPPEngine(bg, mode="push", num_queries=len(sources), alpha=alpha,
+                    eps=eps, yield_config=yc, schedule=schedule)
+    return eng.run(np.asarray(sources), **run_kwargs)
+
+
+def run_rw(bg: BlockGraph, sources: np.ndarray, length: int = 32,
+           seed: int = 0) -> WalkResult:
+    return run_random_walks(bg, np.asarray(sources), length, seed=seed)
+
+
+def prepare(g: CSRGraph, block_size: int, method: str = "bfs",
+            unit_weights: bool = False):
+    """One-stop: (block graph, perm) — unit_weights=True for BFS queries."""
+    if unit_weights:
+        g = CSRGraph(indptr=g.indptr, indices=g.indices,
+                     weights=np.ones_like(g.weights), n=g.n, m=g.m)
+    return partition(g, block_size, method=method)

@@ -1,0 +1,49 @@
+"""Inter-partition scheduling (paper §5.2).
+
+The scheduler selects which partition to make cache/VMEM-resident next:
+
+  priority   partition holding the globally best-priority pending op
+             (shortest tentative distance / highest PPR residual) — the paper's
+             headline policy, several-x faster than the rest (Table 4A)
+  fifo       order buffers first became non-empty (paper's default fallback)
+  random     arbitrary non-empty buffer (Table 4A baseline)
+  max_ops    most pending ops first — cache-reuse-greedy; the paper shows it is
+             counterproductive (more redundant work than random)
+
+Scores are produced on device by the engine; selection is a host-side argmin —
+|P| is small (<< |V|), exactly the paper's STL priority-queue argument.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+POLICIES = ("priority", "fifo", "random", "max_ops")
+
+
+class PartitionScheduler:
+    def __init__(self, policy: str, num_parts: int, seed: int = 0):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown scheduling policy {policy!r}")
+        self.policy = policy
+        self.num_parts = num_parts
+        self._rng = np.random.default_rng(seed)
+
+    def select(self, prio: np.ndarray, stamp: np.ndarray,
+               ops_count: np.ndarray) -> int | None:
+        """prio: [P] lower=more urgent, +inf empty. stamp: [P] visit counter at
+        which the buffer last became non-empty (int64, huge for empty).
+        ops_count: [P] pending op count. Returns partition id or None (done)."""
+        nonempty = np.isfinite(prio)
+        if not nonempty.any():
+            return None
+        if self.policy == "priority":
+            return int(np.argmin(prio))
+        if self.policy == "fifo":
+            masked = np.where(nonempty, stamp, np.iinfo(np.int32).max)
+            return int(np.argmin(masked))
+        if self.policy == "max_ops":
+            masked = np.where(nonempty, ops_count, -1)
+            return int(np.argmax(masked))
+        # random
+        choices = np.flatnonzero(nonempty)
+        return int(self._rng.choice(choices))

@@ -1,0 +1,64 @@
+"""Graph I/O: edge-list / npz round-trips for CSRGraph.
+
+Real deployments feed SNAP/DIMACS-style edge lists; the npz form is the
+fast binary cache (one file, mmap-able).
+"""
+from __future__ import annotations
+
+import gzip
+import os
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+
+def save_npz(path: str, g: CSRGraph):
+    np.savez_compressed(path, indptr=g.indptr, indices=g.indices,
+                        weights=g.weights, n=np.int64(g.n),
+                        m=np.int64(g.m))
+
+
+def load_npz(path: str) -> CSRGraph:
+    z = np.load(path)
+    return CSRGraph(indptr=z["indptr"], indices=z["indices"],
+                    weights=z["weights"], n=int(z["n"]), m=int(z["m"]))
+
+
+def load_edge_list(path: str, *, symmetrize: bool = True,
+                   weighted: bool | None = None,
+                   comment: str = "#") -> CSRGraph:
+    """SNAP-style whitespace edge list: ``src dst [weight]`` per line.
+    Vertex ids are compacted to 0..n-1.  .gz transparently supported."""
+    opener = gzip.open if path.endswith(".gz") else open
+    src, dst, w = [], [], []
+    with opener(path, "rt") as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(comment):
+                continue
+            parts = line.split()
+            src.append(int(parts[0]))
+            dst.append(int(parts[1]))
+            if weighted is None:
+                weighted = len(parts) > 2
+            if weighted:
+                w.append(float(parts[2]) if len(parts) > 2 else 1.0)
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    ids = np.unique(np.concatenate([src, dst]))
+    remap = np.zeros(ids.max() + 1 if ids.size else 1, np.int64)
+    remap[ids] = np.arange(ids.size)
+    weights = (np.asarray(w, np.float32) if weighted
+               else np.ones(src.size, np.float32))
+    return CSRGraph.from_edges(int(ids.size), remap[src], remap[dst],
+                               weights, symmetrize=symmetrize)
+
+
+def save_edge_list(path: str, g: CSRGraph):
+    src, dst, w = g.edges()
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "wt") as f:
+        f.write(f"# |V|={g.n} |E|={g.m}\n")
+        for s, d, ww in zip(src, dst, w):
+            f.write(f"{s} {d} {ww:.6g}\n")

@@ -1,0 +1,100 @@
+"""Pallas TPU flash attention (blocked online softmax).
+
+The LM stack's training/prefill hot path.  XLA-level twin:
+models/attention.attend (the chunked scan); this kernel is the TPU-native
+version with explicit VMEM tiling:
+
+  grid = (batch*kv_heads, Sq/QT)   one program per (bh, q-tile)
+  q tile  [QT, hd]      VMEM (per program)
+  k/v     [Skv, hd]     VMEM (whole-KV per program; one HBM->VMEM load is
+                        amortized over all q-tiles of the head — the same
+                        buffered-reuse argument as the paper's partition
+                        residency, DESIGN.md §2)
+  inner fori_loop over KV chunks of KC with the online-softmax carry.
+
+GQA is handled in ops.py by folding the q-head group into the q-tile dim.
+Causal masking uses absolute positions (q_offset + in-tile iota vs kv
+chunk offset).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_TILE = 128
+DEFAULT_KV_CHUNK = 256
+NEG = -1e9
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_chunk: int,
+                  causal: bool, sq_total: int, window, kv_len: int):
+    qt, hd = q_ref.shape
+    skv = k_ref.shape[0]
+    qi = pl.program_id(1)
+    scale = 1.0 / (hd ** 0.5)
+    q = q_ref[...].astype(jnp.float32) * scale          # [QT, hd]
+    q_pos = qi * qt + jax.lax.broadcasted_iota(jnp.int32, (qt, 1), 0)
+    n_chunks = skv // kv_chunk
+
+    def body(ci, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[...], (ci * kv_chunk, 0),
+                                  (kv_chunk, hd)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[...], (ci * kv_chunk, 0),
+                                  (kv_chunk, hd)).astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        kv_pos = ci * kv_chunk + jax.lax.broadcasted_iota(
+            jnp.int32, (1, kv_chunk), 1)
+        mask = jnp.broadcast_to(kv_pos < kv_len, (qt, kv_chunk))
+        if causal:
+            mask = mask & (kv_pos <= q_pos)
+        if window is not None:
+            mask = mask & (kv_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG)
+        mj = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m, mj)
+        r = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l = l * r + jnp.sum(p, axis=1)
+        acc = acc * r[:, None] + jnp.dot(p, v,
+                                         preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((qt,), NEG, jnp.float32)
+    l0 = jnp.zeros((qt,), jnp.float32)
+    a0 = jnp.zeros((qt, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "q_tile", "kv_chunk", "causal", "window", "interpret", "kv_len"))
+def flash_attention_pallas_call(q, k, v, *, q_tile=DEFAULT_Q_TILE,
+                                kv_chunk=DEFAULT_KV_CHUNK, causal=True,
+                                window=None, interpret=True, kv_len=None):
+    """q: [BH, Sq, hd]; k, v: [BH, Skv, hd] -> [BH, Sq, hd].
+
+    Sq % q_tile == 0 and Skv % kv_chunk == 0 (ops.py pads).
+    """
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    qt = min(q_tile, sq)
+    kc = min(kv_chunk, skv)
+    grid = (bh, sq // qt)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, kv_chunk=kc, causal=causal,
+                          sq_total=sq, window=window,
+                          kv_len=kv_len if kv_len is not None else skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, qt, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, skv, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, skv, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, qt, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

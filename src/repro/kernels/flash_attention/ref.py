@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: [BH, Sq, hd]; k, v: [BH, Skv, hd] -> [BH, Sq, hd]."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = kv_pos <= q_pos
+    if window is not None:
+        mask = mask & (kv_pos > q_pos - window)
+    s = jnp.where(mask[None], s, NEG)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)) \
+        / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    return out.astype(q.dtype)

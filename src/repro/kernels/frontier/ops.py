@@ -1,0 +1,29 @@
+"""Jitted wrapper: pad Q, dispatch kernel/ref by backend."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.frontier.frontier import frontier_pallas_call
+from repro.kernels.frontier.ref import frontier_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def frontier(buf, dist, *, delta: float):
+    return frontier_ref(buf, dist, delta=delta)
+
+
+def frontier_pallas(buf, dist, *, delta: float, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    q, b = buf.shape
+    pad = (-q) % 8
+    if pad:
+        buf = jnp.pad(buf, [(0, pad), (0, 0)], constant_values=jnp.inf)
+        dist = jnp.pad(dist, [(0, pad), (0, 0)], constant_values=jnp.inf)
+    d1, srcs, prio = frontier_pallas_call(buf, dist, delta=delta,
+                                          interpret=interpret)
+    return d1[:q], srcs[:q], prio[:q]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the frontier kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+def frontier_ref(buf, dist, *, delta: float):
+    pending = jnp.isfinite(buf) & (buf <= dist)
+    d1 = jnp.minimum(dist, jnp.where(pending, buf, INF))
+    alpha = jnp.min(jnp.where(pending, d1, INF), axis=1, keepdims=True)
+    active = pending & (d1 <= alpha + delta)
+    srcs = jnp.where(active, d1, INF)
+    return d1, srcs, alpha[:, 0]

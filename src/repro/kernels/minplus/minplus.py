@@ -1,0 +1,96 @@
+"""Pallas TPU kernels for the intra-partition batched relaxation.
+
+Two kernels, both tiled so one partition visit's working set is VMEM-resident
+(the paper's "partition fits into LLC", DESIGN.md §2):
+
+  minplus_kernel       out[q, v] = min_u d[q, u] + w[u, v]   (tropical semiring,
+                       VPU; one SSSP/BFS relaxation sweep for a Q-tile of
+                       queries against a [B, B] adjacency block)
+  masked_matmul_kernel out[q, v] = sum_u x[q, u] * finite(w[u, v])  (MXU; the
+                       PPR residual spread)
+
+Tiling: grid over query tiles; the adjacency block [B, B] is broadcast to all
+programs (one HBM->VMEM load amortized over Q/QT programs — the cache-reuse
+argument of the paper in BlockSpec form).  The contraction dim is chunked with
+a fori_loop so the [QT, UC, B] broadcast temp stays small.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_TILE = 128
+DEFAULT_U_CHUNK = 8
+
+
+def _minplus_kernel(d_ref, w_ref, o_ref, *, u_chunk: int):
+    d = d_ref[...]                      # [QT, B]
+    w = w_ref[...]                      # [B, B]
+    qt, b = d.shape
+    n_chunks = b // u_chunk
+
+    def body(i, acc):
+        du = jax.lax.dynamic_slice(d, (0, i * u_chunk), (qt, u_chunk))
+        wu = jax.lax.dynamic_slice(w, (i * u_chunk, 0), (u_chunk, b))
+        cand = jnp.min(du[:, :, None] + wu[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    acc0 = jnp.full((qt, b), jnp.inf, dtype=d.dtype)
+    o_ref[...] = jax.lax.fori_loop(0, n_chunks, body, acc0)
+
+
+def _masked_matmul_kernel(x_ref, w_ref, o_ref):
+    mask = jnp.isfinite(w_ref[...]).astype(x_ref.dtype)
+    o_ref[...] = jnp.dot(x_ref[...], mask,
+                         preferred_element_type=x_ref.dtype)
+
+
+def _tile(q: int, q_tile: int) -> int:
+    return min(q_tile, q) if q % min(q_tile, q) == 0 else q
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "u_chunk", "interpret"))
+def minplus_pallas_call(d: jax.Array, w: jax.Array,
+                        q_tile: int = DEFAULT_Q_TILE,
+                        u_chunk: int = DEFAULT_U_CHUNK,
+                        interpret: bool = True) -> jax.Array:
+    """d: [Q, B], w: [B, B] -> [Q, B].  Q must divide by the chosen tile
+    (ops.py pads); B must divide by u_chunk (blocks are powers of two)."""
+    q, b = d.shape
+    qt = _tile(q, q_tile)
+    uc = u_chunk if b % u_chunk == 0 else b
+    grid = (q // qt,)
+    return pl.pallas_call(
+        functools.partial(_minplus_kernel, u_chunk=uc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qt, b), lambda i: (i, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((qt, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, b), d.dtype),
+        interpret=interpret,
+    )(d, w)
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "interpret"))
+def masked_matmul_pallas_call(x: jax.Array, w: jax.Array,
+                              q_tile: int = DEFAULT_Q_TILE,
+                              interpret: bool = True) -> jax.Array:
+    q, b = x.shape
+    qt = _tile(q, q_tile)
+    grid = (q // qt,)
+    return pl.pallas_call(
+        _masked_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qt, b), lambda i: (i, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((qt, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, b), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,49 @@
+"""Dispatching wrappers for the intra-partition relaxation primitives.
+
+``minplus`` / ``masked_matmul``  — pure-jnp (XLA) paths, the default on CPU.
+``minplus_pallas`` / ``masked_matmul_pallas`` — Pallas kernels; on TPU they
+compile natively, elsewhere they run in interpret mode (correct but slow, used
+by the kernel test sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.minplus import minplus as _k
+from repro.kernels.minplus.ref import masked_matmul_ref, minplus_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def minplus(d: jax.Array, w: jax.Array) -> jax.Array:
+    return minplus_ref(d, w)
+
+
+def masked_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return masked_matmul_ref(x, w)
+
+
+def _pad_q(x: jax.Array, tile: int):
+    q = x.shape[0]
+    if q % tile == 0 or q < tile:
+        return x, q
+    pad = (-q) % tile
+    return jnp.pad(x, ((0, pad), (0, 0)), constant_values=jnp.inf), q
+
+
+def minplus_pallas(d: jax.Array, w: jax.Array, q_tile: int = 128) -> jax.Array:
+    dp, q = _pad_q(d, q_tile)
+    out = _k.minplus_pallas_call(dp, w, q_tile=q_tile,
+                                 interpret=not _on_tpu())
+    return out[:q]
+
+
+def masked_matmul_pallas(x: jax.Array, w: jax.Array,
+                         q_tile: int = 128) -> jax.Array:
+    xp, q = _pad_q(x, q_tile)
+    out = _k.masked_matmul_pallas_call(xp, w, q_tile=q_tile,
+                                       interpret=not _on_tpu())
+    return out[:q]

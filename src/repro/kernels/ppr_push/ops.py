@@ -1,0 +1,33 @@
+"""Jitted wrapper for the fused PPR push kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ppr_push.push import ppr_push_pallas_call
+from repro.kernels.ppr_push.ref import ppr_push_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ppr_push(p, r, acc, w, deg, *, alpha: float, eps: float):
+    return ppr_push_ref(p, r, acc, w, deg, alpha=alpha, eps=eps)
+
+
+def ppr_push_pallas(p, r, acc, w, deg, *, alpha: float, eps: float,
+                    interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    if deg.ndim == 1:
+        deg = deg[None, :]
+    deg = deg.astype(p.dtype)
+    q = p.shape[0]
+    pad = (-q) % 8
+    if pad:
+        widths = [(0, pad), (0, 0)]
+        p, r, acc = (jnp.pad(x, widths) for x in (p, r, acc))
+    po, ro, ao = ppr_push_pallas_call(p, r, acc, w, deg, alpha=alpha,
+                                      eps=eps, interpret=interpret)
+    return po[:q], ro[:q], ao[:q]

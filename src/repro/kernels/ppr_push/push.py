@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: one fused PPR push round over a VMEM-resident block.
+
+The push-mode engine (engine.make_push_visit) does, per inner round:
+
+    active = (r >= eps*deg) & has_edges
+    p     += alpha * r * active
+    push   = (1-alpha) * r * active / deg
+    r      = r*(1-active) + push @ A_mask
+    acc   += push
+
+Unfused, that is 5 HBM round-trips over [Q, B] tensors; fused here the
+tile is loaded once (DESIGN.md §2 — the VMEM-residency argument).  The
+spread matmul runs on the MXU via the finite-mask of the weight block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_TILE = 128
+
+
+def _push_kernel(p_ref, r_ref, acc_ref, w_ref, deg_ref, o_p, o_r, o_acc,
+                 *, alpha: float, eps: float):
+    p = p_ref[...]                       # [QT, B]
+    r = r_ref[...]
+    acc = acc_ref[...]
+    deg = deg_ref[...]                   # [1, B]
+    degc = jnp.maximum(deg, 1.0)
+    has_edges = deg > 0
+    active = (r >= eps * degc) & has_edges
+    af = active.astype(r.dtype)
+    o_p[...] = p + alpha * r * af
+    push = (1.0 - alpha) * r * af / degc
+    mask = jnp.isfinite(w_ref[...]).astype(r.dtype)
+    spread = jnp.dot(push, mask, preferred_element_type=r.dtype)
+    o_r[...] = r * (1.0 - af) + spread
+    o_acc[...] = acc + push
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "eps", "q_tile",
+                                             "interpret"))
+def ppr_push_pallas_call(p, r, acc, w, deg, *, alpha: float, eps: float,
+                         q_tile: int = DEFAULT_Q_TILE,
+                         interpret: bool = True):
+    """p, r, acc: [Q, B]; w: [B, B] (+inf absent); deg: [1, B] float."""
+    q, b = p.shape
+    qt = min(q_tile, q) if q % min(q_tile, q) == 0 else q
+    grid = (q // qt,)
+    tile = pl.BlockSpec((qt, b), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_push_kernel, alpha=alpha, eps=eps),
+        grid=grid,
+        in_specs=[tile, tile, tile,
+                  pl.BlockSpec((b, b), lambda i: (0, 0)),
+                  pl.BlockSpec((1, b), lambda i: (0, 0))],
+        out_specs=[tile, tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((q, b), p.dtype)] * 3,
+        interpret=interpret,
+    )(p, r, acc, w, deg)

@@ -1,0 +1,117 @@
+"""Post-optimization HLO analysis: collective bytes + schedule.
+
+``collective_stats`` parses ``compiled.as_text()`` and sums *operand* bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, keyed by op kind (cost_analysis does not report
+collective traffic — contract §Roofline).
+
+Caveat handled by the caller (launch/roofline.py): ops inside ``while``
+bodies appear once in the HLO text regardless of trip count, exactly like
+their FLOPs.  The roofline composes per-layer probe programs (no outer
+scan) x layer counts, so collective bytes from probes are trip-count-exact;
+full-program stats are reported as the *schedule* (which collectives, what
+sizes, how many code sites), not multiplied.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[2,512,1024]{2,1,0} all-gather(%param.1), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    ops: List[dict]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def as_dict(self):
+        return {"bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind),
+                "total_bytes": self.total_bytes}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by = collections.Counter()
+    count_by = collections.Counter()
+    ops = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.search(line)
+        kind = None
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            nb = _nbytes(dtype, dims)
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                nb = sum(_nbytes(d, s)
+                         for d, s in _SHAPE_RE.findall(mt.group(1)))
+        if kind is None:
+            continue
+        # async pairs: count -start once, skip matching -done
+        if "-done(" in line or f"{kind}-done" in line.split(" = ")[0]:
+            continue
+        bytes_by[kind] += nb
+        count_by[kind] += 1
+        ops.append({"kind": kind, "bytes": nb})
+    return CollectiveStats(dict(bytes_by), dict(count_by), ops)
+
+
+def cost_summary(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    m = compiled.memory_analysis()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "argument_bytes": int(m.argument_size_in_bytes),
+        "output_bytes": int(m.output_size_in_bytes),
+        "temp_bytes": int(m.temp_size_in_bytes),
+        "alias_bytes": int(m.alias_size_in_bytes),
+        "peak_bytes_est": int(m.argument_size_in_bytes
+                              + m.temp_size_in_bytes
+                              + m.output_size_in_bytes
+                              - m.alias_size_in_bytes),
+    }

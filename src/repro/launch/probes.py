@@ -1,0 +1,522 @@
+"""Per-component cost probes for the roofline composition.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in
+EXPERIMENTS.md §Methodology), so a scanned-over-layers program under-counts
+FLOPs/bytes/collectives by ~n_layers.  The roofline therefore composes:
+
+    total = sum_units  count(unit) x cost(probe(unit)) x microbatches
+          + cost(embed/loss probe) x microbatches
+          + analytic optimizer term
+
+where each *probe* is a standalone jitted program for one scan unit (a
+layer, a hybrid group, an encoder layer, ...) with the real shardings, so
+its HLO has no outer while loop: its cost_analysis and collective bytes are
+trip-count-exact and *per device* (SPMD cost_analysis reports the
+per-partition module; calibrated in EXPERIMENTS.md).
+
+Train probes differentiate through jax.checkpoint(layer) — remat recompute
+is included, exactly as the real train step pays it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import contextlib
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import attention as attn_lib
+from repro.models import encdec as encdec_lib
+from repro.models import layers as L
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.factory import Model, cross_entropy
+from repro.models.sharding import AxisRules
+
+
+@dataclasses.dataclass
+class Probe:
+    name: str
+    count: float                  # how many times this unit runs per step
+    fn: Callable
+    arg_specs: tuple
+    in_shardings: tuple
+
+
+@contextlib.contextmanager
+def probe_tracing():
+    """Unroll the attention chunk scan while tracing probe programs, so
+    cost_analysis (which counts while bodies once) is trip-count-exact."""
+    old = attn_lib.CHUNK_OVERRIDE
+    attn_lib.CHUNK_OVERRIDE = 1 << 30
+    try:
+        yield
+    finally:
+        attn_lib.CHUNK_OVERRIDE = old
+
+
+def _layer_specs(cfg: ArchConfig, kind: str, rules: AxisRules):
+    box = {}
+
+    def f(k):
+        p, a = tfm.init_layer(k, cfg, kind)
+        box["axes"] = a
+        return p
+    specs = jax.eval_shape(f, jax.random.PRNGKey(0))
+    shard = jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s),
+        rules.tree_specs(box["axes"], specs),
+        is_leaf=lambda x: isinstance(x, P))
+    return specs, shard
+
+
+def _group_specs(cfg: ArchConfig, rules: AxisRules):
+    specs, shards = {}, {}
+    for nm, kind in (("rec1", "rec"), ("rec2", "rec"), ("attn", "attn")):
+        specs[nm], shards[nm] = _layer_specs(cfg, kind, rules)
+    return specs, shards
+
+
+def _x_spec(cfg, B, S, rules, logical=("batch", "act_seq", None)):
+    spec = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.cdtype)
+    sh = NamedSharding(rules.mesh, rules.spec(logical, spec.shape))
+    return spec, sh
+
+
+def _ns(rules, logical, shape):
+    return NamedSharding(rules.mesh, rules.spec(logical, shape))
+
+
+# ---------------------------------------------------------------------------
+# train probes
+
+
+def train_probes(cfg: ArchConfig, shape: ShapeConfig,
+                 rules: AxisRules) -> List[Probe]:
+    mb = max(1, cfg.microbatches)
+    B = max(1, shape.global_batch // mb)
+    S = shape.seq_len
+    if cfg.family == "vlm":
+        S = shape.seq_len  # prefix + text = assigned seq_len total
+    positions = jnp.arange(S)
+    probes = []
+
+    def layer_probe(kind, name, count):
+        lspecs, lshard = _layer_specs(cfg, kind, rules)
+        xspec, xshard = _x_spec(cfg, B, S, rules)
+
+        # ct is a runtime cotangent: grad of sum(y) would hand XLA a
+        # constant cotangent of ones and let it simplify away real
+        # backward matmuls (verified: ~30% FLOP undercount).
+        def f(lp, x, ct):
+            def inner(lp, x):
+                y, aux, _, _ = tfm._apply_layer_full(
+                    lp, cfg, kind, x, positions, rules)
+                return jnp.sum(y.astype(jnp.float32) * ct) + aux
+            return jax.grad(inner, argnums=(0, 1))(lp, x)
+        ctspec = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+        return Probe(name, count * mb, f, (lspecs, xspec, ctspec),
+                     (lshard, xshard, xshard))
+
+    def layer_fwd_probe(kind, name, count):
+        # remat recompute = exactly one extra forward per layer
+        # (grad(checkpoint(f)) at probe top level is a documented no-op,
+        # so the recompute must be accounted as its own unit).
+        lspecs, lshard = _layer_specs(cfg, kind, rules)
+        xspec, xshard = _x_spec(cfg, B, S, rules)
+
+        def f(lp, x):
+            y, _, _, _ = tfm._apply_layer_full(lp, cfg, kind, x,
+                                               positions, rules)
+            return y
+        return Probe(name, count * mb, f, (lspecs, xspec),
+                     (lshard, xshard))
+
+    if cfg.family == "hybrid":
+        gspecs, gshard = _group_specs(cfg, rules)
+        xspec, xshard = _x_spec(cfg, B, S, rules)
+
+        def apply_group(gp, x):
+            y, a1, _, _ = tfm._apply_layer_full(
+                gp["rec1"], cfg, "rec", x, positions, rules)
+            y, a2, _, _ = tfm._apply_layer_full(
+                gp["rec2"], cfg, "rec", y, positions, rules)
+            y, a3, _, _ = tfm._apply_layer_full(
+                gp["attn"], cfg, "attn", y, positions, rules)
+            return y, a1 + a2 + a3
+
+        def fg(gp, x, ct):
+            def inner(gp, x):
+                y, aux = apply_group(gp, x)
+                return jnp.sum(y.astype(jnp.float32) * ct) + aux
+            return jax.grad(inner, argnums=(0, 1))(gp, x)
+        ctspec = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+        ng = cfg.n_layers // 3
+        probes.append(Probe("group", ng * mb, fg, (gspecs, xspec, ctspec),
+                            (gshard, xshard, xshard)))
+        probes.append(Probe("group_remat_fwd", ng * mb,
+                            lambda gp, x: apply_group(gp, x)[0],
+                            (gspecs, xspec), (gshard, xshard)))
+        if cfg.n_layers % 3:
+            probes.append(layer_probe("rec", "tail_rec", cfg.n_layers % 3))
+            probes.append(layer_fwd_probe("rec", "tail_rec_remat_fwd",
+                                          cfg.n_layers % 3))
+    elif cfg.family == "encdec":
+        probes.extend(_encdec_train_probes(cfg, shape, rules, B, mb))
+    else:
+        kind = tfm.layer_plan(cfg)[0]
+        probes.append(layer_probe(kind, f"layer_{kind}", cfg.n_layers))
+        probes.append(layer_fwd_probe(kind, f"layer_{kind}_remat_fwd",
+                                      cfg.n_layers))
+
+    if cfg.family != "encdec":
+        probes.append(_embed_loss_probe(cfg, shape, rules, B, S, mb))
+    return probes
+
+
+def _embed_loss_probe(cfg, shape, rules, B, S, mb) -> Probe:
+    box = {}
+
+    def finit(k):
+        p, a = {}, {}
+        p["embed"], a["embed"] = L.init_embedding(
+            k, L.pad_vocab(cfg.vocab), cfg.d_model, cfg.pdtype,
+            cfg.tie_embeddings)
+        p["final_norm"], a["final_norm"] = L.init_norm(
+            cfg.pdtype, cfg.d_model, cfg.norm)
+        box["axes"] = a
+        return p
+    specs = jax.eval_shape(finit, jax.random.PRNGKey(0))
+    shard = jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                         rules.tree_specs(box["axes"], specs),
+                         is_leaf=lambda x: isinstance(x, P))
+    S_lab = S - (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+    tok = jax.ShapeDtypeStruct((B, S_lab), jnp.int32)
+    lab = jax.ShapeDtypeStruct((B, S_lab), jnp.int32)
+    msk = jax.ShapeDtypeStruct((B, S_lab), jnp.float32)
+    bsh = _ns(rules, ("batch", None), tok.shape)
+
+    def f(p, tokens, labels, mask):
+        def inner(p):
+            x = L.embed(p["embed"], tokens, cfg.cdtype, rules)
+            h = L.apply_norm(p["final_norm"], x, cfg.norm)
+            logits = L.unembed(p["embed"], h.astype(jnp.float32),
+                               cfg.vocab)
+            return cross_entropy(logits, labels, mask)
+        return jax.grad(inner)(p)
+    return Probe("embed_loss", mb, f, (specs, tok, lab, msk),
+                 (shard, bsh, bsh, bsh))
+
+
+def _encdec_train_probes(cfg, shape, rules, B, mb) -> List[Probe]:
+    S = shape.seq_len
+    F = encdec_lib.N_FRAMES_PAD
+    probes = []
+    # encoder layer
+    especs, eshard = _enc_layer_specs(cfg, rules, decoder=False)
+    xspec, xshard = _x_spec(cfg, B, F, rules)
+    pos_f = jnp.arange(F)
+
+    ct_f = jax.ShapeDtypeStruct((B, F, cfg.d_model), jnp.float32)
+
+    def enc_apply(lp, x):
+        y, _ = encdec_lib._self_block(lp, cfg, x, pos_f, rules,
+                                      causal=False)
+        return encdec_lib._mlp_block(lp, cfg, y)
+
+    def fe(lp, x, ct):
+        def inner(lp, x):
+            return jnp.sum(enc_apply(lp, x).astype(jnp.float32) * ct)
+        return jax.grad(inner, argnums=(0, 1))(lp, x)
+    n_enc = (cfg.n_enc_layers or cfg.n_layers) * mb
+    probes.append(Probe("enc_layer", n_enc, fe, (especs, xspec, ct_f),
+                        (eshard, xshard, xshard)))
+    probes.append(Probe("enc_layer_remat_fwd", n_enc, enc_apply,
+                        (especs, xspec), (eshard, xshard)))
+    # decoder layer (self + cross + mlp)
+    dspecs, dshard = _enc_layer_specs(cfg, rules, decoder=True)
+    xs, xsh = _x_spec(cfg, B, S, rules)
+    ms, msh = _x_spec(cfg, B, F, rules, ("batch", None, None))
+    pos_s = jnp.arange(S)
+
+    ct_s = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+
+    def dec_apply(lp, x, mem):
+        y, _ = encdec_lib._self_block(lp, cfg, x, pos_s, rules,
+                                      causal=True)
+        y, _ = encdec_lib._cross_block(lp, cfg, y, mem, rules)
+        return encdec_lib._mlp_block(lp, cfg, y)
+
+    def fd(lp, x, mem, ct):
+        def inner(lp, x, mem):
+            return jnp.sum(dec_apply(lp, x, mem).astype(jnp.float32) * ct)
+        return jax.grad(inner, argnums=(0, 1, 2))(lp, x, mem)
+    probes.append(Probe("dec_layer", cfg.n_layers * mb, fd,
+                        (dspecs, xs, ms, ct_s), (dshard, xsh, msh, xsh)))
+    probes.append(Probe("dec_layer_remat_fwd", cfg.n_layers * mb,
+                        dec_apply, (dspecs, xs, ms), (dshard, xsh, msh)))
+    probes.append(_embed_loss_probe(cfg, shape, rules, B, S, mb))
+    return probes
+
+
+def _enc_layer_specs(cfg, rules, decoder: bool):
+    box = {}
+
+    def f(k):
+        import jax.random as jr
+        k1, k2, k3 = jr.split(k, 3)
+        lp, la = {}, {}
+        lp["ln1"], la["ln1"] = L.init_norm(cfg.pdtype, cfg.d_model,
+                                           cfg.norm)
+        lp["attn"], la["attn"] = attn_lib.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            cfg.pdtype)
+        lp["ln2"], la["ln2"] = L.init_norm(cfg.pdtype, cfg.d_model,
+                                           cfg.norm)
+        lp["mlp"], la["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff,
+                                          cfg.pdtype, cfg.gated_mlp)
+        if decoder:
+            lp["ln_x"], la["ln_x"] = L.init_norm(cfg.pdtype, cfg.d_model,
+                                                 cfg.norm)
+            lp["xattn"], la["xattn"] = attn_lib.init_attention(
+                k3, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.head_dim_, cfg.pdtype)
+        box["axes"] = la
+        return lp
+    specs = jax.eval_shape(f, jax.random.PRNGKey(0))
+    shard = jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                         rules.tree_specs(box["axes"], specs),
+                         is_leaf=lambda x: isinstance(x, P))
+    return specs, shard
+
+
+# ---------------------------------------------------------------------------
+# serve probes (prefill / decode)
+
+
+def prefill_probes(cfg: ArchConfig, shape: ShapeConfig,
+                   rules: AxisRules) -> List[Probe]:
+    B, S = shape.global_batch, shape.seq_len
+    positions = jnp.arange(S)
+    probes = []
+    if cfg.family == "encdec":
+        # forward-only units of the train probe set (the *_remat_fwd
+        # probes are exactly the fwd passes) + the unembed top
+        fwd_only = [p for p in _encdec_train_probes(cfg, shape, rules, B, 1)
+                    if p.name.endswith("_remat_fwd")]
+        for p in fwd_only:
+            probes.append(Probe(p.name.replace("_remat_fwd", ""), p.count,
+                                p.fn, p.arg_specs, p.in_shardings))
+        probes.append(_embed_top_probe(cfg, rules, B, S, train=False))
+        return probes
+
+    def layer_probe(kind, name, count):
+        lspecs, lshard = _layer_specs(cfg, kind, rules)
+        xspec, xshard = _x_spec(cfg, B, S, rules)
+
+        def f(lp, x):
+            y, aux, kv, st = tfm._apply_layer_full(
+                lp, cfg, kind, x, positions, rules,
+                prefix_len=(cfg.num_image_tokens or None),
+                return_kv=(kind in ("attn", "moe")))
+            return y
+        return Probe(name, count, f, (lspecs, xspec), (lshard, xshard))
+
+    if cfg.family == "hybrid":
+        gspecs, gshard = _group_specs(cfg, rules)
+        xspec, xshard = _x_spec(cfg, B, S, rules)
+
+        def fg(gp, x):
+            y, _, _, _ = tfm._apply_layer_full(gp["rec1"], cfg, "rec", x,
+                                               positions, rules)
+            y, _, _, _ = tfm._apply_layer_full(gp["rec2"], cfg, "rec", y,
+                                               positions, rules)
+            y, _, _, _ = tfm._apply_layer_full(gp["attn"], cfg, "attn", y,
+                                               positions, rules)
+            return y
+        probes.append(Probe("group", cfg.n_layers // 3, fg,
+                            (gspecs, xspec), (gshard, xshard)))
+        if cfg.n_layers % 3:
+            probes.append(layer_probe("rec", "tail_rec", cfg.n_layers % 3))
+    else:
+        kind = tfm.layer_plan(cfg)[0]
+        probes.append(layer_probe(kind, f"layer_{kind}", cfg.n_layers))
+    probes.append(_embed_top_probe(cfg, rules, B, S, train=False))
+    return probes
+
+
+def decode_probes(cfg: ArchConfig, shape: ShapeConfig, rules: AxisRules,
+                  mesh) -> List[Probe]:
+    B, S = shape.global_batch, shape.seq_len
+    probes = []
+    dt = cfg.cdtype
+    xspec = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+    xsh = _ns(rules, ("batch", None, None), xspec.shape)
+    lenspec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    lensh = _ns(rules, ("batch",), lenspec.shape)
+
+    def kv_specs(cache_len, shard_seq=True):
+        ks = jax.ShapeDtypeStruct((B, cache_len, cfg.n_kv_heads,
+                                   cfg.head_dim_), dt)
+        ksh = _ns(rules, ("batch", "seq_kv" if shard_seq else "null",
+                          "null", "null"), ks.shape)
+        return ks, ksh
+
+    if cfg.family == "ssm":
+        lspecs, lshard = _layer_specs(cfg, "ssm", rules)
+        st = ssm_lib.ssm_state_specs(cfg, B, dt)
+        stsh = ssm_lib.SSMState(
+            conv=_ns(rules, ("batch", "null", "inner"), st.conv.shape),
+            h=_ns(rules, ("batch", "inner", "null"), st.h.shape))
+
+        def f(lp, x, st):
+            h = L.apply_norm(lp["ln1"], x, cfg.norm)
+            y, nst = ssm_lib.decode_ssm(lp["ssm"], h, cfg, st)
+            return x + y, nst
+        probes.append(Probe("layer_ssm", cfg.n_layers, f,
+                            (lspecs, xspec, st), (lshard, xsh, stsh)))
+    elif cfg.family == "hybrid":
+        gspecs, gshard = _group_specs(cfg, rules)
+        lru = rglru_lib.lru_state_specs(cfg, B, dt)
+        lrush = rglru_lib.LRUState(
+            conv=_ns(rules, ("batch", "null", "inner"), lru.conv.shape),
+            h=_ns(rules, ("batch", "inner"), lru.h.shape))
+        cache_len = min(S, cfg.hybrid.window)
+        ks, ksh = kv_specs(cache_len, shard_seq=False)
+
+        def fg(gp, x, st1, st2, kc, vc, length):
+            def rec_one(lp, x, st):
+                h = L.apply_norm(lp["ln1"], x, cfg.norm)
+                y, nst = rglru_lib.decode_rglru(lp["rec"], h, st)
+                x = x + y
+                x, _ = tfm._apply_mlp(lp, cfg, x, rules)
+                return x, nst
+            x, n1 = rec_one(gp["rec1"], x, st1)
+            x, n2 = rec_one(gp["rec2"], x, st2)
+            x, nk, nv = tfm._decode_attn_layer(
+                gp["attn"], cfg, x, kc, vc, length, None, rules,
+                window=cfg.hybrid.window)
+            x, _ = tfm._apply_mlp(gp["attn"], cfg, x, rules)
+            return x, n1, n2, nk, nv
+        probes.append(Probe("group", cfg.n_layers // 3, fg,
+                            (gspecs, xspec, lru, lru, ks, ks, lenspec),
+                            (gshard, xsh, lrush, lrush, ksh, ksh, lensh)))
+        if cfg.n_layers % 3:
+            lspecs, lshard = _layer_specs(cfg, "rec", rules)
+
+            def ft(lp, x, st):
+                h = L.apply_norm(lp["ln1"], x, cfg.norm)
+                y, nst = rglru_lib.decode_rglru(lp["rec"], h, st)
+                x = x + y
+                x, _ = tfm._apply_mlp(lp, cfg, x, rules)
+                return x, nst
+            probes.append(Probe("tail_rec", cfg.n_layers % 3, ft,
+                                (lspecs, xspec, lru),
+                                (lshard, xsh, lrush)))
+    else:
+        kind = "attn" if cfg.family in ("dense", "vlm") else \
+            ("moe" if cfg.family == "moe" else "attn")
+        if cfg.family == "encdec":
+            return _encdec_decode_probes(cfg, shape, rules, mesh)
+        lspecs, lshard = _layer_specs(cfg, kind, rules)
+        ks, ksh = kv_specs(S)
+
+        def f(lp, x, kc, vc, length):
+            x, nk, nv = tfm._decode_attn_layer(lp, cfg, x, kc, vc, length,
+                                               mesh, rules)
+            x, _ = tfm._apply_mlp(lp, cfg, x, rules)
+            return x, nk, nv
+        probes.append(Probe(f"layer_{kind}", cfg.n_layers, f,
+                            (lspecs, xspec, ks, ks, lenspec),
+                            (lshard, xsh, ksh, ksh, lensh)))
+    probes.append(_embed_top_probe(cfg, rules, B, 1, train=False))
+    return probes
+
+
+def _encdec_decode_probes(cfg, shape, rules, mesh) -> List[Probe]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.cdtype
+    dspecs, dshard = _enc_layer_specs(cfg, rules, decoder=True)
+    xspec = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+    xsh = _ns(rules, ("batch", None, None), xspec.shape)
+    ks = jax.ShapeDtypeStruct((B, S, cfg.n_kv_heads, cfg.head_dim_), dt)
+    ksh = _ns(rules, ("batch", "seq_kv", "null", "null"), ks.shape)
+    xk = jax.ShapeDtypeStruct((B, encdec_lib.N_FRAMES_PAD, cfg.n_kv_heads,
+                               cfg.head_dim_), dt)
+    xksh = _ns(rules, ("batch", "null", "null", "null"), xk.shape)
+    lenspec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    lensh = _ns(rules, ("batch",), lenspec.shape)
+
+    def f(lp, x, kc, vc, xkc, xvc, length):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        q, k, v = attn_lib.qkv_proj(lp["attn"], h, length[:, None], 0.0)
+        kc, vc = attn_lib.cache_update_local(kc, vc, k, v, length)
+        if mesh is not None and "model" in mesh.axis_names:
+            o = attn_lib.decode_attend_partitioned(q[:, 0], kc, vc,
+                                                   length + 1, mesh)
+        else:
+            o = attn_lib.decode_attend_local(
+                q[:, 0], kc, vc, jnp.arange(kc.shape[1]), length + 1)
+        x = x + attn_lib.out_proj(lp["attn"], o[:, None])
+        h = L.apply_norm(lp["ln_x"], x, cfg.norm)
+        q = jnp.einsum("bsd,dhk->bshk", h,
+                       lp["xattn"]["wq"].astype(h.dtype))
+        o = attn_lib.decode_attend_local(
+            q[:, 0], xkc, xvc, jnp.arange(xkc.shape[1]),
+            jnp.full((B,), encdec_lib.N_FRAMES, jnp.int32))
+        x = x + attn_lib.out_proj(lp["xattn"], o[:, None])
+        x = encdec_lib._mlp_block(lp, cfg, x)
+        return x, kc, vc
+    probes = [Probe("dec_layer", cfg.n_layers, f,
+                    (dspecs, xspec, ks, ks, xk, xk, lenspec),
+                    (dshard, xsh, ksh, ksh, xksh, xksh, lensh))]
+    probes.append(_embed_top_probe(cfg, rules, B, 1, train=False))
+    return probes
+
+
+def _embed_top_probe(cfg, rules, B, S, train: bool) -> Probe:
+    box = {}
+
+    def finit(k):
+        p, a = {}, {}
+        p["embed"], a["embed"] = L.init_embedding(
+            k, L.pad_vocab(cfg.vocab), cfg.d_model, cfg.pdtype,
+            cfg.tie_embeddings)
+        p["final_norm"], a["final_norm"] = L.init_norm(
+            cfg.pdtype, cfg.d_model, cfg.norm)
+        box["axes"] = a
+        return p
+    specs = jax.eval_shape(finit, jax.random.PRNGKey(0))
+    shard = jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                         rules.tree_specs(box["axes"], specs),
+                         is_leaf=lambda x: isinstance(x, P))
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    tsh = _ns(rules, ("batch", None), tok.shape)
+
+    def f(p, tokens):
+        x = L.embed(p["embed"], tokens, cfg.cdtype, rules)
+        h = L.apply_norm(p["final_norm"], x, cfg.norm)
+        return L.unembed(p["embed"], h[:, -1].astype(jnp.float32),
+                         cfg.vocab)
+    return Probe("embed_top", 1, f, (specs, tok), (shard, tsh))
+
+
+# ---------------------------------------------------------------------------
+# analytic optimizer term (AdamW is elementwise: counted, not compiled)
+
+
+def optimizer_analytic(n_params: int, chips: int) -> dict:
+    """Per-device FLOPs/bytes for one AdamW update over 2-D-sharded state."""
+    local = n_params / chips
+    return {
+        "flops": 12.0 * local,           # mul/add chain per element
+        "bytes_accessed": (4 + 4 + 4 + 4) * local   # g,m,n read + p rw
+        + (4 + 4 + 4) * local,
+    }

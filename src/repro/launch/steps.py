@@ -1,0 +1,158 @@
+"""Full-program step builders shared by dryrun.py and the drivers.
+
+Each returns (fn, arg_specs, in_shardings, donate_argnums): everything
+jax.jit needs, with all array arguments as ShapeDtypeStructs (no device
+allocation — the dry-run contract).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import factory as factory_lib
+from repro.models.factory import Model, build_model, input_specs
+from repro.models.sharding import AxisRules, default_rules
+from repro.train.optimizer import AdamState, AdamW, warmup_cosine
+from repro.train.train_step import (TrainState, batch_shardings,
+                                    make_train_step, state_shardings)
+
+SEQ_POLICY_ARCHS = {"starcoder2-7b", "paligemma-3b", "whisper-base",
+                    "recurrentgemma-2b"}
+
+
+def rules_for(cfg: ArchConfig, mesh, overrides: dict = None, *,
+              optimized: bool = True) -> AxisRules:
+    """Arch-appropriate logical-axis rules (DESIGN.md §6).
+
+    optimized=True enables the §Perf hillclimb winners (manual-TP layer
+    blocks where eligible); optimized=False is the measured GSPMD-auto
+    baseline A (results/dryrun_baselineA).
+    """
+    tp = mesh.devices.shape[mesh.axis_names.index("model")] \
+        if "model" in mesh.axis_names else 1
+    seq_attn = (cfg.n_heads % max(tp, 1) != 0)
+    r = default_rules(mesh, seq_shard_attn=seq_attn)
+    if optimized and cfg.d_model >= 8192:
+        # measured crossover (EXPERIMENTS.md §Perf item 8): manual-TP's
+        # dW locality wins big for the giant dense models (mistral
+        # 270->153s, qwen2 156->96s dominant term) but its f32 boundary
+        # gathers regress smaller-d archs (stablelm 23->41s)
+        r.rules["manual_tp"] = True
+    if overrides:
+        r.rules.update(overrides)
+    return r
+
+
+def effective_microbatches(cfg: ArchConfig, shape: ShapeConfig,
+                           mesh) -> int:
+    """Largest mb <= cfg.microbatches with (B/mb) divisible by the batch
+    shards of this mesh (a multi-pod mesh shards the batch 2x wider, so
+    per-arch mb settings are sized for single-pod and clamped here)."""
+    shards = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            shards *= mesh.devices.shape[mesh.axis_names.index(ax)]
+    mb = max(1, cfg.microbatches)
+    B = shape.global_batch
+    while mb > 1 and (B % mb or (B // mb) % shards):
+        mb //= 2
+    return mb
+
+
+def abstract_params(model: Model):
+    """(param ShapeDtypeStructs, logical axes) without allocating."""
+    box = {}
+
+    def f(k):
+        p, a = model.init(k)
+        box["axes"] = a
+        return p
+    specs = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return specs, box["axes"]
+
+
+def param_shardings(pspecs, axes, rules: AxisRules):
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                        rules.tree_specs(axes, pspecs),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train_setup(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      rules: AxisRules = None, *, compression=False):
+    rules = rules or rules_for(cfg, mesh)
+    model = build_model(cfg)
+    opt = AdamW()
+    mb = effective_microbatches(cfg, shape, mesh)
+    step_fn = make_train_step(model, opt, warmup_cosine(3e-4, 2000, 10**5),
+                              rules=rules, microbatches=mb,
+                              compression=compression)
+    pspecs, axes = abstract_params(model)
+    f32s = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pspecs)
+    ef = f32s if compression else None
+    needs_master = any(s.dtype != jnp.float32
+                       for s in jax.tree.leaves(pspecs))
+    state_specs = TrainState(
+        params=pspecs,
+        opt=AdamState(mu=f32s, nu=f32s,
+                      count=jax.ShapeDtypeStruct((), jnp.int32),
+                      master=f32s if needs_master else None),
+        step=jax.ShapeDtypeStruct((), jnp.int32), ef=ef)
+    st_sh = state_shardings(state_specs, axes, rules)
+    bspecs = input_specs(cfg, shape)
+    b_sh = batch_shardings(bspecs, rules)
+    return step_fn, (state_specs, bspecs), (st_sh, b_sh), (0,)
+
+
+def build_prefill_setup(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                        rules: AxisRules = None):
+    rules = rules or rules_for(cfg, mesh)
+    model = build_model(cfg)
+    pspecs, axes = abstract_params(model)
+    p_sh = param_shardings(pspecs, axes, rules)
+    bspecs = input_specs(cfg, shape)
+    b_sh = batch_shardings(bspecs, rules)
+
+    def prefill_step(params, batch):
+        logits, state = model.prefill(params, batch,
+                                      max_len=shape.seq_len, rules=rules)
+        return jnp.argmax(logits, -1).astype(jnp.int32), state
+    return prefill_step, (pspecs, bspecs), (p_sh, b_sh), ()
+
+
+def build_decode_setup(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                       rules: AxisRules = None):
+    rules = rules or rules_for(cfg, mesh)
+    model = build_model(cfg)
+    pspecs, axes = abstract_params(model)
+    p_sh = param_shardings(pspecs, axes, rules)
+    B = shape.global_batch
+    st_specs = model.decode_state_specs(B, shape.seq_len)
+    st_axes = factory_lib.state_logical_axes(model, st_specs)
+    st_sh = jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                         rules.tree_specs(st_axes, st_specs),
+                         is_leaf=lambda x: isinstance(x, P))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t_sh = NamedSharding(rules.mesh,
+                         rules.spec(("batch", None), tok.shape))
+
+    def decode_step(params, tokens, state):
+        logits, state = model.decode(params, tokens, state, mesh=mesh,
+                                     rules=rules)
+        return jnp.argmax(logits, -1).astype(jnp.int32)[:, None], state
+    return decode_step, (pspecs, tok, st_specs), (p_sh, t_sh, st_sh), (2,)
+
+
+def build_setup(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                rules: AxisRules = None):
+    if shape.kind == "train":
+        return build_train_setup(cfg, shape, mesh, rules)
+    if shape.kind == "prefill":
+        return build_prefill_setup(cfg, shape, mesh, rules)
+    return build_decode_setup(cfg, shape, mesh, rules)

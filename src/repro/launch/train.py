@@ -1,0 +1,81 @@
+"""End-to-end training driver.
+
+On a real pod this runs under the production mesh; on this container it
+drives the same code path on the host devices with a reduced config:
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-7b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Restores from the newest checkpoint automatically (kill it and rerun to
+see fault tolerance; tests do this programmatically).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import get_config
+from repro.configs.shapes import ShapeConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import rules_for
+from repro.models.factory import build_model
+from repro.train.data import batch_for_step
+from repro.train.loop import LoopConfig, run_loop
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compression", action="store_true",
+                    help="int8 gradient compression with error feedback")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, microbatches=args.microbatches)
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    rules = rules_for(cfg, mesh) if mesh.devices.size > 1 else None
+
+    model = build_model(cfg)
+    opt = AdamW()
+    lr = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt,
+                             compression=args.compression)
+    step_fn = jax.jit(make_train_step(
+        model, opt, lr, rules=rules, microbatches=args.microbatches,
+        compression=args.compression), donate_argnums=0)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"[train] {cfg.name} ({'reduced' if args.reduced else 'full'}) "
+          f"{n_params / 1e6:.1f}M params, {args.steps} steps, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    lc = LoopConfig(n_steps=args.steps, ckpt_every=args.ckpt_every,
+                    ckpt_dir=args.ckpt_dir, log_every=10)
+    state, stats = run_loop(step_fn, state,
+                            lambda s: batch_for_step(cfg, shape, s), lc)
+    first = stats.history[0]["loss"] if stats.history else float("nan")
+    last = stats.history[-1]["loss"] if stats.history else float("nan")
+    print(f"[train] done: loss {first:.4f} -> {last:.4f} "
+          f"({stats.steps_run} steps, {stats.straggler_events} straggler "
+          f"events)")
+    return state, stats
+
+
+if __name__ == "__main__":
+    main()

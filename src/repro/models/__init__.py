@@ -1,0 +1,3 @@
+from repro.models.factory import Model, build_model, input_specs  # noqa
+
+__all__ = ["Model", "build_model", "input_specs"]

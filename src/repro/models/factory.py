@@ -1,0 +1,202 @@
+"""Unified model API over the 10-arch zoo.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions of
+(params, batch/state): ``loss`` (train), ``prefill``, ``decode`` (serve).
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of
+an (arch x shape) cell — weak-type-correct, shardable, no device allocation —
+which is what launch/dryrun.py lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import encdec as encdec_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.attention import KVCache
+from repro.models.sharding import AxisRules
+from repro.models.transformer import DecodeState
+
+
+def cross_entropy(logits, labels, mask):
+    """logits: [B,S,V] f32; labels: [B,S] int32; mask: [B,S]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / denom
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    aux_weight: float = 0.01
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key):
+        if self.cfg.family == "encdec":
+            return encdec_lib.init_encdec(key, self.cfg)
+        return tfm.init_params(key, self.cfg)
+
+    # -- train --------------------------------------------------------------
+    def logits(self, params, batch, rules: AxisRules = None, remat=True):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_lib.forward(params, cfg, batch["tokens"],
+                                      batch["frames"], rules, remat=remat)
+        if cfg.family == "vlm":
+            lg, aux = tfm.forward(
+                params, cfg, batch["tokens"], rules=rules,
+                prefix_embeds=batch["image_embeds"],
+                prefix_len=cfg.num_image_tokens, remat=remat)
+            return lg[:, cfg.num_image_tokens:], aux
+        return tfm.forward(params, cfg, batch["tokens"], rules=rules,
+                           remat=remat)
+
+    def loss(self, params, batch, rules: AxisRules = None, remat=True):
+        logits, aux = self.logits(params, batch, rules, remat)
+        ce = cross_entropy(logits, batch["labels"], batch["loss_mask"])
+        loss = ce + self.aux_weight * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    # -- serve --------------------------------------------------------------
+    def prefill(self, params, batch, *, max_len=None, rules=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_lib.prefill(params, cfg, batch["tokens"],
+                                      batch["frames"], max_len=max_len,
+                                      rules=rules)
+        if cfg.family == "vlm":
+            return tfm.prefill(params, cfg, batch["tokens"],
+                               max_len=max_len, rules=rules,
+                               prefix_embeds=batch["image_embeds"],
+                               prefix_len=cfg.num_image_tokens)
+        return tfm.prefill(params, cfg, batch["tokens"], max_len=max_len,
+                           rules=rules)
+
+    def decode(self, params, tokens, state, *, mesh=None, rules=None):
+        if self.cfg.family == "encdec":
+            return encdec_lib.decode_step(params, self.cfg, tokens, state,
+                                          mesh=mesh, rules=rules)
+        return tfm.decode_step(params, self.cfg, tokens, state, mesh=mesh,
+                               rules=rules)
+
+    # -- spec builders (dry-run) ---------------------------------------------
+    def n_attn_layers(self) -> int:
+        if self.cfg.family == "hybrid":
+            return self.cfg.n_layers // 3
+        if self.cfg.family == "ssm":
+            return 0
+        return self.cfg.n_layers
+
+    def decode_state_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = cfg.cdtype
+        if cfg.family == "encdec":
+            return encdec_lib.state_specs(cfg, batch, max_len, dt)
+        kv = ssm = lru = None
+        if cfg.family == "ssm":
+            ssm = ssm_lib.ssm_state_specs(cfg, batch, dt, cfg.n_layers)
+        elif cfg.family == "hybrid":
+            n_rec = cfg.n_layers - self.n_attn_layers()
+            lru = rglru_lib.lru_state_specs(cfg, batch, dt, n_rec)
+            cache_len = min(max_len, cfg.hybrid.window)
+            kv = KVCache.specs(self.n_attn_layers(), batch, cache_len,
+                               cfg.n_kv_heads, cfg.head_dim_, dt)
+        else:
+            kv = KVCache.specs(cfg.n_layers, batch, max_len,
+                               cfg.n_kv_heads, cfg.head_dim_, dt)
+        return DecodeState(kv=kv, ssm=ssm, lru=lru)
+
+    def decode_state_init(self, batch: int, max_len: int, *, filled=0):
+        """Concrete zero state (tests / serving loop)."""
+        specs = self.decode_state_specs(batch, max_len)
+        length = jnp.full((batch,), filled, jnp.int32)
+
+        def zero(s):
+            return jnp.zeros(s.shape, s.dtype)
+        st = jax.tree.map(zero, specs)
+        if self.cfg.family == "encdec":
+            return st._replace(self_kv=st.self_kv._replace(length=length))
+        if st.kv is not None:
+            st = st._replace(kv=st.kv._replace(length=length))
+        return st
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, per the dry-run contract)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training/prefill batches for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    cdt = cfg.cdtype
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "encdec":
+        base = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "frames": jax.ShapeDtypeStruct(
+                    (B, encdec_lib.N_FRAMES, cfg.d_model), cdt)}
+    elif cfg.family == "vlm":
+        S_text = S - cfg.num_image_tokens
+        base = {"tokens": jax.ShapeDtypeStruct((B, S_text), i32),
+                "image_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.num_image_tokens, cfg.d_model), cdt)}
+    else:
+        base = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        lbl = base["tokens"].shape
+        base["labels"] = jax.ShapeDtypeStruct(lbl, i32)
+        base["loss_mask"] = jax.ShapeDtypeStruct(lbl, f32)
+    return base
+
+
+def batch_logical_axes(cfg: ArchConfig, shape: ShapeConfig):
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        out[k] = ("batch",) + ("null",) * (len(v.shape) - 1)
+    return out
+
+
+def state_logical_axes(model: Model, specs) -> Any:
+    """Logical axes tree matching decode_state_specs output."""
+    cfg = model.cfg
+    shard_kv_seq = cfg.family not in ("hybrid",)  # window cache stays local
+
+    def kv_axes(kvspec):
+        seq = "seq_kv" if shard_kv_seq else "null"
+        return KVCache(k=("layers", "batch", seq, "null", "null"),
+                       v=("layers", "batch", seq, "null", "null"),
+                       length=("batch",))
+    if cfg.family == "encdec":
+        return encdec_lib.EncDecState(
+            self_kv=kv_axes(specs.self_kv),
+            cross_k=("layers", "batch", "null", "null", "null"),
+            cross_v=("layers", "batch", "null", "null", "null"))
+    kv = ssm = lru = None
+    if specs.kv is not None:
+        kv = kv_axes(specs.kv)
+    if specs.ssm is not None:
+        ssm = ssm_lib.SSMState(conv=("layers", "batch", "null", "inner"),
+                               h=("layers", "batch", "inner", "null"))
+    if specs.lru is not None:
+        lru = rglru_lib.LRUState(conv=("layers", "batch", "null", "inner"),
+                                 h=("layers", "batch", "inner"))
+    return DecodeState(kv=kv, ssm=ssm, lru=lru)

@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (recurrentgemma-2b / Griffin).
+
+Temporal mix for the "recurrent" layers of the 1:2 hybrid pattern:
+
+    r_t = sigmoid(w_a ⊙ x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(w_x ⊙ x_t + b_x)          (input gate)
+    a_t = exp(c * r_t * log(sigmoid(Λ)))    (per-channel decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) (i_t ⊙ x_t)
+
+Simplification vs the paper's block-diagonal gate matrices: gates here are
+per-channel (diagonal) — this keeps the recurrence strictly channel-local,
+so the "inner" dim shards over the "model" mesh axis with zero communication
+inside the scan (DESIGN.md §2 records the change).  Like ssm.py the train
+path is an associative_scan; decode is one O(1) step, which is why
+recurrentgemma runs the long_500k cell (window attention bounds the KV).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, HybridConfig
+from repro.models.layers import _normal
+
+_C = 8.0
+
+
+class LRUState(NamedTuple):
+    conv: jax.Array   # [..., B, conv_width-1, W]
+    h: jax.Array      # [..., B, W] (float32)
+
+
+def lru_width(cfg: ArchConfig) -> int:
+    h = cfg.hybrid or HybridConfig()
+    return h.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig, dtype, conv_width=4):
+    d, w = cfg.d_model, lru_width(cfg)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d)
+    # Λ init so a ∈ [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[3], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.sqrt(u) / (1 - jnp.sqrt(u)))  # logit of sqrt(u)
+    p = {"in_x": _normal(ks[0], (d, w), dtype, s),
+         "in_gate": _normal(ks[1], (d, w), dtype, s),
+         "conv_w": _normal(ks[2], (conv_width, w), dtype, 1.0 / np.sqrt(w)),
+         "conv_b": jnp.zeros((w,), dtype),
+         "w_a": jnp.zeros((w,), jnp.float32),
+         "b_a": jnp.zeros((w,), jnp.float32),
+         "w_x": jnp.zeros((w,), jnp.float32),
+         "b_x": jnp.zeros((w,), jnp.float32),
+         "lam": lam,
+         "out": _normal(ks[4], (w, d), dtype, 1.0 / np.sqrt(w))}
+    a = {"in_x": ("embed", "inner"), "in_gate": ("embed", "inner"),
+         "conv_w": ("conv", "inner"), "conv_b": ("inner",),
+         "w_a": ("inner",), "b_a": ("inner",), "w_x": ("inner",),
+         "b_x": ("inner",), "lam": ("inner",), "out": ("inner", "embed")}
+    return p, a
+
+
+def _gates(p, xc):
+    """xc: [B,S,W] (post-conv) -> (log_a, bx) float32."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["w_a"] * xf + p["b_a"])
+    i = jax.nn.sigmoid(p["w_x"] * xf + p["b_x"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])       # [B,S,W]
+    a2 = jnp.exp(2.0 * log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * i * xf
+    return log_a, bx
+
+
+SCAN_CHUNK = 1024
+
+
+def apply_rglru(p, x, state: LRUState | None = None,
+                chunk: int = SCAN_CHUNK):
+    """x: [B,S,D] -> (y [B,S,D], new_state).  Long sequences run as a
+    static python loop of seeded chunks (see ssm.apply_ssm)."""
+    S = x.shape[1]
+    if chunk and S > chunk and S % chunk == 0:
+        ys = []
+        for i in range(S // chunk):
+            y, state = _apply_rglru_core(p, x[:, i * chunk:(i + 1) * chunk],
+                                         state)
+            ys.append(y)
+        return jnp.concatenate(ys, axis=1), state
+    return _apply_rglru_core(p, x, state)
+
+
+def _apply_rglru_core(p, x, state: LRUState | None = None):
+    from repro.models.ssm import _causal_conv
+    xw = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(x.dtype))
+    conv_state = state.conv if state is not None else None
+    xc, conv_state = _causal_conv(xw, p["conv_w"], p["conv_b"], conv_state)
+    log_a, bx = _gates(p, xc)
+    a = jnp.exp(log_a)
+    b = bx
+    if state is not None:
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([state.h[:, None], b], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    ha, hb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hb if state is None else hb[:, 1:]              # [B,S,W] f32
+    y = h * jax.nn.gelu(gate.astype(jnp.float32))
+    out = jnp.einsum("bsw,wd->bsd", y.astype(x.dtype),
+                     p["out"].astype(x.dtype))
+    return out, LRUState(conv=conv_state, h=h[:, -1])
+
+
+def decode_rglru(p, x, state: LRUState):
+    """One-token step.  x: [B,1,D]."""
+    from repro.models.ssm import _causal_conv
+    xw = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(x.dtype))
+    xc, conv_state = _causal_conv(xw, p["conv_w"], p["conv_b"], state.conv)
+    log_a, bx = _gates(p, xc)
+    h = state.h * jnp.exp(log_a[:, 0]) + bx[:, 0]       # [B,W]
+    y = h[:, None] * jax.nn.gelu(gate.astype(jnp.float32))
+    out = jnp.einsum("bsw,wd->bsd", y.astype(x.dtype),
+                     p["out"].astype(x.dtype))
+    return out, LRUState(conv=conv_state, h=h)
+
+
+def init_lru_state(cfg: ArchConfig, batch, dtype, n=None, conv_width=4):
+    w = lru_width(cfg)
+    L = (n,) if n else ()
+    return LRUState(conv=jnp.zeros(L + (batch, conv_width - 1, w), dtype),
+                    h=jnp.zeros(L + (batch, w), jnp.float32))
+
+
+def lru_state_specs(cfg: ArchConfig, batch, dtype, n=None, conv_width=4):
+    w = lru_width(cfg)
+    L = (n,) if n else ()
+    return LRUState(
+        conv=jax.ShapeDtypeStruct(L + (batch, conv_width - 1, w), dtype),
+        h=jax.ShapeDtypeStruct(L + (batch, w), jnp.float32))

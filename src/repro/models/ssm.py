@@ -1,0 +1,183 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+Train path uses ``jax.lax.associative_scan`` over time — an unrolled
+log-depth DAG rather than a while loop, so (a) XLA parallelizes it and
+(b) ``cost_analysis`` FLOPs are exact (while-loop bodies are counted once;
+see launch/roofline.py).  Decode is a single O(1) recurrence step — the
+whole 500k context lives in a [B, d_inner, state] state tensor, which is
+why falcon-mamba runs the long_500k cell.
+
+Channel parallelism: d_inner ("inner") is sharded over the "model" mesh
+axis; the recurrence is per-channel independent, so the scan itself needs
+no communication — only the in/out projections do (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import _normal
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [L?, B, conv_width-1, d_inner] recent inputs
+    h: jax.Array      # [L?, B, d_inner, state]
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm or SSMConfig()
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or cfg.d_model // 16
+    return s, d_inner, dt_rank
+
+
+def init_ssm(key, cfg: ArchConfig, dtype):
+    s, din, dtr = dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    sd = 1.0 / np.sqrt(d)
+    si = 1.0 / np.sqrt(din)
+    # S4D-real init for A: A = -(1..state) per channel
+    a0 = jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32)[None],
+                  (din, 1))
+    p = {"in_proj": _normal(ks[0], (d, 2 * din), dtype, sd),
+         "conv_w": _normal(ks[1], (s.conv_width, din), dtype, si),
+         "conv_b": jnp.zeros((din,), dtype),
+         "x_proj": _normal(ks[2], (din, dtr + 2 * s.state_dim), dtype, si),
+         "dt_proj": _normal(ks[3], (dtr, din), dtype, 1.0 / np.sqrt(dtr)),
+         "dt_bias": jnp.full((din,), -4.6, dtype),   # softplus^-1(0.01)
+         "A_log": jnp.log(a0),
+         "D": jnp.ones((din,), jnp.float32),
+         "out_proj": _normal(ks[5], (din, d), dtype, si)}
+    a = {"in_proj": ("embed", "inner"), "conv_w": ("conv", "inner"),
+         "conv_b": ("inner",), "x_proj": ("inner", "null"),
+         "dt_proj": ("dt", "inner"), "dt_bias": ("inner",),
+         "A_log": ("inner", "state"), "D": ("inner",),
+         "out_proj": ("inner", "embed")}
+    return p, a
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: [B,S,din]; w: [width,din].
+
+    state: optional [B,width-1,din] of inputs *before* x (decode);
+    returns (y [B,S,din], new_state [B,width-1,din]).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([state, x], axis=1)          # [B,W-1+S,din]
+    y = b.astype(x.dtype)[None, None]
+    for i in range(width):
+        y = y + w[i].astype(x.dtype) * \
+            jax.lax.dynamic_slice_in_dim(ext, i, x.shape[1], axis=1)
+    return y, ext[:, -(width - 1):]
+
+
+def _ssm_inputs(p, xc, cfg: ArchConfig):
+    """Shared projections: xc [B,S,din] -> (dA [B,S,din,N] as exp arg,
+    Bx [B,S,din,N], C [B,S,N], dt [B,S,din])."""
+    s, din, dtr = dims(cfg)
+    xf = xc.astype(jnp.float32)
+    proj = jnp.einsum("bsd,dk->bsk", xf, p["x_proj"].astype(jnp.float32))
+    dt, B, C = jnp.split(proj, [dtr, dtr + s.state_dim], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # [din,N]
+    dA = dt[..., None] * A[None, None]                  # [B,S,din,N]
+    Bx = dt[..., None] * B[:, :, None, :] * xf[..., None]
+    return dA, Bx, C, xf
+
+
+SCAN_CHUNK = 512  # bound the [B,chunk,din,N] associative-scan working set
+
+
+def apply_ssm(p, x, cfg: ArchConfig, state: SSMState | None = None,
+              chunk: int = SCAN_CHUNK):
+    """Full-sequence selective scan.  x: [B,S,D] -> [B,S,D].
+
+    If ``state`` is given its ``h``/``conv`` seed the recurrence; long
+    sequences run as a *python* loop of seeded chunks (static unroll: no
+    while loop, so probe cost_analysis stays trip-count-exact, and XLA's
+    liveness keeps only one chunk's scan tensors alive — the unchunked
+    falcon-mamba train cell peaked at 27 GB/chip, EXPERIMENTS.md §Perf).
+    """
+    S = x.shape[1]
+    if chunk and S > chunk and S % chunk == 0:
+        ys = []
+        for i in range(S // chunk):
+            y, state = _apply_ssm_core(p, x[:, i * chunk:(i + 1) * chunk],
+                                       cfg, state)
+            ys.append(y)
+        return jnp.concatenate(ys, axis=1), state
+    return _apply_ssm_core(p, x, cfg, state)
+
+
+def _apply_ssm_core(p, x, cfg: ArchConfig, state: SSMState | None = None):
+    s, din, dtr = dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dA, Bx, C, xf = _ssm_inputs(p, xc, cfg)
+
+    a = jnp.exp(dA)                                     # [B,S,din,N]
+    b = Bx
+    if state is not None:
+        # seed: h_0 enters as an extra leading element
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([state.h[:, None], b], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    ha, hb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hb if state is None else hb[:, 1:]              # [B,S,din,N]
+    y = jnp.einsum("bsdn,bsn->bsd", h, C)               # C readout
+    y = y + p["D"].astype(jnp.float32)[None, None] * \
+        xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    new_state = SSMState(conv=conv_state, h=h[:, -1])
+    return out, new_state
+
+
+def decode_ssm(p, x, cfg: ArchConfig, state: SSMState):
+    """One-token step.  x: [B,1,D]; state: per-layer slice."""
+    s, din, dtr = dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], state.conv)
+    xc = jax.nn.silu(xc)
+    dA, Bx, C, xf = _ssm_inputs(p, xc, cfg)
+    h = state.h * jnp.exp(dA[:, 0]) + Bx[:, 0]          # [B,din,N]
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0])[:, None]
+    y = y + p["D"].astype(jnp.float32)[None, None] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    return out, SSMState(conv=conv_state, h=h)
+
+
+def init_ssm_state(cfg: ArchConfig, batch, dtype, n_layers=None):
+    s, din, _ = dims(cfg)
+    L = (n_layers,) if n_layers else ()
+    return SSMState(
+        conv=jnp.zeros(L + (batch, s.conv_width - 1, din), dtype),
+        h=jnp.zeros(L + (batch, din, s.state_dim), jnp.float32))
+
+
+def ssm_state_specs(cfg: ArchConfig, batch, dtype, n_layers=None):
+    s, din, _ = dims(cfg)
+    L = (n_layers,) if n_layers else ()
+    return SSMState(
+        conv=jax.ShapeDtypeStruct(L + (batch, s.conv_width - 1, din), dtype),
+        h=jax.ShapeDtypeStruct(L + (batch, din, s.state_dim), jnp.float32))

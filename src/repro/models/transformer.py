@@ -1,0 +1,569 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid families.
+
+Layer stacks are homogeneous scans (``jax.lax.scan`` over stacked params):
+one traced body per kind keeps compile time flat in depth (88-layer
+mistral-large compiles the same program as a 2-layer smoke config).  The
+hybrid family (recurrentgemma's 1:2 RG-LRU:attention pattern) scans over
+*groups* of (rec, rec, attn) with an unrolled recurrent tail when
+n_layers % 3 != 0.
+
+Decode state is a ``DecodeState`` of per-kind stacked caches; global
+attention uses the partitioned-KV FPP decode of models/attention.py when a
+mesh is supplied (the paper's technique at the serving layer), window
+attention (recurrentgemma) keeps a ring cache of ``window`` slots.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import KVCache
+from repro.models.sharding import AxisRules, constrain
+
+
+class DecodeState(NamedTuple):
+    kv: Optional[KVCache]                     # [n_attn_layers, ...]
+    ssm: Optional[ssm_lib.SSMState]           # [n_ssm_layers, ...]
+    lru: Optional[rglru_lib.LRUState]         # [n_rec_layers, ...]
+
+
+def layer_plan(cfg: ArchConfig) -> list:
+    if cfg.family == "moe":
+        return ["moe"] * cfg.n_layers
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern  # ("recurrent", "recurrent", "attention")
+        kinds = {"recurrent": "rec", "attention": "attn"}
+        return [kinds[pat[i % len(pat)]] for i in range(cfg.n_layers)]
+    return ["attn"] * cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+
+
+def init_layer(key, cfg: ArchConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.pdtype
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.init_norm(dt, d, cfg.norm)
+    if kind in ("attn", "moe"):
+        p["attn"], a["attn"] = attn.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_, dt,
+            cfg.qkv_bias)
+    elif kind == "rec":
+        p["rec"], a["rec"] = rglru_lib.init_rglru(ks[0], cfg, dt)
+    elif kind == "ssm":
+        p["ssm"], a["ssm"] = ssm_lib.init_ssm(ks[0], cfg, dt)
+        return p, a                       # mamba block has no separate MLP
+    p["ln2"], a["ln2"] = L.init_norm(dt, d, cfg.norm)
+    if kind == "moe":
+        p["moe"], a["moe"] = moe_lib.init_moe(ks[1], d, cfg.moe, dt,
+                                              cfg.gated_mlp, cfg.act)
+    else:
+        p["mlp"], a["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, dt,
+                                        cfg.gated_mlp)
+    return p, a
+
+
+def _stacked_init(key, cfg, kind, n):
+    ks = jax.random.split(key, n)
+    ps, axs = zip(*[init_layer(k, cfg, kind) for k in ks])
+    return L.stack_layers(list(ps)), L.add_layer_axis(axs[0])
+
+
+def init_params(key, cfg: ArchConfig):
+    """Returns (params, axes).  Stacks: dense/moe/ssm -> params['stack'];
+    hybrid -> params['groups'] (+ params['tail'])."""
+    k_emb, k_stack, k_tail = jax.random.split(key, 3)
+    vocab_p = L.pad_vocab(cfg.vocab)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.init_embedding(
+        k_emb, vocab_p, cfg.d_model, cfg.pdtype, cfg.tie_embeddings)
+    plan = layer_plan(cfg)
+    if cfg.family == "hybrid":
+        ng = cfg.n_layers // 3
+        gks = jax.random.split(k_stack, ng)
+
+        def group_init(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            gp, ga = {}, {}
+            gp["rec1"], ga["rec1"] = init_layer(k1, cfg, "rec")
+            gp["rec2"], ga["rec2"] = init_layer(k2, cfg, "rec")
+            gp["attn"], ga["attn"] = init_layer(k3, cfg, "attn")
+            return gp, ga
+
+        gps, gas = zip(*[group_init(k) for k in gks])
+        p["groups"] = L.stack_layers(list(gps))
+        a["groups"] = L.add_layer_axis(gas[0])
+        n_tail = cfg.n_layers % 3
+        if n_tail:
+            p["tail"], a["tail"] = _stacked_init(k_tail, cfg, "rec", n_tail)
+    else:
+        p["stack"], a["stack"] = _stacked_init(
+            k_stack, cfg, plan[0], cfg.n_layers)
+    p["final_norm"], a["final_norm"] = L.init_norm(
+        cfg.pdtype, cfg.d_model, cfg.norm)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# layer application (full-sequence: train & prefill)
+
+
+def _gather_in(h, rules):
+    """Megatron-SP block entry: activations re-enter each matmul block
+    replicated over "model" (the boundary keeps them S-sharded).
+
+    Opt-in via rules["gather_in"]: it removes the f32 full-size dW live
+    buffers GSPMD otherwise allocates (-3.3 GB on mistral-large) but makes
+    GSPMD compute those dW fully replicated (+2.3x layer FLOPs) — both
+    measured in EXPERIMENTS.md §Perf.  The manual-TP layer path
+    (models/manual_tp.py) supersedes both trade-offs."""
+    if rules is not None and rules.rules.get("gather_in"):
+        return constrain(h, rules, ("batch", None, None))
+    return h
+
+
+def _manual_tp_on(rules) -> bool:
+    return rules is not None and bool(rules.rules.get("manual_tp"))
+
+
+def _apply_attn_layer(lp, cfg, x, positions, rules, *, window=None,
+                      prefix_len=None, return_kv=False, lp_raw=None):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    if _manual_tp_on(rules) and not return_kv:
+        from repro.models import manual_tp
+        if manual_tp.attn_eligible(cfg, rules):
+            # raw (f32) weights: casting must happen INSIDE the manual
+            # region so weight-grad reduces stay f32 (a bf16 all-reduce
+            # hard-aborts XLA:CPU; see models/manual_tp.py)
+            wts = (lp_raw or lp)["attn"]
+            y = manual_tp.manual_attention(wts, h, positions, cfg,
+                                           rules, window=window,
+                                           prefix_len=prefix_len)
+            return x + y, None
+    h = _gather_in(h, rules)
+    q, k, v = attn.qkv_proj(lp["attn"], h, positions, cfg.rope_theta)
+    if rules is not None:
+        q = constrain(q, rules, ("batch", "seq", "act_heads", None))
+        k = constrain(k, rules, ("batch", None, None, None))
+        v = constrain(v, rules, ("batch", None, None, None))
+    o = attn.attend(q, k, v, positions, positions, causal=True,
+                    window=window, prefix_len=prefix_len)
+    x = x + attn.out_proj(lp["attn"], o)
+    return (x, (k, v)) if return_kv else (x, None)
+
+
+def _apply_mlp(lp, cfg, x, rules, lp_raw=None):
+    h = L.apply_norm(lp["ln2"], x, cfg.norm)
+    if "moe" in lp:
+        h = _gather_in(h, rules)
+        y, aux = moe_lib.apply_moe(lp["moe"], h, cfg.moe, cfg.act)
+        return x + y, aux
+    if _manual_tp_on(rules):
+        from repro.models import manual_tp
+        if manual_tp.mlp_eligible(cfg, rules):
+            wts = (lp_raw or lp)["mlp"]
+            return x + manual_tp.manual_mlp(wts, h, cfg, rules), 0.0
+    h = _gather_in(h, rules)
+    return x + L.apply_mlp(lp["mlp"], h, cfg.act), 0.0
+
+
+# numerics-sensitive leaves that stay f32 through the recurrences
+_KEEP_F32 = {"A_log", "D", "lam", "w_a", "b_a", "w_x", "b_x", "dt_bias"}
+
+
+def cast_layer_params(lp, cdtype):
+    """Cast matmul weights to compute dtype *while still sharded*: the
+    FSDP all-gather then moves bf16, not f32 — half the gather bytes and
+    half the gathered-weight temp (EXPERIMENTS.md §Perf)."""
+    def cast(path, t):
+        name = str(getattr(path[-1], "key", ""))
+        if name in _KEEP_F32 or t.dtype != jnp.float32:
+            return t
+        return t.astype(cdtype)
+    return jax.tree_util.tree_map_with_path(cast, lp)
+
+
+def _apply_layer_full(lp, cfg, kind, x, positions, rules, *,
+                      prefix_len=None, state=None, return_kv=False):
+    """One layer, full sequence.  Returns (x, aux, kv, new_state)."""
+    lp_raw = lp
+    lp = cast_layer_params(lp, cfg.cdtype)
+    if kind == "ssm":
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, new_state = ssm_lib.apply_ssm(lp["ssm"], h, cfg, state)
+        return x + y, 0.0, None, new_state
+    if kind == "rec":
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        y, new_state = rglru_lib.apply_rglru(lp["rec"], h, state)
+        x = x + y
+        x, aux = _apply_mlp(lp, cfg, x, rules, lp_raw=lp_raw)
+        return x, aux, None, new_state
+    window = cfg.hybrid.window if cfg.family == "hybrid" else None
+    x, kv = _apply_attn_layer(lp, cfg, x, positions, rules, window=window,
+                              prefix_len=prefix_len, return_kv=return_kv,
+                              lp_raw=lp_raw)
+    x, aux = _apply_mlp(lp, cfg, x, rules, lp_raw=lp_raw)
+    return x, aux, kv, None
+
+
+# ---------------------------------------------------------------------------
+# forward (train)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, rules: AxisRules = None,
+            prefix_embeds=None, prefix_len=None, remat=True):
+    """tokens: [B,S] int32.  prefix_embeds: [B,P,D] (vlm stub frontend)
+    prepended to the token embeddings; prefix positions attend
+    bidirectionally (prefix-LM mask).  Returns (logits_f32, aux_loss)."""
+    x = L.embed(params["embed"], tokens, cfg.cdtype, rules)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    if rules is not None:
+        x = constrain(x, rules, ("batch", None, None))
+
+    def boundary(x):
+        # layer-boundary activations sequence-sharded over "model"
+        # (Megatron-SP): the scan carry — which remat saves per layer — is
+        # 1/TP the size; GSPMD re-gathers/reduce-scatters inside the layer.
+        return constrain(x, rules, ("batch", "act_seq", None)) \
+            if rules is not None else x
+
+    def body(kind):
+        def f(carry, lp):
+            x, aux = carry
+            x, a, _, _ = _apply_layer_full(lp, cfg, kind, x, positions,
+                                           rules, prefix_len=prefix_len)
+            return (boundary(x), aux + a), None
+        return jax.checkpoint(f) if remat else f
+
+    aux = jnp.float32(0.0)
+    if cfg.family == "hybrid":
+        def gbody(carry, gp):
+            x, aux = carry
+            x, a1, _, _ = _apply_layer_full(gp["rec1"], cfg, "rec", x,
+                                            positions, rules)
+            x, a2, _, _ = _apply_layer_full(gp["rec2"], cfg, "rec", x,
+                                            positions, rules)
+            x, a3, _, _ = _apply_layer_full(gp["attn"], cfg, "attn", x,
+                                            positions, rules)
+            return (boundary(x), aux + a1 + a2 + a3), None
+        gbody = jax.checkpoint(gbody) if remat else gbody
+        (x, aux), _ = jax.lax.scan(gbody, (x, aux), params["groups"])
+        if "tail" in params:
+            (x, aux), _ = jax.lax.scan(body("rec"), (x, aux),
+                                       params["tail"])
+    else:
+        kind = layer_plan(cfg)[0]
+        (x, aux), _ = jax.lax.scan(body(kind), (x, aux), params["stack"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x.astype(jnp.float32), cfg.vocab)
+    if rules is not None:
+        logits = constrain(logits, rules, ("batch", None, "act_vocab"))
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + build decode state
+
+PREFILL_CHUNK = 4096
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, max_len=None,
+            rules: AxisRules = None, prefix_embeds=None, prefix_len=None,
+            chunk: int = PREFILL_CHUNK):
+    """Returns (last_logits [B,V], DecodeState with length = S).
+
+    Global-attention families process long prompts in chunks of
+    ``chunk`` tokens (a static python loop): each chunk attends against
+    the cache filled so far + itself, bounding activation memory to one
+    chunk (32k single-shot prefill peaked at 29-70 GB/chip;
+    EXPERIMENTS.md §Perf).
+    """
+    if cfg.family in ("dense", "moe", "vlm"):
+        S_tot = tokens.shape[1] + (prefix_embeds.shape[1]
+                                   if prefix_embeds is not None else 0)
+        if S_tot > chunk and S_tot % chunk == 0 and \
+                (max_len or S_tot) >= S_tot:
+            return _prefill_chunked(params, cfg, tokens,
+                                    max_len=max_len or S_tot,
+                                    rules=rules,
+                                    prefix_embeds=prefix_embeds,
+                                    prefix_len=prefix_len, chunk=chunk)
+    return _prefill_whole(params, cfg, tokens, max_len=max_len,
+                          rules=rules, prefix_embeds=prefix_embeds,
+                          prefix_len=prefix_len)
+
+
+def _prefill_chunked(params, cfg: ArchConfig, tokens, *, max_len, rules,
+                     prefix_embeds, prefix_len, chunk):
+    x_all = L.embed(params["embed"], tokens, cfg.cdtype, rules)
+    if prefix_embeds is not None:
+        x_all = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x_all],
+                                axis=1)
+    B, S_tot, _ = x_all.shape
+    Lr = cfg.n_layers
+    kc = jnp.zeros((Lr, B, max_len, cfg.n_kv_heads, cfg.head_dim_),
+                   cfg.cdtype)
+    vc = jnp.zeros_like(kc)
+    kind = layer_plan(cfg)[0]
+    last_x = None
+    for ci in range(S_tot // chunk):
+        off = ci * chunk
+        x = x_all[:, off:off + chunk]
+        q_pos = off + jnp.arange(chunk)
+        kv_pos = jnp.arange(off + chunk)
+
+        def body(i, carry):
+            x, kc, vc = carry
+            lp = cast_layer_params(_idx(params["stack"], i), cfg.cdtype)
+            h = L.apply_norm(lp["ln1"], x, cfg.norm)
+            q, k, v = attn.qkv_proj(lp["attn"], h, q_pos, cfg.rope_theta)
+            # write this chunk's kv at [i, :, off:off+chunk]
+            kc = jax.lax.dynamic_update_slice(
+                kc, k[None], (i, 0, off, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v[None], (i, 0, off, 0, 0))
+            # attend against the statically-sliced filled cache prefix
+            k_ctx = jax.lax.dynamic_slice(
+                kc, (i, 0, 0, 0, 0),
+                (1, B, off + chunk, cfg.n_kv_heads, cfg.head_dim_))[0]
+            v_ctx = jax.lax.dynamic_slice(
+                vc, (i, 0, 0, 0, 0),
+                (1, B, off + chunk, cfg.n_kv_heads, cfg.head_dim_))[0]
+            if rules is not None:
+                q = constrain(q, rules, ("batch", "seq", "act_heads",
+                                         None))
+            o = attn.attend(q, k_ctx, v_ctx, q_pos, kv_pos, causal=True,
+                            prefix_len=prefix_len)
+            x = x + attn.out_proj(lp["attn"], o)
+            x, _ = _apply_mlp(lp, cfg, x, rules)
+            return (x, kc, vc)
+
+        x, kc, vc = jax.lax.fori_loop(0, Lr, body, (x, kc, vc))
+        last_x = x
+    x = L.apply_norm(params["final_norm"], last_x, cfg.norm)
+    last = L.unembed(params["embed"], x[:, -1].astype(jnp.float32),
+                     cfg.vocab)
+    length = jnp.full((B,), S_tot, jnp.int32)
+    return last, DecodeState(kv=KVCache(k=kc, v=vc, length=length),
+                             ssm=None, lru=None)
+
+
+def _prefill_whole(params, cfg: ArchConfig, tokens, *, max_len=None,
+                   rules: AxisRules = None, prefix_embeds=None,
+                   prefix_len=None):
+    """Returns (last_logits [B,V], DecodeState with length = S)."""
+    x = L.embed(params["embed"], tokens, cfg.cdtype, rules)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.arange(S)
+    plan = layer_plan(cfg)
+    window = cfg.hybrid.window if cfg.family == "hybrid" else None
+    cache_len = min(max_len, window) if window else max_len
+
+    def pad_kv(k):
+        # place the last ``cache_len`` positions into the cache; a windowed
+        # cache is a ring buffer keyed by absolute position mod window
+        if S >= cache_len:
+            k = k[:, -cache_len:]
+            if window:
+                k = jnp.roll(k, S % cache_len, axis=1)
+        else:
+            k = jnp.pad(k, [(0, 0), (0, cache_len - S), (0, 0), (0, 0)])
+        return k
+
+    def attn_body(kind):
+        def f(x, lp):
+            x, _, kv, _ = _apply_layer_full(lp, cfg, kind, x, positions,
+                                            rules, prefix_len=prefix_len,
+                                            return_kv=True)
+            return x, (pad_kv(kv[0]), pad_kv(kv[1]))
+        return f
+
+    def state_body(kind):
+        def f(x, lp):
+            x, _, _, st = _apply_layer_full(lp, cfg, kind, x, positions,
+                                            rules)
+            return x, st
+        return f
+
+    kv = ssm_st = lru_st = None
+    if cfg.family == "hybrid":
+        def gbody(x, gp):
+            x, _, _, st1 = _apply_layer_full(gp["rec1"], cfg, "rec", x,
+                                             positions, rules)
+            x, _, _, st2 = _apply_layer_full(gp["rec2"], cfg, "rec", x,
+                                             positions, rules)
+            x, _, kvp, _ = _apply_layer_full(gp["attn"], cfg, "attn", x,
+                                             positions, rules,
+                                             return_kv=True)
+            sts = jax.tree.map(lambda a, b: jnp.stack([a, b]), st1, st2)
+            return x, (sts, (pad_kv(kvp[0]), pad_kv(kvp[1])))
+        x, (lru_g, kv_g) = jax.lax.scan(gbody, x, params["groups"])
+        # lru_g leaves: [ng, 2, ...] -> [2*ng, ...]
+        lru_st = jax.tree.map(
+            lambda t: t.reshape((-1,) + t.shape[2:]), lru_g)
+        if "tail" in params:
+            x, lru_t = jax.lax.scan(state_body("rec"), x, params["tail"])
+            lru_st = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), lru_st, lru_t)
+        kv = kv_g
+    elif cfg.family == "ssm":
+        x, ssm_st = jax.lax.scan(state_body("ssm"), x, params["stack"])
+    else:
+        x, kv = jax.lax.scan(attn_body(plan[0]), x, params["stack"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    last = L.unembed(params["embed"], x[:, -1].astype(jnp.float32),
+                     cfg.vocab)
+    length = jnp.full((B,), min(S, cache_len) if window else S, jnp.int32)
+    kv_cache = None
+    if kv is not None:
+        kv_cache = KVCache(k=kv[0], v=kv[1], length=length)
+    if ssm_st is not None or lru_st is not None:
+        length = jnp.full((B,), S, jnp.int32)
+    return last, DecodeState(kv=kv_cache, ssm=ssm_st, lru=lru_st)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token)
+
+
+def _decode_attn_layer(lp, cfg, x, k_cache, v_cache, length, mesh, rules,
+                       window=None):
+    """x: [B,1,D].  Returns (x, new_k, new_v)."""
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    pos = (jnp.minimum(length, window - 1) if window else length)
+    q, k, v = attn.qkv_proj(lp["attn"], h, length[:, None], cfg.rope_theta)
+    if window:
+        # ring buffer: write slot = length mod window
+        slot = length % window
+        k_cache, v_cache = attn.cache_update_local(k_cache, v_cache, k, v,
+                                                   slot)
+        kv_pos = jnp.arange(window)
+        # validity: slots < min(length+1, window); window masking by recency
+        o = attn.decode_attend_local(
+            q[:, 0], k_cache, v_cache, kv_pos,
+            jnp.minimum(length + 1, window), window=None)
+    else:
+        k_cache, v_cache = attn.cache_update_local(k_cache, v_cache, k, v,
+                                                   length)
+        if mesh is not None and "model" in mesh.axis_names:
+            o = attn.decode_attend_partitioned(
+                q[:, 0], k_cache, v_cache, length + 1, mesh)
+        else:
+            kv_pos = jnp.arange(k_cache.shape[1])
+            o = attn.decode_attend_local(q[:, 0], k_cache, v_cache, kv_pos,
+                                         length + 1)
+    x = x + attn.out_proj(lp["attn"], o[:, None])
+    return x, k_cache, v_cache
+
+
+def _idx(tree, i):
+    return jax.tree.map(
+        lambda t: jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False),
+        tree)
+
+
+def _upd(tree, sub, i):
+    return jax.tree.map(
+        lambda t, s: jax.lax.dynamic_update_index_in_dim(t, s, i, 0),
+        tree, sub)
+
+
+def decode_step(params, cfg: ArchConfig, tokens, state: DecodeState, *,
+                mesh=None, rules: AxisRules = None):
+    """tokens: [B,1].  Returns (logits [B,V] f32, new DecodeState).
+
+    Layer iteration is a fori_loop carrying the stacked caches and
+    updating them in place with dynamic_update_slice: with the state
+    donated, XLA aliases the carry and the multi-GB KV cache is never
+    copied (a lax.scan with cache xs/ys materializes two extra copies —
+    measured in EXPERIMENTS.md §Dry-run notes).
+    """
+    x = L.embed(params["embed"], tokens, cfg.cdtype, rules)
+    window = cfg.hybrid.window if cfg.family == "hybrid" else None
+
+    new_kv = new_ssm = new_lru = None
+    if cfg.family == "ssm":
+        def body(i, carry):
+            x, st = carry
+            lp = _idx(params["stack"], i)
+            h = L.apply_norm(lp["ln1"], x, cfg.norm)
+            y, nst = ssm_lib.decode_ssm(lp["ssm"], h, cfg, _idx(st, i))
+            return (x + y, _upd(st, nst, i))
+        x, new_ssm = jax.lax.fori_loop(0, cfg.n_layers, body,
+                                       (x, state.ssm))
+    elif cfg.family == "hybrid":
+        ng = cfg.n_layers // 3
+
+        def rec_one(lp, x, st):
+            h = L.apply_norm(lp["ln1"], x, cfg.norm)
+            y, nst = rglru_lib.decode_rglru(lp["rec"], h, st)
+            x = x + y
+            x, _ = _apply_mlp(lp, cfg, x, rules)
+            return x, nst
+
+        def gbody(i, carry):
+            x, lru, kc, vc = carry
+            gp = _idx(params["groups"], i)
+            x, n1 = rec_one(gp["rec1"], x, _idx(lru, 2 * i))
+            lru = _upd(lru, n1, 2 * i)
+            x, n2 = rec_one(gp["rec2"], x, _idx(lru, 2 * i + 1))
+            lru = _upd(lru, n2, 2 * i + 1)
+            x, nk, nv = _decode_attn_layer(
+                gp["attn"], cfg, x, _idx(kc, i), _idx(vc, i),
+                state.kv.length, mesh, rules, window=window)
+            x, _ = _apply_mlp(gp["attn"], cfg, x, rules)
+            return (x, lru, _upd(kc, nk, i), _upd(vc, nv, i))
+
+        x, lru, kc, vc = jax.lax.fori_loop(
+            0, ng, gbody, (x, state.lru, state.kv.k, state.kv.v))
+        if "tail" in params:
+            def tbody(i, carry):
+                x, lru = carry
+                lp = _idx(params["tail"], i)
+                x, nst = rec_one(lp, x, _idx(lru, 2 * ng + i))
+                return (x, _upd(lru, nst, 2 * ng + i))
+            x, lru = jax.lax.fori_loop(0, cfg.n_layers % 3, tbody,
+                                       (x, lru))
+        new_lru, new_kv = lru, (kc, vc)
+    else:
+        kind = layer_plan(cfg)[0]
+
+        def body(i, carry):
+            x, kc, vc = carry
+            lp = _idx(params["stack"], i)
+            x, nk, nv = _decode_attn_layer(
+                lp, cfg, x, _idx(kc, i), _idx(vc, i), state.kv.length,
+                mesh, rules, window=window)
+            x, _ = _apply_mlp(lp, cfg, x, rules)
+            return (x, _upd(kc, nk, i), _upd(vc, nv, i))
+        x, kc, vc = jax.lax.fori_loop(
+            0, cfg.n_layers, body, (x, state.kv.k, state.kv.v))
+        new_kv = (kc, vc)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x[:, 0].astype(jnp.float32),
+                       cfg.vocab)
+    new_state = DecodeState(
+        kv=(KVCache(k=new_kv[0], v=new_kv[1], length=state.kv.length + 1)
+            if new_kv is not None else None),
+        ssm=new_ssm, lru=new_lru)
+    return logits, new_state

@@ -1,0 +1,2 @@
+from repro.serve.engine import (ContinuousBatcher, Request,  # noqa
+                                make_decode_step, make_prefill_step)

@@ -1,0 +1,153 @@
+"""Serving engine: prefill/decode steps + continuous batching.
+
+The decode step is the paper's technique as a first-class serving feature
+(DESIGN.md §4): B independent requests are the FPP queries, the KV cache
+sharded over the "model" axis is the partitioned shared structure, and each
+decode step is one buffered partition visit with an LSE psum as the
+boundary-op exchange (models/attention.decode_attend_partitioned).
+
+``ContinuousBatcher`` keeps the decode batch full: a finished sequence's
+slot is refilled by running prefill for the next queued request at
+batch=1 and *inserting* the resulting cache into the slot (per-sequence
+lengths make the insert exact) — inter-query parallelism with no
+head-of-line blocking, the serving twin of Alg. 2's dynamic partition
+scheduling.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.factory import Model
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(model: Model, *, max_len: int, rules=None):
+    def prefill_step(params, batch):
+        logits, state = model.prefill(params, batch, max_len=max_len,
+                                      rules=rules)
+        return greedy_sample(logits), state
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, mesh=None, rules=None):
+    def decode_step(params, tokens, state):
+        logits, state = model.decode(params, tokens, state, mesh=mesh,
+                                     rules=rules)
+        return greedy_sample(logits)[:, None], logits, state
+    return decode_step
+
+
+def insert_slot(state, pstate, slot: int):
+    """Write a batch=1 prefill state into batch slot ``slot``."""
+    def ins(dst, src):
+        # batch dim: KVCache k/v [L,B,S,...] -> axis 1; length [B] -> 0;
+        # ssm/lru leaves [L,B,...] -> axis 1
+        if dst.ndim == 1:
+            return dst.at[slot].set(src[0])
+        return dst.at[:, slot].set(src[:, 0])
+    return jax.tree.map(ins, state, pstate)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [T] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    extras: Optional[dict] = None  # vlm image_embeds / encdec frames
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    rid: int = -1
+    remaining: int = 0
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, params, batch_size: int, max_len: int,
+                 *, mesh=None, rules=None, decode_fn=None,
+                 prefill_fn=None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.state = model.decode_state_init(batch_size, max_len)
+        self.slots: List[SlotInfo] = [SlotInfo() for _ in range(batch_size)]
+        self.queue: collections.deque = collections.deque()
+        self.requests: Dict[int, Request] = {}
+        self.tokens = np.zeros((batch_size, 1), np.int32)
+        self._decode = decode_fn or jax.jit(
+            make_decode_step(model, mesh=mesh, rules=rules))
+        self._prefill = prefill_fn or make_prefill_step(
+            model, max_len=max_len, rules=rules)
+        self.steps = 0
+        self.tokens_out = 0
+
+    def submit(self, req: Request):
+        self.requests[req.rid] = req
+        self.queue.append(req.rid)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slots[slot].rid == -1 and self.queue:
+                rid = self.queue.popleft()
+                req = self.requests[rid]
+                batch = {"tokens": jnp.asarray(req.prompt[None, :],
+                                               jnp.int32)}
+                if req.extras:
+                    batch.update({k: jnp.asarray(v[None])
+                                  for k, v in req.extras.items()})
+                first, pstate = self._prefill(self.params, batch)
+                self.state = insert_slot(self.state, pstate, slot)
+                tok = int(np.asarray(first)[0])
+                req.generated.append(tok)
+                self.tokens_out += 1
+                self.tokens[slot, 0] = tok
+                self.slots[slot] = SlotInfo(
+                    rid=rid, remaining=req.max_new_tokens - 1)
+
+    def step(self) -> bool:
+        self._admit()
+        if not any(s.rid != -1 for s in self.slots):
+            return False
+        nxt, logits, self.state = self._decode(
+            self.params, jnp.asarray(self.tokens), self.state)
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        for slot, info in enumerate(self.slots):
+            if info.rid == -1:
+                continue
+            req = self.requests[info.rid]
+            tok = int(nxt[slot, 0])
+            req.generated.append(tok)
+            self.tokens_out += 1
+            info.remaining -= 1
+            if info.remaining <= 0 or (req.eos_id is not None
+                                       and tok == req.eos_id):
+                req.done = True
+                self.slots[slot] = SlotInfo()
+            else:
+                self.tokens[slot, 0] = tok
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        while (any(s.rid != -1 for s in self.slots) or self.queue) \
+                and self.steps < max_steps:
+            if not self.step():
+                break
+        return {r.rid: r.generated for r in self.requests.values()}

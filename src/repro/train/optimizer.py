@@ -1,0 +1,125 @@
+"""AdamW + schedules, built from scratch (no optax dependency).
+
+Optimizer state is a pytree congruent with params, so it inherits the
+params' 2-D (TP x FSDP) sharding for free — optimizer-state sharding is
+what makes the 123B configs fit (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdamState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array
+    # f32 master weights when params are kept in bf16 (mixed-precision
+    # recipe: fwd/bwd move bf16 — half the FSDP gather bytes and half the
+    # weight-grad-partial temps — while the update stays f32-exact)
+    master: Optional[dict] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                             params)
+        needs_master = any(p.dtype != jnp.float32
+                           for p in jax.tree.leaves(params))
+        master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                  if needs_master else None)
+        return AdamState(mu=zeros,
+                         nu=jax.tree.map(jnp.zeros_like, zeros),
+                         count=jnp.zeros((), jnp.int32), master=master)
+
+    def update(self, grads, state: AdamState, params, lr):
+        scale = jnp.float32(1.0)
+        if self.clip_norm is not None:
+            # fused clip: scale inside the update instead of materializing
+            # a clipped copy of the full gradient tree
+            norm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(norm, 1e-9))
+        count = state.count + 1
+        tf = count.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** tf
+        bc2 = 1.0 - self.b2 ** tf
+
+        def upd(g, m, n, p, w):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            n = self.b2 * n + (1 - self.b2) * g * g
+            mhat = m / bc1
+            nhat = n / bc2
+            step = mhat / (jnp.sqrt(nhat) + self.eps)
+            w32 = p.astype(jnp.float32) if w is None else w
+            step = step + self.weight_decay * w32
+            new_w = w32 - lr * step
+            return new_w.astype(p.dtype), m, n, new_w
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        mflat = treedef.flatten_up_to(state.mu)
+        nflat = treedef.flatten_up_to(state.nu)
+        wflat = (treedef.flatten_up_to(state.master)
+                 if state.master is not None else [None] * len(flat))
+        out = [upd(g, m, n, p, w)
+               for g, m, n, p, w in zip(gflat, mflat, nflat, flat, wflat)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_n = treedef.unflatten([o[2] for o in out])
+        master = (treedef.unflatten([o[3] for o in out])
+                  if state.master is not None else None)
+        return new_p, AdamState(mu=new_m, nu=new_n, count=count,
+                                master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale)
+                        .astype(x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.float32(base_lr)
+
+
+def rsqrt(base_lr: float, warmup: int = 1000):
+    def lr(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return base_lr * jnp.minimum(s / warmup, jnp.sqrt(warmup / s))
+    return lr

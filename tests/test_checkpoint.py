@@ -1,0 +1,119 @@
+"""Fault tolerance: checkpoint integrity, atomic commit, bitwise resume."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.configs.shapes import ShapeConfig
+from repro.models.factory import build_model
+from repro.train import checkpoint as ck
+from repro.train.data import batch_for_step
+from repro.train.loop import LoopConfig, run_loop
+from repro.train.optimizer import AdamW, constant
+from repro.train.train_step import init_train_state, make_train_step
+
+CFG = get_config("starcoder2-7b").reduced()
+SHAPE = ShapeConfig("t", "train", 32, 4)
+
+
+def _state():
+    return init_train_state(build_model(CFG), jax.random.PRNGKey(0),
+                            AdamW())
+
+
+def test_roundtrip(tmp_path):
+    state = _state()
+    ck.save(str(tmp_path), 3, state, extra={"note": "hi"})
+    got, step, extra = ck.restore(str(tmp_path), target=state)
+    assert step == 3 and extra == {"note": "hi"}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_crc_detects_corruption(tmp_path):
+    state = _state()
+    path = ck.save(str(tmp_path), 1, state)
+    # corrupt one leaf file
+    files = [f for f in os.listdir(path) if f.endswith(".npy")]
+    victim = os.path.join(path, sorted(files)[0])
+    with open(victim, "r+b") as f:
+        f.seek(-4, 2)
+        f.write(b"\x00\x01\x02\x03")
+    with pytest.raises(IOError, match="CRC"):
+        ck.restore(str(tmp_path), target=state)
+
+
+def test_interrupted_write_leaves_previous_checkpoint(tmp_path):
+    state = _state()
+    ck.save(str(tmp_path), 1, state)
+    # simulate a writer killed mid-save: stray tmp dir with partial files
+    tmp_dir = os.path.join(str(tmp_path), "tmp.2")
+    os.makedirs(tmp_dir)
+    with open(os.path.join(tmp_dir, "partial.npy"), "wb") as f:
+        f.write(b"garbage")
+    assert ck.latest_step(str(tmp_path)) == 1
+    got, step, _ = ck.restore(str(tmp_path), target=state)
+    assert step == 1
+
+
+def test_missing_leaf_raises(tmp_path):
+    state = _state()
+    ck.save(str(tmp_path), 1, {"only": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), target=state)
+
+
+def test_async_checkpointer_gc(tmp_path):
+    acp = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.arange(8)}
+    for s in (1, 2, 3, 4):
+        acp.save(s, tree)
+        acp.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_bitwise_resume_after_failure(tmp_path):
+    model = build_model(CFG)
+    opt = AdamW()
+    ts = jax.jit(make_train_step(model, opt, constant(3e-3)),
+                 donate_argnums=0)
+    data = lambda s: batch_for_step(CFG, SHAPE, s)   # noqa: E731
+    full, _ = run_loop(ts, _state(), data,
+                       LoopConfig(n_steps=8, ckpt_dir=None,
+                                  log_every=100), log=lambda *a: None)
+
+    class Boom(Exception):
+        pass
+
+    def fault(step):
+        if step == 6:
+            raise Boom()
+
+    lc = LoopConfig(n_steps=8, ckpt_every=4, ckpt_dir=str(tmp_path),
+                    log_every=100)
+    with pytest.raises(Boom):
+        run_loop(ts, _state(), data, lc, log=lambda *a: None,
+                 fault_hook=fault)
+    resumed, stats = run_loop(ts, _state(), data, lc,
+                              log=lambda *a: None)
+    assert stats.restored_step == 4
+    for a, b in zip(jax.tree.leaves(full.params),
+                    jax.tree.leaves(resumed.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resharding_restore_dtype_cast(tmp_path):
+    """A checkpoint restores onto a target with different leaf dtype
+    (elastic re-mesh writes/restores through host arrays)."""
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    ck.save(str(tmp_path), 1, tree)
+    target = {"w": jax.ShapeDtypeStruct((16,), jnp.bfloat16)}
+    got, _, _ = ck.restore(str(tmp_path), target=target)
+    assert got["w"].dtype == jnp.bfloat16

@@ -1,0 +1,163 @@
+"""Engine correctness: buffered execution vs sequential oracles.
+
+The paper's central correctness claim (§5.1): yielding + priority scheduling
+never change results — processing is exact.  We verify exactness across
+scheduling policies, yield settings, graph families and query batches.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import oracles
+from repro.core.engine import FPPEngine
+from repro.core.partition import partition
+from repro.core.queries import prepare, run_bfs, run_ppr, run_sssp
+from repro.core.yielding import NO_YIELD, YieldConfig
+from repro.graphs.generators import erdos_renyi, grid2d, rmat
+
+
+def _check_sssp(g, bg, perm, srcs, res, atol=1e-3):
+    for qi, s in enumerate(srcs):
+        d_or, _ = oracles.dijkstra(g, int(s))
+        d_eng = res.values[qi][perm]
+        np.testing.assert_allclose(np.nan_to_num(d_eng, posinf=1e30),
+                                   np.nan_to_num(d_or, posinf=1e30),
+                                   atol=atol)
+
+
+@pytest.mark.parametrize("schedule", ["priority", "fifo", "random", "max_ops"])
+def test_sssp_exact_all_policies(schedule):
+    g = grid2d(12, 12, seed=0)
+    bg, perm = partition(g, 32, method="bfs")
+    srcs = np.array([0, 70, 143])
+    res = run_sssp(bg, perm[srcs], schedule=schedule)
+    _check_sssp(g, bg, perm, srcs, res)
+
+
+@pytest.mark.parametrize("yc", [
+    NO_YIELD,
+    YieldConfig(delta=1.0),
+    YieldConfig(delta=8.0),
+    YieldConfig(mu_factor=0.25),
+    YieldConfig(mu_factor=4.0),
+    YieldConfig(mu_factor=1.0, delta=2.0),
+    YieldConfig(max_rounds=1),
+])
+def test_sssp_exact_all_yield_configs(yc):
+    """Yielding pauses work but never changes results (paper §5.1)."""
+    g = rmat(8, 6, seed=1)
+    bg, perm = partition(g, 64, method="bfs")
+    srcs = np.array([3, 99])
+    res = run_sssp(bg, perm[srcs], yield_config=yc)
+    _check_sssp(g, bg, perm, srcs, res)
+
+
+@pytest.mark.parametrize("method", ["bfs", "random", "degree", "natural"])
+def test_sssp_exact_all_partition_methods(method):
+    g = erdos_renyi(300, 4.0, seed=2)
+    bg, perm = partition(g, 64, method=method)
+    srcs = np.array([5, 250])
+    res = run_sssp(bg, perm[srcs], schedule="priority")
+    _check_sssp(g, bg, perm, srcs, res)
+
+
+def test_bfs_levels_exact():
+    g = rmat(8, 4, seed=3, weighted=False)
+    bg, perm = prepare(g, 64, unit_weights=True)
+    srcs = np.array([0, 17, 200])
+    res = run_bfs(bg, perm[srcs])
+    for qi, s in enumerate(srcs):
+        d_or, _ = oracles.bfs(g, int(s))
+        d_eng = res.values[qi][perm]
+        d_eng = np.where(np.isfinite(d_eng), d_eng, -1).astype(np.int32)
+        assert (d_or == d_eng).all()
+
+
+def test_disconnected_components_stay_inf():
+    # two disjoint cliques
+    src = [0, 1, 2, 5, 6, 7]
+    dst = [1, 2, 0, 6, 7, 5]
+    from repro.core.graph import CSRGraph
+    g = CSRGraph.from_edges(8, src, dst, symmetrize=True)
+    bg, perm = partition(g, 4, method="natural")
+    res = run_sssp(bg, perm[np.array([0])])
+    d = res.values[0][perm]
+    assert np.isfinite(d[:3]).all() and np.isinf(d[5:]).all()
+
+
+def test_single_vertex_source_trivial():
+    from repro.core.graph import CSRGraph
+    g = CSRGraph.from_edges(3, [0], [1], [2.0])
+    bg, perm = partition(g, 4, method="natural")
+    res = run_sssp(bg, perm[np.array([2])])  # source with no out-edges
+    d = res.values[0][perm]
+    assert d[2] == 0 and np.isinf(d[0]) and np.isinf(d[1])
+
+
+def test_ppr_invariants_and_accuracy():
+    g = rmat(8, 8, seed=4)
+    eps, alpha = 1e-5, 0.15
+    bg, perm = partition(g, 64, method="bfs")
+    deg = g.out_degree()
+    srcs = np.random.default_rng(0).choice(np.flatnonzero(deg > 0), 4,
+                                           replace=False)
+    res = run_ppr(bg, perm[srcs], alpha=alpha, eps=eps)
+    # exact PPR by dense power iteration
+    A = np.zeros((g.n, g.n))
+    s_, d_, _ = g.edges()
+    A[s_, d_] = 1.0
+    Pm = A / np.maximum(A.sum(1), 1)[:, None]
+    for qi, s in enumerate(srcs):
+        p_eng = res.values[qi][perm]
+        r_eng = res.residual[qi][perm]
+        # mass conservation (f32 accumulation tolerance)
+        assert abs(p_eng.sum() + r_eng.sum() - 1.0) < 5e-3
+        # ACL terminal condition: r < eps * deg everywhere
+        assert (r_eng <= eps * np.maximum(deg, 1) + 1e-7).all()
+        # deg-normalized error vs exact <= O(eps)
+        e = np.zeros(g.n)
+        e[s] = 1.0
+        pi, x = np.zeros(g.n), e
+        for _ in range(300):
+            pi += alpha * x
+            x = (1 - alpha) * (x @ Pm)
+        err = np.abs(p_eng - pi) / np.maximum(deg, 1)
+        assert err.max() <= eps * 2
+
+
+def test_ppr_empty_when_converged():
+    """After the run every partition buffer is drained (termination cond)."""
+    g = grid2d(8, 8, seed=5)
+    bg, perm = partition(g, 32)
+    res = run_ppr(bg, perm[np.array([0, 10])], eps=1e-3)
+    assert res.stats.visits > 0
+
+
+def test_work_accounting_positive_and_bounded():
+    g = grid2d(16, 16, seed=6)
+    bg, perm = partition(g, 64)
+    srcs = np.array([0, 100])
+    res = run_sssp(bg, perm[srcs])
+    d_or, oracle_edges = oracles.dijkstra(g, 0)
+    assert (res.edges_processed > 0).all()
+    # paper Appendix A: within small constant factor of sequential
+    assert res.edges_processed.mean() < 40 * oracle_edges
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_sssp_property_random_graphs(data):
+    """Fixed shapes (one jit compile), random structure/weights/sources."""
+    n, B = 48, 16
+    nedges = data.draw(st.integers(20, 150))
+    rng_seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(rng_seed)
+    src = rng.integers(0, n, nedges)
+    dst = rng.integers(0, n, nedges)
+    w = rng.uniform(0.5, 4.0, nedges).astype(np.float32)
+    from repro.core.graph import CSRGraph
+    g = CSRGraph.from_edges(n, src, dst, w)
+    bg, perm = partition(g, B, method="natural")
+    srcs = rng.choice(n, 2, replace=False)
+    res = run_sssp(bg, perm[srcs], yield_config=YieldConfig(delta=1.0))
+    _check_sssp(g, bg, perm, srcs, res)

@@ -1,0 +1,88 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret=True) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.frontier.ops import frontier_pallas
+from repro.kernels.frontier.ref import frontier_ref
+from repro.kernels.ppr_push.ops import ppr_push_pallas
+from repro.kernels.ppr_push.ref import ppr_push_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,hd,causal,window", [
+    (2, 64, 64, 4, 4, 32, True, None),     # MHA causal
+    (1, 48, 80, 4, 2, 16, True, None),     # GQA, cross lengths, pad path
+    (2, 32, 32, 8, 1, 64, False, None),    # MQA non-causal
+    (1, 128, 128, 4, 4, 32, True, 32),     # windowed (recurrentgemma)
+    (1, 16, 300, 2, 2, 8, False, None),    # KV padding (1500-frame-like)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Skv, H, Hkv, hd, causal, window,
+                               dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    g = H // Hkv
+    kr, vr = jnp.repeat(k, g, 2), jnp.repeat(v, g, 2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * H, Skv, hd)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * H, Skv, hd)
+    want = flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    want = want.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol)
+
+
+@pytest.mark.parametrize("Q,B", [(8, 32), (17, 64), (128, 128), (1, 16)])
+@pytest.mark.parametrize("delta", [0.5, 2.0, np.inf])
+def test_frontier_sweep(Q, B, delta):
+    buf = jnp.asarray(np.where(RNG.random((Q, B)) < 0.6, np.inf,
+                               RNG.random((Q, B)) * 9), jnp.float32)
+    dist = jnp.asarray(np.where(RNG.random((Q, B)) < 0.5, np.inf,
+                                RNG.random((Q, B)) * 9), jnp.float32)
+    got = frontier_pallas(buf, dist, delta=float(delta))
+    want = frontier_ref(buf, dist, delta=float(delta))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.nan_to_num(np.asarray(g), posinf=1e30),
+            np.nan_to_num(np.asarray(w), posinf=1e30), rtol=1e-6)
+
+
+@pytest.mark.parametrize("Q,B", [(8, 32), (25, 64), (128, 128)])
+@pytest.mark.parametrize("alpha,eps", [(0.15, 1e-4), (0.5, 1e-2)])
+def test_ppr_push_sweep(Q, B, alpha, eps):
+    p = jnp.asarray(RNG.random((Q, B)), jnp.float32) * 0.05
+    r = jnp.asarray(RNG.random((Q, B)), jnp.float32) * 0.02
+    acc = jnp.asarray(RNG.random((Q, B)), jnp.float32) * 0.01
+    w = jnp.asarray(np.where(RNG.random((B, B)) < 0.85, np.inf,
+                             RNG.random((B, B))), jnp.float32)
+    deg = jnp.asarray(np.isfinite(np.asarray(w)).sum(1), jnp.float32)
+    got = ppr_push_pallas(p, r, acc, w, deg, alpha=alpha, eps=eps)
+    want = ppr_push_ref(p, r, acc, w, deg[None], alpha=alpha, eps=eps)
+    for g, wv in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wv),
+                                   atol=1e-6)
+
+
+def test_flash_attention_used_as_model_attention():
+    """The kernel slots into the model attention contract (same output as
+    models/attention.attend)."""
+    from repro.models.attention import attend
+    B, S, H, Hkv, hd = 2, 32, 4, 2, 16
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    pos = jnp.arange(S)
+    want = attend(q, k, v, pos, pos, causal=True, chunk=8)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)

@@ -1,0 +1,155 @@
+"""Train substrate: optimizer math, compression, data, loop behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, get_config
+from repro.configs.shapes import ShapeConfig
+from repro.models.factory import build_model
+from repro.train.compress import (compress_with_error_feedback,
+                                  dequantize_int8, quantize_int8)
+from repro.train.data import DataConfig, batch_for_step, host_slice
+from repro.train.loop import LoopConfig, run_loop
+from repro.train.optimizer import (AdamW, clip_by_global_norm, constant,
+                                   global_norm, rsqrt, warmup_cosine)
+from repro.train.train_step import init_train_state, make_train_step
+
+CFG = get_config("starcoder2-7b").reduced()
+SHAPE = ShapeConfig("t", "train", 32, 4)
+
+
+def test_adamw_matches_reference_update():
+    """One AdamW step on a scalar matches the closed-form update."""
+    opt = AdamW(b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                clip_norm=None)
+    params = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.5])}
+    st = opt.init(params)
+    new_p, st2 = opt.update(g, st, params, lr=0.1)
+    m = 0.1 * 0.5 / (1 - 0.9)          # bias-corrected first moment
+    v = 0.01 * 0.25 / (1 - 0.99)
+    want = 2.0 - 0.1 * m / (np.sqrt(v) + 1e-8)
+    assert np.allclose(float(new_p["w"][0]), want, rtol=1e-6)
+    assert int(st2.count) == 1
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    opt = AdamW(weight_decay=0.5, clip_norm=None)
+    params = {"w": jnp.asarray([10.0])}
+    st = opt.init(params)
+    p, st = opt.update({"w": jnp.zeros(1)}, st, params, lr=0.1)
+    assert float(p["w"][0]) < 10.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    n = float(global_norm(tree))
+    clipped = clip_by_global_norm(tree, n / 2)
+    assert np.isclose(float(global_norm(clipped)), n / 2, rtol=1e-5)
+    same = clip_by_global_norm(tree, n * 2)
+    assert np.isclose(float(global_norm(same)), n, rtol=1e-6)
+
+
+def test_master_weights_bf16_params_converge():
+    """bf16 params + f32 master: training still reduces loss."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, param_dtype="bfloat16")
+    model = build_model(cfg)
+    opt = AdamW()
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    assert state.opt.master is not None
+    ts = jax.jit(make_train_step(model, opt, constant(3e-3)))
+    losses = []
+    for step in range(8):
+        state, m = ts(state, batch_for_step(cfg, SHAPE, step))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    # params remain the bf16 image of the master weights
+    leaf = jax.tree.leaves(state.params)[0]
+    assert leaf.dtype == jnp.bfloat16
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)) * 3.0, jnp.float32)
+    q, s = quantize_int8(x)
+    err = float(jnp.max(jnp.abs(dequantize_int8(q, s) - x)))
+    assert err <= float(s) / 2 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """With EF, the accumulated applied update approaches the true sum."""
+    rng = np.random.default_rng(1)
+    g_true = [jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+              for _ in range(50)]
+    ef = {"g": jnp.zeros((64,))}
+    applied = jnp.zeros((64,))
+    for g in g_true:
+        out, ef_new = compress_with_error_feedback({"g": g}, ef)
+        ef = ef_new
+        applied = applied + out["g"]
+    true_sum = sum(g_true)
+    # residual bounded by one quantization step, not accumulating
+    resid = float(jnp.max(jnp.abs(applied + ef["g"] - true_sum)))
+    assert resid < 1e-4
+
+
+def test_compressed_training_converges():
+    model = build_model(CFG)
+    opt = AdamW()
+    state = init_train_state(model, jax.random.PRNGKey(0), opt,
+                             compression=True)
+    ts = jax.jit(make_train_step(model, opt, constant(3e-3),
+                                 compression=True))
+    losses = []
+    for step in range(10):
+        state, m = ts(state, batch_for_step(CFG, SHAPE, step))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_data_is_deterministic_and_host_shardable():
+    b1 = batch_for_step(CFG, SHAPE, 7)
+    b2 = batch_for_step(CFG, SHAPE, 7)
+    assert all(bool(jnp.all(b1[k] == b2[k])) for k in b1)
+    b3 = batch_for_step(CFG, SHAPE, 8)
+    assert not bool(jnp.all(b1["tokens"] == b3["tokens"]))
+    s0 = host_slice(b1, 0, 2)
+    s1 = host_slice(b1, 1, 2)
+    assert s0["tokens"].shape[0] == SHAPE.global_batch // 2
+    assert bool(jnp.all(jnp.concatenate([s0["tokens"], s1["tokens"]])
+                        == b1["tokens"]))
+
+
+def test_loop_detects_stragglers():
+    import time
+    model = build_model(CFG)
+    opt = AdamW()
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    ts = jax.jit(make_train_step(model, opt, constant(1e-3)))
+    events = []
+    counter = {"n": 0}
+
+    def slow_step(state, batch):
+        counter["n"] += 1
+        if counter["n"] == 15:
+            time.sleep(1.0)       # simulated slow host inside the step
+        return ts(state, batch)
+
+    lc = LoopConfig(n_steps=16, ckpt_dir=None, log_every=100,
+                    straggler_factor=3.0)
+    _, stats = run_loop(slow_step, state,
+                        lambda s: batch_for_step(CFG, SHAPE, s), lc,
+                        log=lambda *a: None,
+                        on_straggler=lambda *a: events.append(a))
+    assert stats.straggler_events >= 1 and events
+
+
+def test_lr_schedules():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert np.isclose(float(lr(jnp.int32(10))), 1.0, atol=0.01)
+    assert float(lr(jnp.int32(100))) < 0.2
+    r = rsqrt(1.0, warmup=100)
+    assert float(r(jnp.int32(400))) == pytest.approx(0.5)
