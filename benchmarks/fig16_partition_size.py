@@ -2,14 +2,16 @@
 
 The paper finds LLC-sized partitions optimal: larger thrashes the cache,
 smaller multiplies scheduling overhead.  The TPU analogue sweeps the VMEM
-block size B; the modeled-traffic curve shows the same U-shape driver
-(visits x block bytes).
+block size B via the planner's measurement unit and marks the size the
+planner's autotune objective (modeled traffic — the U-shape driver:
+visits x block bytes) would pick.
 """
 from __future__ import annotations
 
-from benchmarks.common import rnd, sources_for, timed
+from benchmarks.common import rnd, sources_for
 from repro.core.partition import edge_cut_fraction
-from repro.core.queries import prepare, run_sssp
+from repro.fpp import FPPSession
+from repro.fpp.planner import autotune_block_size
 from repro.graphs.generators import build_suite
 
 
@@ -17,19 +19,24 @@ def run(quick: bool = True):
     g = build_suite("road-ca")
     nq = 16 if quick else 64
     srcs = sources_for(g, nq, seed=9)
-    rows = []
+    sess = FPPSession(g).plan(num_queries=nq, method="bfs")
     sizes = (128, 256, 512) if quick else (64, 128, 256, 512, 1024)
-    for bs in sizes:
-        bg, perm = prepare(g, bs)
-        res, secs = timed(run_sssp, bg, perm[srcs])
+    best, tune_rows = autotune_block_size(sess, "sssp", srcs, sess.mem,
+                                          candidates=sizes)
+    rows = []
+    for row in tune_rows:
+        bs = row["block_size"]
+        bg, _ = sess.prepared(block_size=bs)
         rows.append({
             "block_size": bs, "partitions": bg.num_parts,
             "edge_cut": rnd(edge_cut_fraction(bg), 3),
-            "runtime_s": rnd(secs), "visits": res.stats.visits,
-            "traffic_GB": rnd(res.stats.modeled_bytes / 1e9, 4),
-            "edges_per_q": rnd(res.edges_processed.mean(), 0)})
+            "runtime_s": rnd(row["runtime_s"]),
+            "visits": row["visits"],
+            "traffic_GB": rnd(row["traffic_bytes"] / 1e9, 4),
+            "edges_per_q": rnd(row["edges_per_q"], 0),
+            "picked": "yes" if bs == best else ""})
     return rows
 
 
 COLUMNS = ["block_size", "partitions", "edge_cut", "runtime_s", "visits",
-           "traffic_GB", "edges_per_q"]
+           "traffic_GB", "edges_per_q", "picked"]

@@ -1,18 +1,18 @@
 """Figure 9 / Table 3 analogue: overall application performance.
 
 BC / LL / NCP on road + social graphs: ForkGraph vs the global-frontier
-baseline (the Ligra-like t=1 scheme).  The paper reports normalized time;
-we report wall seconds, speedup, and the modeled-traffic reduction.
+baseline (the Ligra-like t=1 scheme).  Both sides go through one
+``FPPSession`` — the backend is the only thing that changes — so the
+comparison is guaranteed to run identical query sets on identical
+partitions.  The paper reports normalized time; we report wall seconds,
+speedup, and the modeled-traffic reduction.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import rnd, sources_for, timed
-from repro.core.applications import betweenness_centrality, \
-    landmark_labeling, ncp
-from repro.core.baselines import global_minplus, global_push
-from repro.core.queries import prepare
+from repro.fpp import FPPSession
 from repro.graphs.generators import build_suite
 
 
@@ -25,42 +25,43 @@ def run(quick: bool = True):
     n_ncp = 8 if quick else 32
     for gname in graphs:
         g = build_suite(gname)
+        sess = FPPSession(g).plan(num_queries=max(n_bc, n_ll, n_ncp),
+                                  block_size=256, method="bfs")
         # --- BC (BFS family) ---
         srcs = sources_for(g, n_bc, seed=2)
-        (bc, res), secs = timed(betweenness_centrality, g, srcs)
-        bgu, perm = prepare(g, 256, unit_weights=True)
-        base, bsecs = timed(global_minplus, bgu, perm[srcs])
+        (bc, res), secs = timed(sess.bc, srcs)
+        base, bsecs = timed(sess.run, "bfs", srcs, backend="baselines")
         rows.append(_row("BC", gname, len(srcs), secs, res, bsecs, base))
         # --- LL (SSSP family) ---
         lm = sources_for(g, n_ll, seed=3)
-        (labels, res), secs = timed(landmark_labeling, g, lm)
-        bgw, perm = prepare(g, 256)
-        base, bsecs = timed(global_minplus, bgw, perm[lm])
-        # exactness vs the synchronous baseline
+        (labels, res), secs = timed(sess.landmarks, lm)
+        base, bsecs = timed(sess.run, "sssp", lm, backend="baselines")
+        # exactness vs the synchronous baseline (same id space both sides)
         err = float(np.nanmax(np.abs(
-            np.where(np.isfinite(res.values[:, perm]),
-                     res.values[:, perm], 0)
+            np.where(np.isfinite(res.values), res.values, 0)
             - np.where(np.isfinite(base.values), base.values, 0))))
         r = _row("LL", gname, len(lm), secs, res, bsecs, base)
         r["max_err"] = rnd(err, 6)
         rows.append(r)
         # --- NCP (PPR family) ---
         seeds = sources_for(g, n_ncp, seed=4)
-        (profile, res), secs = timed(ncp, g, seeds, eps=1e-3)
-        base, bsecs = timed(global_push, bgw, perm[seeds], eps=1e-3)
+        (profile, res), secs = timed(sess.ncp, seeds, eps=1e-3)
+        base, bsecs = timed(sess.run, "ppr", seeds, backend="baselines",
+                            eps=1e-3)
         rows.append(_row("NCP", gname, len(seeds), secs, res, bsecs, base))
     return rows
 
 
 def _row(app, gname, nq, secs, res, bsecs, base):
+    fg_bytes = res.stats.get("modeled_bytes", 0.0)
+    base_bytes = base.stats.get("modeled_bytes", 0.0)
     return {
         "app": app, "graph": gname, "queries": nq,
         "forkgraph_s": rnd(secs), "baseline_s": rnd(bsecs),
         "speedup": rnd(bsecs / max(secs, 1e-9), 2),
-        "fg_traffic_GB": rnd(res.stats.modeled_bytes / 1e9, 4),
-        "base_traffic_GB": rnd(base.modeled_bytes / 1e9, 4),
-        "traffic_red_x": rnd(base.modeled_bytes
-                             / max(res.stats.modeled_bytes, 1e-9), 1),
+        "fg_traffic_GB": rnd(fg_bytes / 1e9, 4),
+        "base_traffic_GB": rnd(base_bytes / 1e9, 4),
+        "traffic_red_x": rnd(base_bytes / max(fg_bytes, 1e-9), 1),
     }
 
 

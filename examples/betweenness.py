@@ -22,7 +22,7 @@ def main():
     bc, res = betweenness_centrality(g, roots)
     top = np.argsort(-bc)[:10]
     print(f"BC on |V|={g.n} with {len(roots)} sampled roots "
-          f"({res.stats.visits} partition visits)")
+          f"({res.stats['visits']} partition visits)")
     print("top-10 central vertices:")
     for v in top:
         print(f"  v={v:6d}  bc={bc[v]:10.2f}")

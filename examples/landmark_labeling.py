@@ -23,7 +23,7 @@ def main():
     landmarks = rng.choice(g.n, 32, replace=False)
     labels, res = landmark_labeling(g, landmarks)
     print(f"labeled {len(landmarks)} landmarks on |V|={g.n}: "
-          f"{res.stats.visits} partition visits, "
+          f"{res.stats['visits']} partition visits, "
           f"{res.edges_processed.mean():.0f} edges/landmark")
 
     # distance estimates are upper bounds that tighten with more landmarks

@@ -1,9 +1,9 @@
 """Network community profile (paper application NCP, §6.1).
 
 Runs a fleet of personalized PageRanks from random seeds (the paper seeds
-0.01% of vertices; tens of thousands at LiveJournal scale), sweeps each
-PPR vector for its best conductance cut, and reports min conductance per
-cluster-size bin — the NCP curve.
+0.01% of vertices; tens of thousands at LiveJournal scale) through the
+session front door, sweeps each PPR vector for its best conductance cut,
+and reports min conductance per cluster-size bin — the NCP curve.
 
     PYTHONPATH=src python examples/ncp.py
 """
@@ -13,7 +13,7 @@ sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
-from repro.core.applications import ncp  # noqa: E402
+from repro.fpp import FPPSession  # noqa: E402
 from repro.graphs.generators import build_suite  # noqa: E402
 
 
@@ -22,9 +22,10 @@ def main():
     rng = np.random.default_rng(2)
     n_seeds = max(8, g.n // 10_000)      # paper: 0.01% of |V|, min 8 here
     seeds = rng.choice(g.n, n_seeds, replace=False)
-    profile, res = ncp(g, seeds, eps=1e-3)
+    sess = FPPSession(g).plan(num_queries=n_seeds, block_size=256)
+    profile, res = sess.ncp(seeds, eps=1e-3)
     print(f"NCP on |V|={g.n} |E|={g.m} with {n_seeds} PPR seeds: "
-          f"{res.stats.visits} partition visits, "
+          f"{res.stats['visits']} partition visits, "
           f"{res.edges_processed.sum():.0f} edges total")
     print("cluster-size bin -> best conductance:")
     for b, c in enumerate(profile):

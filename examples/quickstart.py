@@ -1,9 +1,9 @@
 """Quickstart: fork-processing on a graph in five minutes.
 
-Builds a weighted road-like graph, launches a *fork-processing pattern* —
+Builds a weighted road-like graph and runs a *fork-processing pattern* —
 many independent SSSP + PPR queries from random sources — through the
-cache-efficient buffered engine (the paper's ForkGraph), and validates
-against sequential oracles.
+unified session front door (``FPPSession``: plan → execute → stream,
+DESIGN.md §3), validating against sequential oracles.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,7 +14,7 @@ sys.path.insert(0, "src")
 import numpy as np  # noqa: E402
 
 from repro.core import oracles  # noqa: E402
-from repro.core.queries import prepare, run_ppr, run_sssp  # noqa: E402
+from repro.fpp import FPPSession  # noqa: E402
 from repro.graphs.generators import grid2d  # noqa: E402
 
 
@@ -23,35 +23,58 @@ def main():
     g = grid2d(64, 64, seed=0)
     print(f"graph: |V|={g.n} |E|={g.m}")
 
-    # 2. partition into VMEM-sized blocks (the paper's LLC-sized
-    #    partitions) — BFS clustering keeps the edge cut low
-    bg, perm = prepare(g, block_size=256)
-    print(f"partitions: {bg.num_parts} x {bg.block_size} vertices")
+    # 2. one session owns the whole pattern: the planner picks a
+    #    VMEM-sized partition (the paper's LLC-sized partitions) and the
+    #    session hides the vertex reordering — original ids in AND out
+    sess = FPPSession(g).plan(num_queries=16, block_size=256)
+    plan = sess.current_plan
+    print(f"plan: B={plan.block_size} method={plan.method} "
+          f"schedule={plan.schedule} "
+          f"working_set={plan.working_set_bytes() / 1e6:.1f} MB")
 
     # 3. fork 16 independent SSSPs (one FPP)
     rng = np.random.default_rng(0)
     sources = rng.choice(g.n, 16, replace=False)
-    res = run_sssp(bg, perm[sources])
-    print(f"SSSP fleet: {res.stats.visits} partition visits, "
+    res = sess.run("sssp", sources)
+    print(f"SSSP fleet: {res.stats['visits']} partition visits, "
           f"{res.edges_processed.mean():.0f} edges/query, "
-          f"{res.stats.modeled_bytes / 1e6:.1f} MB modeled traffic")
+          f"{res.stats['modeled_bytes'] / 1e6:.1f} MB modeled traffic")
 
-    # 4. exactness vs Dijkstra
+    # 4. exactness vs Dijkstra (values already in original vertex ids)
     for qi in (0, 7, 15):
         want, _ = oracles.dijkstra(g, int(sources[qi]))
-        got = res.values[qi][perm]
+        got = res.values[qi]
         assert np.allclose(np.where(np.isfinite(got), got, -1),
                            np.where(np.isfinite(want), want, -1)), qi
     print("SSSP results match Dijkstra exactly")
 
-    # 5. fork 16 PPRs (the NCP workload)
-    resp = run_ppr(bg, perm[sources], eps=1e-4)
-    p0 = resp.values[0][perm]
+    # 5. the same queries through the global-frontier baseline — one word,
+    #    same result contract (this is the paper's comparison system)
+    base = sess.run("sssp", sources, backend="baselines")
+    print(f"baseline traffic {base.stats['modeled_bytes'] / 1e6:.1f} MB vs "
+          f"ForkGraph {res.stats['modeled_bytes'] / 1e6:.1f} MB "
+          f"({base.stats['modeled_bytes'] / res.stats['modeled_bytes']:.1f}x"
+          " reduction)")
+
+    # 6. fork 16 PPRs (the NCP workload)
+    resp = sess.run("ppr", sources, eps=1e-4)
+    p0 = resp.values[0]
     want_p, want_r, _ = oracles.ppr_push(g, int(sources[0]), eps=1e-4)
-    print(f"PPR fleet: {resp.stats.visits} visits; "
+    print(f"PPR fleet: {resp.stats['visits']} visits; "
           f"query0 |support|={np.sum(p0 > 0)}, "
           f"max|p - oracle| = {np.max(np.abs(p0 - want_p)):.2e} "
           "(both are eps-approximations)")
+
+    # 7. queries that arrive over time: stream them into the same engine
+    stream = sess.stream("sssp", capacity=8)
+    first = stream.submit(sources[:8])
+    stream.pump(20)                       # work begins before batch 2 exists
+    second = stream.submit(sources[8:])
+    answers = stream.run()
+    for i, qid in enumerate(first + second):
+        assert np.array_equal(answers[qid], res.values[i]), qid
+    print(f"streaming: staggered arrivals match one-shot exactly "
+          f"({stream.visits} visits)")
     print("quickstart OK")
 
 

@@ -3,6 +3,11 @@
 Per the paper, the FPP phase (the batched graph queries) dominates (>90%) and
 runs on the buffered engine; the per-application gather phases (Brandes
 accumulation, conductance sweeps, label assembly) are host-side numpy.
+
+The query phase goes through the unified ``FPPSession`` front door
+(fpp/session.py, DESIGN.md §3); the gather phases are exposed standalone
+(``bc_accumulate``, ``ncp_profile``) so the session's application methods and
+these legacy entry points share one implementation.
 """
 from __future__ import annotations
 
@@ -11,9 +16,17 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import queries as Q
-from repro.core.graph import BlockGraph, CSRGraph
+from repro.core.graph import CSRGraph
 from repro.core.yielding import YieldConfig
+
+
+def _session(g: CSRGraph, block_size: int, method: str,
+             schedule: str, yield_config: Optional[YieldConfig],
+             num_queries: int):
+    from repro.fpp.session import FPPSession   # lazy: avoid import cycle
+    return FPPSession(g).plan(num_queries=num_queries, block_size=block_size,
+                              method=method, schedule=schedule,
+                              yield_config=yield_config)
 
 
 # ---------------------------------------------------------------------------
@@ -45,23 +58,30 @@ def _sigma_delta(g: CSRGraph, dist: np.ndarray):
     return sigma, delta
 
 
+def bc_accumulate(g: CSRGraph, sources: np.ndarray,
+                  levels: np.ndarray) -> np.ndarray:
+    """Brandes gather phase over per-source BFS levels (original ids).
+
+    ``levels``: float [Q, n], +inf (or any non-finite) = unreachable.
+    """
+    bc = np.zeros(g.n, dtype=np.float64)
+    for qi, s in enumerate(np.asarray(sources)):
+        lev = levels[qi]
+        lev = np.where(np.isfinite(lev), lev, -1).astype(np.int32)
+        _, delta = _sigma_delta(g, lev)
+        delta[s] = 0.0
+        bc += delta
+    return bc
+
+
 def betweenness_centrality(g: CSRGraph, sources: np.ndarray,
                            block_size: int = 256, method: str = "bfs",
                            yield_config: Optional[YieldConfig] = None,
                            schedule: str = "priority"):
     """Approximate BC by |sources| sampled BFS roots (paper: 100 random)."""
-    bg, perm = Q.prepare(g, block_size, method=method, unit_weights=True)
-    res = Q.run_bfs(bg, perm[np.asarray(sources)],
-                    yield_config=yield_config, schedule=schedule)
-    inv = np.empty_like(perm)
-    inv[perm] = np.arange(g.n)
-    bc = np.zeros(g.n, dtype=np.float64)
-    for qi, s in enumerate(np.asarray(sources)):
-        lev = res.values[qi][perm]          # back to original vertex ids
-        lev = np.where(np.isfinite(lev), lev, -1).astype(np.int32)
-        _, delta = _sigma_delta(g, lev)
-        delta[s] = 0.0
-        bc += delta
+    sess = _session(g, block_size, method, schedule, yield_config,
+                    len(np.asarray(sources)))
+    bc, res = sess.bc(np.asarray(sources))
     return bc, res
 
 
@@ -84,11 +104,9 @@ def landmark_labeling(g: CSRGraph, landmarks: np.ndarray,
                       yield_config: Optional[YieldConfig] = None,
                       schedule: str = "priority"):
     """Batch-of-SSSPs labeling (paper follows Akiba et al.: 16..1024 SSSPs)."""
-    bg, perm = Q.prepare(g, block_size, method=method)
-    res = Q.run_sssp(bg, perm[np.asarray(landmarks)],
-                     yield_config=yield_config, schedule=schedule)
-    dists = res.values[:, perm]             # [L, n] in original ids
-    return LandmarkLabels(np.asarray(landmarks), dists), res
+    sess = _session(g, block_size, method, schedule, yield_config,
+                    len(np.asarray(landmarks)))
+    return sess.landmarks(np.asarray(landmarks))
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +139,21 @@ def sweep_conductance(g: CSRGraph, p: np.ndarray):
     return sizes, cond
 
 
+def ncp_profile(g: CSRGraph, pvals: np.ndarray,
+                max_size: Optional[int] = None) -> np.ndarray:
+    """Min conductance per log2 cluster-size bin over PPR vectors [Q, n]."""
+    max_size = max_size or g.n
+    nbins = int(np.ceil(np.log2(max_size))) + 1
+    best = np.full(nbins, np.inf)
+    for qi in range(pvals.shape[0]):
+        sizes, cond = sweep_conductance(g, pvals[qi])
+        if sizes.size == 0:
+            continue
+        bins = np.minimum(np.log2(sizes).astype(np.int64), nbins - 1)
+        np.minimum.at(best, bins, cond)
+    return best
+
+
 def ncp(g: CSRGraph, seeds: np.ndarray, alpha: float = 0.15,
         eps: float = 1e-4, block_size: int = 256, method: str = "bfs",
         yield_config: Optional[YieldConfig] = None,
@@ -128,17 +161,7 @@ def ncp(g: CSRGraph, seeds: np.ndarray, alpha: float = 0.15,
     """Network community profile: min conductance per cluster size (log bins).
 
     Paper setting: PPRs seeded from 0.01% random vertices (we take ``seeds``)."""
-    bg, perm = Q.prepare(g, block_size, method=method)
-    res = Q.run_ppr(bg, perm[np.asarray(seeds)], alpha=alpha, eps=eps,
-                    yield_config=yield_config, schedule=schedule)
-    max_size = max_size or g.n
-    nbins = int(np.ceil(np.log2(max_size))) + 1
-    best = np.full(nbins, np.inf)
-    for qi in range(len(seeds)):
-        p = res.values[qi][perm]
-        sizes, cond = sweep_conductance(g, p)
-        if sizes.size == 0:
-            continue
-        bins = np.minimum(np.log2(sizes).astype(np.int64), nbins - 1)
-        np.minimum.at(best, bins, cond)
-    return best, res
+    sess = _session(g, block_size, method, schedule, yield_config,
+                    len(np.asarray(seeds)))
+    return sess.ncp(np.asarray(seeds), alpha=alpha, eps=eps,
+                    max_size=max_size)

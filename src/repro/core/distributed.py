@@ -38,6 +38,12 @@ from repro.kernels.minplus import ops as minplus_ops
 
 INF = jnp.inf
 
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _experimental_sm
+    _shard_map = functools.partial(_experimental_sm, check_rep=False)
+
 
 @dataclasses.dataclass
 class ShardedGraph:
@@ -243,7 +249,7 @@ def run_distributed_sssp(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
         return dist, buf, edges, steps
 
     graph_specs = (P(part_axis), P(part_axis), P(part_axis), P(part_axis))
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(_shard_map(
         stepper, mesh=mesh,
         in_specs=graph_specs + (
             P(*((part_axis,) + query_axes + (None,))),   # dist
@@ -256,7 +262,6 @@ def run_distributed_sssp(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
             P(*query_axes),
             P(),
         ),
-        check_vma=False,
     ))
     dist, buf, edges, steps = fn(
         sg.blocks.reshape(p_pad, 1 + dmax, B, B),
@@ -308,11 +313,10 @@ def lower_distributed_sssp(bg: BlockGraph, num_queries: int, mesh: Mesh,
 
     graph_specs = (P(part_axis), P(part_axis), P(part_axis), P(part_axis))
     state_spec = P(*((part_axis,) + query_axes + (None,)))
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(_shard_map(
         run, mesh=mesh,
         in_specs=graph_specs + (state_spec, state_spec, P(*query_axes)),
         out_specs=(state_spec, state_spec, P(*query_axes), P()),
-        check_vma=False,
     ))
     f32 = jnp.float32
     args = (

@@ -1,0 +1,22 @@
+"""Unified fork-processing front door: plan → execute → stream.
+
+    from repro.fpp import FPPSession
+    res = FPPSession(g).plan(num_queries=64).run("sssp", sources)
+
+See DESIGN.md §3.  planner.py picks the partition size against a device
+memory model, backends.py dispatches engine / distributed / baselines behind
+one result contract, session.py owns the vertex reordering, streaming.py
+folds asynchronously-arriving query batches into in-flight execution.
+"""
+from repro.fpp.backends import BACKENDS, KINDS, BackendResult, run_query
+from repro.fpp.planner import (MemoryModel, Plan, autotune_block_size,
+                               make_plan, model_block_size)
+from repro.fpp.session import FPPSession, SessionResult
+from repro.fpp.streaming import StreamingExecutor, StreamQuery
+
+__all__ = [
+    "BACKENDS", "KINDS", "BackendResult", "run_query",
+    "MemoryModel", "Plan", "autotune_block_size", "make_plan",
+    "model_block_size", "FPPSession", "SessionResult",
+    "StreamingExecutor", "StreamQuery",
+]

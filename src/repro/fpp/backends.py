@@ -1,0 +1,100 @@
+"""Backend dispatch: three execution paths behind one result contract.
+
+  engine       single-device buffered FPP engine (core/engine.py, Alg. 2)
+  distributed  shard_map pod runtime (core/distributed.py) — partitions over
+               the "model" mesh axis, queries over "data"
+  baselines    global-frontier GPS engines (core/baselines.py), kept callable
+               so every speedup claim stays one flag away from its baseline
+
+Whatever the backend, the caller gets the same contract back: ``values`` is
+float32 ``[Q, n]`` in the *reordered* id space (the session maps back to
+original ids), ``edges_processed`` is float64 ``[Q]``.  That uniformity is
+what lets tests assert all three paths against core/oracles.py bit-for-bit on
+dtype/shape (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.baselines import global_minplus, global_push
+from repro.core.engine import FPPEngine
+from repro.core.graph import BlockGraph
+from repro.core.yielding import YieldConfig
+
+BACKENDS = ("engine", "distributed", "baselines")
+KINDS = ("sssp", "bfs", "ppr")
+
+
+@dataclasses.dataclass
+class BackendResult:
+    values: np.ndarray                 # [Q, n] float32, reordered id space
+    residual: Optional[np.ndarray]     # [Q, n] float32 (push kinds) or None
+    edges_processed: np.ndarray        # [Q] float64
+    stats: dict                        # visits / rounds / supersteps / bytes
+
+
+def _normalize(values, residual, edges, stats) -> BackendResult:
+    return BackendResult(
+        values=np.ascontiguousarray(np.asarray(values, dtype=np.float32)),
+        residual=(None if residual is None
+                  else np.asarray(residual, dtype=np.float32)),
+        edges_processed=np.asarray(edges, dtype=np.float64),
+        stats=stats)
+
+
+def _default_mesh():
+    """(data=1, model=ndev) mesh over whatever devices this process has."""
+    import jax
+    return jax.make_mesh((1, len(jax.devices())), ("data", "model"))
+
+
+def run_query(backend: str, kind: str, bg: BlockGraph, sources: np.ndarray,
+              *, schedule: str = "priority",
+              yield_config: Optional[YieldConfig] = None,
+              alpha: float = 0.15, eps: float = 1e-4,
+              use_pallas: bool = False, mesh=None,
+              max_visits: Optional[int] = None) -> BackendResult:
+    """Run one query batch (sources in reordered ids) on one backend."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if kind not in KINDS:
+        raise ValueError(f"unknown query kind {kind!r}; one of {KINDS}")
+    sources = np.asarray(sources)
+
+    if backend == "engine":
+        mode = "push" if kind == "ppr" else "minplus"
+        eng = FPPEngine(bg, mode=mode, num_queries=len(sources),
+                        yield_config=yield_config or YieldConfig(),
+                        schedule=schedule, alpha=alpha, eps=eps,
+                        use_pallas=use_pallas)
+        res = eng.run(sources, max_visits=max_visits)
+        return _normalize(res.values, res.residual, res.edges_processed, {
+            "visits": res.stats.visits, "rounds": res.stats.rounds,
+            "blocks_loaded": res.stats.blocks_loaded,
+            "modeled_bytes": res.stats.modeled_bytes})
+
+    if backend == "baselines":
+        if kind == "ppr":
+            res = global_push(bg, sources, alpha=alpha, eps=eps)
+            residual = np.zeros_like(res.values)  # Jacobi push drains below eps
+        else:
+            res = global_minplus(bg, sources)
+            residual = None
+        return _normalize(res.values, residual, res.edges_processed, {
+            "rounds": res.rounds, "modeled_bytes": res.modeled_bytes,
+            "modeled_bytes_shared": res.modeled_bytes_shared})
+
+    # distributed
+    if kind == "ppr":
+        raise NotImplementedError(
+            "distributed backend covers the minplus family (sssp/bfs); "
+            "run ppr on the 'engine' backend (DESIGN.md §3)")
+    from repro.core.distributed import run_distributed_sssp
+    mesh = mesh or _default_mesh()
+    res = run_distributed_sssp(bg, sources, mesh,
+                               yield_config=yield_config)
+    return _normalize(res.values, None, res.edges_processed, {
+        "supersteps": res.supersteps})

@@ -1,0 +1,205 @@
+"""Partition-size planning: the paper's "partition fits in LLC" rule as code.
+
+The deciding performance knob of the whole design is how much graph becomes
+resident per visit (paper §7.3 / Fig. 16; GPOP and CSR-segmenting reach the
+same conclusion: partition-size-to-cache fit decides everything).  On TPU the
+LLC is VMEM, so the planner solves
+
+    argmax B  s.t.  working_set(B, Q) <= vmem_bytes
+
+against an explicit :class:`MemoryModel`, and can optionally *measure* the
+candidates on a query sample (``tune=True``) — the sweep previously buried in
+``benchmarks/fig16_partition_size.py`` / ``benchmarks/table4_tuning.py``, now
+reusable (those benchmarks call :func:`measure_run` today).
+
+DESIGN.md §3 documents how the plan feeds the session front door.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core.yielding import YieldConfig, default_delta
+
+#: block-size candidates, smallest to largest (TPU lane-friendly powers of 2)
+CANDIDATE_BLOCK_SIZES = (64, 128, 256, 512, 1024, 2048, 4096)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryModel:
+    """Device memory budget the plan must fit (two-level hierarchy, §2).
+
+    Working set of one partition visit (what must be VMEM-resident):
+      adjacency block   B*B*dtype   (x2 when double-buffering the next block)
+      dist/value tile   Q*B*dtype
+      buffer tile       Q*B*dtype
+    HBM holds the full block-sparse graph plus the [P, Q, B] state planes;
+    ``hbm_bytes`` caps the state so Q and B cannot silently overflow a chip.
+    """
+    vmem_bytes: int = 96 * 1024 * 1024
+    hbm_bytes: int = 16 * 1024 ** 3
+    dtype_bytes: int = 4
+    double_buffer: bool = True
+
+    def working_set(self, block_size: int, num_queries: int) -> int:
+        mult = 2 if self.double_buffer else 1
+        return (mult * block_size * block_size * self.dtype_bytes
+                + 2 * num_queries * block_size * self.dtype_bytes)
+
+    def state_bytes(self, n_vertices: int, num_queries: int,
+                    block_size: int) -> int:
+        """HBM-resident state planes (dist + buf + one spare), padded."""
+        n_pad = -(-n_vertices // block_size) * block_size
+        return 3 * n_pad * num_queries * self.dtype_bytes
+
+    def fits(self, block_size: int, num_queries: int,
+             n_vertices: Optional[int] = None) -> bool:
+        if self.working_set(block_size, num_queries) > self.vmem_bytes:
+            return False
+        if n_vertices is not None and self.state_bytes(
+                n_vertices, num_queries, block_size) > self.hbm_bytes:
+            return False
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A resolved execution plan for one fork-processing pattern."""
+    block_size: int
+    method: str                 # partition/reorder method (partition.py)
+    schedule: str               # inter-partition policy (scheduler.py)
+    backend: str                # "engine" | "distributed" | "baselines"
+    num_queries: int
+    mem: MemoryModel
+    yield_config: Optional[YieldConfig] = None   # None => per-kind default
+    tuned: bool = False
+    tuning_rows: tuple = ()
+
+    def working_set_bytes(self) -> int:
+        return self.mem.working_set(self.block_size, self.num_queries)
+
+
+def default_method(g: CSRGraph) -> str:
+    """Paper §7.1: METIS-like clustering for road/web graphs, random for
+    power-law social graphs (where clustering quality collapses)."""
+    deg = g.out_degree()
+    mean = max(1.0, float(deg.mean()))
+    if float(deg.max()) > 64.0 * mean:      # heavy-tailed hub structure
+        return "random"
+    return "bfs"
+
+
+def model_block_size(g: CSRGraph, num_queries: int, mem: MemoryModel,
+                     candidates: Sequence[int] = CANDIDATE_BLOCK_SIZES,
+                     min_parts: int = 8) -> int:
+    """Largest candidate whose visit working set fits the memory model.
+
+    Also keeps at least ``min_parts`` partitions alive (clamped to what the
+    graph can support): with too few partitions there is nothing for the
+    scheduler to choose between and buffered consolidation degenerates —
+    the "smaller multiplies scheduling overhead, larger thrashes" U-shape
+    of Fig. 16 has a scheduling wall on the right, not just a cache wall.
+    """
+    best = None
+    for b in candidates:
+        if -(-g.n // b) < max(2, min(min_parts, g.n // candidates[0])):
+            break
+        if mem.fits(b, num_queries, g.n):
+            best = b
+    if best is None:
+        raise ValueError(
+            f"no candidate block size fits the memory model for "
+            f"Q={num_queries} (smallest candidate {candidates[0]} needs "
+            f"{mem.working_set(candidates[0], num_queries)} B of "
+            f"{mem.vmem_bytes} B VMEM); shrink the query batch or raise "
+            f"the budget")
+    return best
+
+
+def measure_run(session, kind: str, sources: np.ndarray,
+                **overrides) -> dict:
+    """Run one configuration through the session and report the sweep row.
+
+    The reusable measurement unit behind ``autotune_block_size`` and the
+    benchmark sweeps (table4 policies/thresholds, fig16 block sizes).
+    Partitioning is warmed outside the timed window — it is a one-time
+    per-graph cost, not part of the execution being compared.
+    """
+    session.prepared(block_size=overrides.get("block_size"),
+                     method=overrides.get("method"),
+                     unit_weights=(kind == "bfs"))
+    t0 = time.perf_counter()
+    res = session.run(kind, sources, **overrides)
+    secs = time.perf_counter() - t0
+    return {
+        "runtime_s": secs,
+        "visits": res.stats.get("visits", 0),
+        "traffic_bytes": res.stats.get("modeled_bytes", 0.0),
+        "edges_per_q": float(np.mean(res.edges_processed)),
+    }
+
+
+def autotune_block_size(session, kind: str, sources: np.ndarray,
+                        mem: MemoryModel,
+                        candidates: Sequence[int] = CANDIDATE_BLOCK_SIZES,
+                        objective: str = "traffic_bytes",
+                        num_queries: Optional[int] = None):
+    """Measure each memory-feasible candidate; return (best_B, rows).
+
+    Objective defaults to modeled HBM->VMEM traffic — deterministic across
+    machines, and the paper's Fig. 16 shows it tracks the runtime U-shape
+    (visits x bytes-per-visit).  Ties break toward measured runtime.
+
+    Feasibility is judged at ``num_queries`` (the plan's real batch width),
+    while measurement runs on the (smaller) ``sources`` sample.
+    """
+    g = session.graph
+    nq = num_queries if num_queries is not None else len(sources)
+    feasible = [b for b in candidates
+                if b < max(2, g.n) and mem.fits(b, nq, g.n)]
+    if not feasible:
+        raise ValueError(
+            f"no candidate block size fits the memory model for Q={nq}; "
+            f"shrink the query batch or raise the budget")
+    rows = []
+    for b in feasible:
+        row = measure_run(session, kind, sources, block_size=b)
+        row["block_size"] = b
+        rows.append(row)
+    best = min(rows, key=lambda r: (r[objective], r["runtime_s"]))
+    return int(best["block_size"]), rows
+
+
+def make_plan(g: CSRGraph, num_queries: int, *,
+              mem: Optional[MemoryModel] = None,
+              block_size: Optional[int] = None,
+              method: Optional[str] = None,
+              schedule: str = "priority",
+              backend: str = "engine",
+              yield_config: Optional[YieldConfig] = None) -> Plan:
+    """Resolve a plan without measuring (the model-only path).
+
+    ``FPPSession.plan(tune=True)`` upgrades the block size by measurement.
+    """
+    mem = mem or MemoryModel()
+    if block_size is None:
+        block_size = model_block_size(g, num_queries, mem)
+    method = method or default_method(g)
+    return Plan(block_size=int(block_size), method=method, schedule=schedule,
+                backend=backend, num_queries=int(num_queries), mem=mem,
+                yield_config=yield_config)
+
+
+def default_yield_config(kind: str, bg) -> YieldConfig:
+    """Per-query-kind yield defaults (paper Table 4 settings)."""
+    if kind == "bfs":
+        return YieldConfig(delta=1.0)          # Δ=1 == level-synchronous
+    if kind == "ppr":
+        return YieldConfig(mu_factor=100.0)    # paper's NCP setting
+    wmax = float(np.nanmax(np.where(np.isfinite(bg.blocks), bg.blocks,
+                                    np.nan)))
+    return YieldConfig(delta=default_delta(wmax))

@@ -1,0 +1,182 @@
+"""FPPSession — the front door: plan → execute → stream (DESIGN.md §3).
+
+One object owns the whole life of a fork-processing pattern:
+
+    sess = FPPSession(g)                       # host CSR, original vertex ids
+    sess.plan(num_queries=64)                  # memory-model block-size plan
+    res = sess.run("sssp", sources)            # original ids in AND out
+    res = sess.run("sssp", sources, backend="baselines")   # same contract
+    bc  = sess.bc(sources)                     # applications ride the same path
+    stream = sess.stream("sssp", capacity=8)   # queries arriving over time
+
+Everything downstream of here (engine, distributed runtime, baselines) speaks
+the *reordered* id space and partition-major state; the session is the only
+layer that owns ``perm`` and hides it.  All three backends return identical
+dtypes/shapes (see backends.py), so swapping ``backend=`` is a one-word
+experiment, not a rewrite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import BlockGraph, CSRGraph
+from repro.core.partition import partition
+from repro.core.yielding import YieldConfig
+from repro.fpp import backends as _backends
+from repro.fpp import planner as _planner
+from repro.fpp.planner import MemoryModel, Plan
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """Backend-independent result, in the ORIGINAL vertex id space."""
+    kind: str
+    backend: str
+    values: np.ndarray                # [Q, n] float32
+    residual: Optional[np.ndarray]    # [Q, n] float32 (ppr) or None
+    edges_processed: np.ndarray       # [Q] float64
+    stats: dict
+    sources: np.ndarray               # [Q] original ids as submitted
+
+
+class FPPSession:
+    """Plan → execute → stream for fork-processing patterns on one graph."""
+
+    def __init__(self, g: CSRGraph, *, mem: Optional[MemoryModel] = None):
+        self.graph = g
+        self.mem = mem or MemoryModel()
+        self._plan: Optional[Plan] = None
+        # (block_size, method, unit_weights) -> (BlockGraph, perm)
+        self._prepared: Dict[tuple, Tuple[BlockGraph, np.ndarray]] = {}
+
+    # ------------------------------------------------------------------ plan
+
+    def plan(self, num_queries: int = 64, *,
+             block_size: Optional[int] = None,
+             method: Optional[str] = None,
+             schedule: str = "priority",
+             backend: str = "engine",
+             yield_config: Optional[YieldConfig] = None,
+             tune: bool = False,
+             tune_sources: Optional[np.ndarray] = None,
+             tune_kind: str = "sssp") -> "FPPSession":
+        """Resolve the execution plan; chainable.
+
+        ``tune=True`` measures every memory-feasible block size on a query
+        sample (``tune_sources``, default: first min(8, Q) vertices with
+        out-edges) and keeps the one with the least modeled traffic —
+        feeding benchmarks/fig16's sweep back into the system.
+        """
+        p = _planner.make_plan(self.graph, num_queries, mem=self.mem,
+                               block_size=block_size, method=method,
+                               schedule=schedule, backend=backend,
+                               yield_config=yield_config)
+        self._plan = p
+        if tune and block_size is None:
+            if tune_sources is None:
+                deg = self.graph.out_degree()
+                cand = np.flatnonzero(deg > 0)
+                tune_sources = cand[:min(8, cand.size)]
+            best, rows = _planner.autotune_block_size(
+                self, tune_kind, np.asarray(tune_sources), self.mem,
+                num_queries=num_queries)
+            self._plan = dataclasses.replace(
+                p, block_size=best, tuned=True,
+                tuning_rows=tuple(tuple(sorted(r.items())) for r in rows))
+        return self
+
+    @property
+    def current_plan(self) -> Plan:
+        if self._plan is None:
+            self.plan()
+        return self._plan
+
+    # -------------------------------------------------------------- prepare
+
+    def prepared(self, *, block_size: Optional[int] = None,
+                 method: Optional[str] = None,
+                 unit_weights: bool = False):
+        """(BlockGraph, perm) for the plan (or overrides), cached."""
+        p = self.current_plan
+        bs = int(block_size or p.block_size)
+        meth = method or p.method
+        key = (bs, meth, bool(unit_weights))
+        if key not in self._prepared:
+            g = self.graph
+            if unit_weights:
+                g = CSRGraph(indptr=g.indptr, indices=g.indices,
+                             weights=np.ones_like(g.weights), n=g.n, m=g.m)
+            self._prepared[key] = partition(g, bs, method=meth)
+        return self._prepared[key]
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, kind: str, sources: np.ndarray, *,
+            backend: Optional[str] = None,
+            schedule: Optional[str] = None,
+            yield_config: Optional[YieldConfig] = None,
+            block_size: Optional[int] = None,
+            method: Optional[str] = None,
+            alpha: float = 0.15, eps: float = 1e-4,
+            use_pallas: bool = False, mesh=None,
+            max_visits: Optional[int] = None) -> SessionResult:
+        """Execute one query batch.  Sources and values use original ids."""
+        sources = np.asarray(sources)
+        p = self.current_plan
+        bg, perm = self.prepared(block_size=block_size, method=method,
+                                 unit_weights=(kind == "bfs"))
+        yc = (yield_config if yield_config is not None else
+              (p.yield_config or _planner.default_yield_config(kind, bg)))
+        out = _backends.run_query(
+            backend or p.backend, kind, bg, perm[sources],
+            schedule=schedule or p.schedule, yield_config=yc,
+            alpha=alpha, eps=eps, use_pallas=use_pallas, mesh=mesh,
+            max_visits=max_visits)
+        values = out.values[:, perm]          # back to original vertex ids
+        residual = None if out.residual is None else out.residual[:, perm]
+        return SessionResult(kind=kind, backend=backend or p.backend,
+                             values=values, residual=residual,
+                             edges_processed=out.edges_processed,
+                             stats=out.stats, sources=sources)
+
+    # --------------------------------------------------------------- stream
+
+    def stream(self, kind: str = "sssp", capacity: int = 16, *,
+               schedule: Optional[str] = None,
+               yield_config: Optional[YieldConfig] = None,
+               alpha: float = 0.15, eps: float = 1e-4,
+               harvest_every: int = 1):
+        """A streaming executor: submit query batches as they arrive
+        (fpp/streaming.py); answers match the one-shot run of the union."""
+        from repro.fpp.streaming import StreamingExecutor
+        return StreamingExecutor(
+            self, kind=kind, capacity=capacity,
+            schedule=schedule or self.current_plan.schedule,
+            yield_config=yield_config, alpha=alpha, eps=eps,
+            harvest_every=harvest_every)
+
+    # --------------------------------------------------- paper applications
+
+    def bc(self, sources: np.ndarray, **run_kw):
+        """Approximate betweenness centrality from sampled BFS roots."""
+        from repro.core.applications import bc_accumulate
+        res = self.run("bfs", sources, **run_kw)
+        return bc_accumulate(self.graph, np.asarray(sources),
+                             res.values), res
+
+    def landmarks(self, landmarks: np.ndarray, **run_kw):
+        """Landmark labeling: one SSSP per landmark, labels in original ids."""
+        from repro.core.applications import LandmarkLabels
+        res = self.run("sssp", landmarks, **run_kw)
+        return LandmarkLabels(np.asarray(landmarks), res.values), res
+
+    def ncp(self, seeds: np.ndarray, *, alpha: float = 0.15,
+            eps: float = 1e-4, max_size: Optional[int] = None, **run_kw):
+        """Network community profile from a fleet of PPRs."""
+        from repro.core.applications import ncp_profile
+        res = self.run("ppr", seeds, alpha=alpha, eps=eps, **run_kw)
+        return ncp_profile(self.graph, res.values,
+                           max_size=max_size), res

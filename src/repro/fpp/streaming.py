@@ -1,0 +1,256 @@
+"""Streaming FPP execution: queries that arrive over time (DESIGN.md §3.3).
+
+``examples/serve_batched.py``'s ContinuousBatcher keeps an LM decode batch
+full by refilling finished slots between decode steps.  This module is the
+same idea for graph queries: the engine state carries ``capacity`` query
+lanes, and between partition visits the executor
+
+  * **admits** queued queries into free lanes by injecting their source op
+    into the partition buffer (exactly how a one-shot run initializes, so
+    late arrivals are indistinguishable from early ones),
+  * **harvests** lanes whose queries have no pending buffered op anywhere
+    (queries are independent, so per-lane completion is exact), records
+    their values, and recycles the lane.
+
+Because yielding/scheduling never change results (paper §5.1) and admission
+only adds ops a one-shot run would have started with, a staggered streaming
+run returns bit-identical minplus answers to the one-shot run of the union —
+``tests/test_fpp_session.py`` pins that property.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as _engine
+from repro.core.engine import FPPEngine, MinplusState, PushState
+from repro.core.scheduler import PartitionScheduler
+from repro.core.yielding import YieldConfig
+from repro.fpp import planner as _planner
+
+INF = jnp.inf
+
+
+@dataclasses.dataclass
+class StreamQuery:
+    """One admitted-or-queued query and, eventually, its answer."""
+    qid: int
+    source: int                 # original vertex id
+    slot: int = -1
+    submitted_visit: int = -1
+    admitted_visit: int = -1
+    finished_visit: int = -1
+    values: Optional[np.ndarray] = None      # [n] original ids, on completion
+    residual: Optional[np.ndarray] = None    # push kinds
+    edges: float = 0.0
+    done: bool = False
+
+
+class StreamingExecutor:
+    """Admission queue + slot-recycling loop over the buffered engine.
+
+    Mirrors serve/engine.py's ContinuousBatcher: ``submit`` enqueues work,
+    ``step`` runs one partition visit (admitting and harvesting around it),
+    ``run`` drains everything submitted so far.  ``pump(n)`` advances a
+    bounded number of visits so callers can interleave arrivals.
+    """
+
+    def __init__(self, session, kind: str = "sssp", capacity: int = 16, *,
+                 schedule: str = "priority",
+                 yield_config: Optional[YieldConfig] = None,
+                 alpha: float = 0.15, eps: float = 1e-4,
+                 harvest_every: int = 1, seed: int = 0):
+        if kind not in ("sssp", "bfs", "ppr"):
+            raise ValueError(f"streaming supports sssp/bfs/ppr, got {kind!r}")
+        self.session = session
+        self.kind = kind
+        self.capacity = int(capacity)
+        self.alpha, self.eps = alpha, eps
+        self.harvest_every = max(1, int(harvest_every))
+        bg, perm = session.prepared(unit_weights=(kind == "bfs"))
+        self.bg, self.perm = bg, perm
+        yc = (yield_config if yield_config is not None
+              else _planner.default_yield_config(kind, bg))
+        self.mode = "push" if kind == "ppr" else "minplus"
+        self.engine = FPPEngine(bg, mode=self.mode, num_queries=self.capacity,
+                                yield_config=yc, schedule=schedule,
+                                alpha=alpha, eps=eps, seed=seed)
+        self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
+        self.state = self._empty_state()
+        self.deg_np = np.asarray(self.engine.dg.deg)
+        self.queue: collections.deque = collections.deque()
+        self.queries: Dict[int, StreamQuery] = {}
+        self.free_slots: List[int] = list(range(self.capacity))
+        self.slot_qid = np.full(self.capacity, -1, dtype=np.int64)
+        self.visits = 0
+        self.modeled_bytes = 0.0
+        self._next_qid = 0
+        if self.mode == "minplus":
+            self._pending_q = jax.jit(lambda d, b: jnp.any(
+                jnp.isfinite(b[:-1]) & (b[:-1] <= d), axis=(0, 2)))
+        else:
+            degc = jnp.maximum(jnp.asarray(self.engine.dg.deg), 1)
+            has_edges = jnp.asarray(self.engine.dg.deg) > 0
+            self._pending_q = jax.jit(lambda r, b: jnp.any(
+                ((r + b[:-1]) >= eps * degc.astype(jnp.float32)[:, None, :])
+                & has_edges[:, None, :], axis=(0, 2)))
+
+    # ----------------------------------------------------------- lifecycle
+
+    def _empty_state(self):
+        P, B, Q = (self.engine.dg.num_parts, self.engine.dg.block_size,
+                   self.capacity)
+        prio = jnp.full((P,), INF, dtype=jnp.float32)
+        ops = jnp.zeros((P,), dtype=jnp.int32)
+        stamp = jnp.full((P,), _engine._BIG_STAMP, dtype=jnp.int32)
+        edges = jnp.zeros((Q,), dtype=jnp.float32)
+        if self.mode == "minplus":
+            dist = jnp.full((P, Q, B), INF, dtype=jnp.float32)
+            buf = jnp.full((P + 1, Q, B), INF, dtype=jnp.float32)
+            return MinplusState(dist, buf, prio, ops, stamp, edges)
+        z = jnp.zeros((P, Q, B), dtype=jnp.float32)
+        buf = jnp.zeros((P + 1, Q, B), dtype=jnp.float32)
+        return PushState(z, z, buf, prio, ops, stamp, edges)
+
+    def submit(self, sources: np.ndarray) -> List[int]:
+        """Enqueue a batch of sources (original ids); returns their qids."""
+        qids = []
+        for s in np.atleast_1d(np.asarray(sources)):
+            q = StreamQuery(qid=self._next_qid, source=int(s),
+                            submitted_visit=self.visits)
+            self._next_qid += 1
+            self.queries[q.qid] = q
+            self.queue.append(q.qid)
+            qids.append(q.qid)
+        self._admit()
+        return qids
+
+    # ----------------------------------------------------------- admission
+
+    def _inject(self, q: StreamQuery, slot: int):
+        """Buffer the query's source op — identical to one-shot init, so the
+        scheduler sees a late arrival as just another pending partition."""
+        B = self.engine.dg.block_size
+        src = int(self.perm[q.source])
+        pv, lv = divmod(src, B)
+        st = self.state
+        prio_p = float(np.asarray(st.prio[pv]))
+        was_empty = not np.isfinite(prio_p)
+        if self.mode == "minplus":
+            buf = st.buf.at[pv, slot, lv].min(0.0)
+            prio = st.prio.at[pv].min(0.0)
+            ops = st.ops_count.at[pv].add(1)
+            ready = True
+        else:
+            buf = st.buf.at[pv, slot, lv].add(1.0)
+            deg = int(self.deg_np[pv, lv])
+            ratio = 1.0 / (self.eps * max(deg, 1))
+            ready = deg > 0 and ratio >= 1.0
+            prio = st.prio.at[pv].min(-ratio) if ready else st.prio
+            ops = st.ops_count.at[pv].add(1) if ready else st.ops_count
+        stamp = st.stamp
+        if was_empty and ready:
+            stamp = stamp.at[pv].set(jnp.int32(self.visits))
+        self.state = st._replace(buf=buf, prio=prio, ops_count=ops,
+                                 stamp=stamp)
+        q.slot = slot
+        q.admitted_visit = self.visits
+        self.slot_qid[slot] = q.qid
+
+    def _admit(self):
+        while self.free_slots and self.queue:
+            qid = self.queue.popleft()
+            self._inject(self.queries[qid], self.free_slots.pop(0))
+
+    # ------------------------------------------------------------- harvest
+
+    def _reset_slot(self, slot: int):
+        st = self.state
+        edges = st.edges.at[slot].set(0.0)
+        if self.mode == "minplus":
+            dist = st.dist.at[:, slot, :].set(INF)
+            buf = st.buf.at[:, slot, :].set(INF)
+            self.state = st._replace(dist=dist, buf=buf, edges=edges)
+        else:
+            p = st.p.at[:, slot, :].set(0.0)
+            r = st.r.at[:, slot, :].set(0.0)
+            buf = st.buf.at[:, slot, :].set(0.0)
+            self.state = st._replace(p=p, r=r, buf=buf, edges=edges)
+
+    def _harvest(self):
+        """Finish every active lane with no pending op anywhere."""
+        active = self.slot_qid >= 0
+        if not active.any():
+            return
+        st = self.state
+        if self.mode == "minplus":
+            pending = np.asarray(self._pending_q(st.dist, st.buf))
+        else:
+            pending = np.asarray(self._pending_q(st.r, st.buf))
+        n = self.bg.n
+        for slot in np.flatnonzero(active & ~pending):
+            q = self.queries[int(self.slot_qid[slot])]
+            if self.mode == "minplus":
+                vals = np.asarray(st.dist[:, slot, :]).reshape(-1)[:n]
+            else:
+                vals = np.asarray(st.p[:, slot, :]).reshape(-1)[:n]
+                rfull = (np.asarray(st.r[:, slot, :])
+                         + np.asarray(st.buf[:-1, slot, :])).reshape(-1)[:n]
+                q.residual = rfull[self.perm].astype(np.float32)
+            q.values = vals[self.perm].astype(np.float32)
+            q.edges = float(np.asarray(st.edges[slot]))
+            q.finished_visit = self.visits
+            q.done = True
+            self.slot_qid[slot] = -1
+            self._reset_slot(int(slot))
+            self.free_slots.append(int(slot))
+
+    # ---------------------------------------------------------------- loop
+
+    @property
+    def active(self) -> int:
+        return int((self.slot_qid >= 0).sum())
+
+    def step(self) -> bool:
+        """One partition visit (admit before, harvest after).  False when
+        nothing is pending anywhere — all admitted queries are complete."""
+        self._admit()
+        st = self.state
+        p = self.scheduler.select(np.asarray(st.prio), np.asarray(st.stamp),
+                                  np.asarray(st.ops_count))
+        if p is None:
+            self._harvest()
+            self._admit()
+            return bool(self.queue) or self.active > 0
+        self.state, _ = self.engine._visit(self.state, jnp.int32(p),
+                                           jnp.int32(self.visits))
+        self.visits += 1
+        self.modeled_bytes += float(self.engine._visit_bytes[p])
+        if self.visits % self.harvest_every == 0:
+            self._harvest()
+        return True
+
+    def pump(self, max_visits: int) -> int:
+        """Advance up to ``max_visits`` visits; returns visits executed."""
+        start = self.visits
+        while self.visits - start < max_visits:
+            if not self.step():
+                break
+        return self.visits - start
+
+    def run(self, max_visits: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drain queue + lanes; returns {qid: values} (original ids)."""
+        budget = max_visits or 2000 * self.bg.num_parts
+        while (self.queue or self.active) and self.visits < budget:
+            if not self.step():
+                break
+        self._harvest()
+        return {qid: q.values for qid, q in self.queries.items() if q.done}
+
+    def result(self, qid: int) -> StreamQuery:
+        return self.queries[qid]

@@ -1,31 +1,30 @@
 """End-to-end serving driver: continuous batching over batched requests.
 
+Two workloads share the serving posture (DESIGN.md §4):
+
+  lm     token serving — ContinuousBatcher over a reduced model twin
+  graph  graph-query serving — the FPPSession streaming executor admits
+         asynchronously-arriving SSSP/PPR batches into the in-flight
+         buffered engine (fpp/streaming.py)
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --reduced \
         --requests 16 --batch 4 --max-new 12
+    PYTHONPATH=src python -m repro.launch.serve --workload graph \
+        --graph road-ca --requests 32 --batch 8
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs.base import get_config
-from repro.models.factory import build_model
-from repro.serve.engine import ContinuousBatcher, Request
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-72b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=96)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve_lm(args):
+    import jax
+    from repro.configs.base import get_config
+    from repro.models.factory import build_model
+    from repro.serve.engine import ContinuousBatcher, Request
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -57,6 +56,70 @@ def main():
           f"{dt:.2f}s ({batcher.tokens_out / dt:.1f} tok/s)")
     for rid in sorted(out)[:4]:
         print(f"  req {rid}: {out[rid]}")
+
+
+def serve_graph(args):
+    """Staggered graph-query serving through the session streaming path."""
+    from repro.fpp import FPPSession
+    from repro.graphs.generators import build_suite
+
+    g = build_suite(args.graph)
+    rng = np.random.default_rng(args.seed)
+    deg = g.out_degree()
+    cand = np.flatnonzero(deg > 0)
+    sources = rng.choice(cand, size=min(args.requests, cand.size),
+                         replace=False)
+    sess = FPPSession(g).plan(num_queries=args.batch,
+                              block_size=args.block_size)
+    stream = sess.stream(args.kind, capacity=args.batch)
+    t0 = time.perf_counter()
+    qids = []
+    # arrivals: feed one batch, let the engine work, feed the next —
+    # the serving twin of Alg. 2's dynamic partition scheduling
+    for lo in range(0, len(sources), args.batch):
+        qids += stream.submit(sources[lo: lo + args.batch])
+        stream.pump(args.pump_visits)
+    out = stream.run()
+    dt = time.perf_counter() - t0
+    done = [q for q in qids if q in out]
+    print(f"[serve] graph={args.graph} |V|={g.n} kind={args.kind}: "
+          f"{len(done)}/{len(qids)} queries in {stream.visits} visits, "
+          f"{dt:.2f}s ({len(done) / max(dt, 1e-9):.1f} q/s, "
+          f"B={sess.current_plan.block_size}, capacity={args.batch})")
+    assert len(done) == len(qids), "stream failed to drain every query"
+    if done:
+        lat = [stream.result(q).finished_visit
+               - stream.result(q).submitted_visit for q in done]
+        print(f"  visit-latency p50/p95: {np.percentile(lat, 50):.0f}/"
+              f"{np.percentile(lat, 95):.0f} visits")
+
+
+def main():
+    from repro.graphs.generators import SUITES   # jax-free import
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "graph"), default="lm")
+    # lm workload
+    ap.add_argument("--arch", default="qwen2-72b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=12)
+    # graph workload
+    ap.add_argument("--graph", default="road-ca", choices=sorted(SUITES))
+    ap.add_argument("--kind", choices=("sssp", "bfs", "ppr"), default="sssp")
+    ap.add_argument("--block-size", type=int, default=256,
+                    help="partition size; omit planner autotune on CPU demo")
+    ap.add_argument("--pump-visits", type=int, default=8,
+                    help="visits to run between arriving batches")
+    # shared
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.workload == "graph":
+        serve_graph(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -62,6 +62,27 @@ def run_loop(train_step: Callable, state: TrainState, data_fn: Callable,
         stats.restored_step = start
         log(f"[loop] restored checkpoint at step {start}")
     ring = collections.deque(maxlen=cfg.straggler_window)
+    try:
+        state = _step_loop(train_step, state, data_fn, cfg, stats, ring,
+                           start, ckpt, log, on_straggler, fault_hook)
+    except BaseException:
+        # a dying run must not abandon an in-flight async checkpoint:
+        # the commit rename is what the restarted job restores from
+        if ckpt is not None:
+            try:
+                ckpt.wait()
+            except Exception:
+                pass             # surface the original failure, not the writer's
+        raise
+    if ckpt is not None:
+        ckpt.wait()
+        ckpt.save(cfg.n_steps, state)
+        ckpt.wait()
+    return state, stats
+
+
+def _step_loop(train_step, state, data_fn, cfg, stats, ring, start, ckpt,
+               log, on_straggler, fault_hook):
     for step in range(start, cfg.n_steps):
         if fault_hook is not None:
             fault_hook(step)
@@ -87,8 +108,4 @@ def run_loop(train_step: Callable, state: TrainState, data_fn: Callable,
                 f"lr {m.get('lr', 0):.2e} {dt * 1e3:7.1f} ms")
         if ckpt is not None and (step + 1) % cfg.ckpt_every == 0:
             ckpt.save(step + 1, state)
-    if ckpt is not None:
-        ckpt.wait()
-        ckpt.save(cfg.n_steps, state)
-        ckpt.wait()
-    return state, stats
+    return state

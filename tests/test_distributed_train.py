@@ -12,11 +12,11 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
-    from jax import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.distributed import _shard_map as shard_map
+    from repro.launch.mesh import compat_make_mesh, set_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
 
     # ---- 1. compressed_psum == f32 psum within quantization tolerance ----
     from repro.train.compress import compressed_psum
@@ -25,11 +25,11 @@ _SCRIPT = textwrap.dedent("""
     def f(x):
         return compressed_psum(x, "model")
     got = shard_map(f, mesh=mesh, in_specs=P(None, "model"),
-                    out_specs=P(None, "model"), check_vma=False)(x)
+                    out_specs=P(None, "model"))(x)
     def g(x):
         return jax.lax.psum(x, "model")
     want = shard_map(g, mesh=mesh, in_specs=P(None, "model"),
-                     out_specs=P(None, "model"), check_vma=False)(x)
+                     out_specs=P(None, "model"))(x)
     err = float(jnp.max(jnp.abs(got - want)))
     rel = err / float(jnp.max(jnp.abs(want)))
     assert rel < 0.02, f"compressed psum rel err {rel}"
@@ -71,7 +71,7 @@ _SCRIPT = textwrap.dedent("""
     sharded = jax.jit(make_train_step(model, opt, constant(1e-3),
                                       rules=rules, microbatches=2),
                       in_shardings=(st_sh, b_sh))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         s2, m2 = sharded(state, batch)
     # microbatched grad averaging reorders float sums: tolerance not exact
     d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
@@ -91,7 +91,7 @@ _SCRIPT = textwrap.dedent("""
     v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
     length = jnp.asarray([5, 17, 32, 9], jnp.int32)
     want = A.decode_attend_local(q, k, v, jnp.arange(S), length)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         got = A.decode_attend_partitioned(q, k, v, length, mesh,
                                           batch_axes=("data",))
     err = float(jnp.max(jnp.abs(got - want)))

@@ -6,7 +6,11 @@ scheduling policies, yield settings, graph families and query batches.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # degrade: unit tests run, property tests skip
+    given = None
 
 from repro.core import oracles
 from repro.core.engine import FPPEngine
@@ -144,20 +148,24 @@ def test_work_accounting_positive_and_bounded():
     assert res.edges_processed.mean() < 40 * oracle_edges
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.data())
-def test_sssp_property_random_graphs(data):
-    """Fixed shapes (one jit compile), random structure/weights/sources."""
-    n, B = 48, 16
-    nedges = data.draw(st.integers(20, 150))
-    rng_seed = data.draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(rng_seed)
-    src = rng.integers(0, n, nedges)
-    dst = rng.integers(0, n, nedges)
-    w = rng.uniform(0.5, 4.0, nedges).astype(np.float32)
-    from repro.core.graph import CSRGraph
-    g = CSRGraph.from_edges(n, src, dst, w)
-    bg, perm = partition(g, B, method="natural")
-    srcs = rng.choice(n, 2, replace=False)
-    res = run_sssp(bg, perm[srcs], yield_config=YieldConfig(delta=1.0))
-    _check_sssp(g, bg, perm, srcs, res)
+if given is not None:
+    @settings(max_examples=15, deadline=None)
+    @given(st.data())
+    def test_sssp_property_random_graphs(data):
+        """Fixed shapes (one jit compile), random structure/weights/sources."""
+        n, B = 48, 16
+        nedges = data.draw(st.integers(20, 150))
+        rng_seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(rng_seed)
+        src = rng.integers(0, n, nedges)
+        dst = rng.integers(0, n, nedges)
+        w = rng.uniform(0.5, 4.0, nedges).astype(np.float32)
+        from repro.core.graph import CSRGraph
+        g = CSRGraph.from_edges(n, src, dst, w)
+        bg, perm = partition(g, B, method="natural")
+        srcs = rng.choice(n, 2, replace=False)
+        res = run_sssp(bg, perm[srcs], yield_config=YieldConfig(delta=1.0))
+        _check_sssp(g, bg, perm, srcs, res)
+else:
+    def test_sssp_property_random_graphs():
+        pytest.importorskip("hypothesis")

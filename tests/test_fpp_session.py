@@ -1,0 +1,201 @@
+"""FPPSession front door: planning, backend agreement, streaming.
+
+The session contract under test (DESIGN.md §3):
+  * the planner's block size fits the device memory model;
+  * the same query set through engine / distributed / baselines matches
+    core/oracles.py, with identical result dtypes and shapes;
+  * a staggered-arrival streaming run returns the same answers as the
+    one-shot run of the union.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import oracles
+from repro.fpp import FPPSession, MemoryModel
+from repro.fpp.planner import model_block_size
+from repro.graphs.generators import grid2d, rmat
+
+
+# ---------------------------------------------------------------- planning
+
+
+def test_planner_block_size_fits_memory_model():
+    g = grid2d(32, 32, seed=0)
+    for vmem in (1 << 20, 8 << 20, 96 << 20):
+        mem = MemoryModel(vmem_bytes=vmem)
+        b = model_block_size(g, num_queries=64, mem=mem)
+        assert mem.working_set(b, 64) <= vmem
+    # tighter budget can never pick a larger block
+    assert (model_block_size(g, 64, MemoryModel(vmem_bytes=1 << 20))
+            <= model_block_size(g, 64, MemoryModel(vmem_bytes=96 << 20)))
+
+
+def test_planner_keeps_enough_partitions():
+    g = grid2d(12, 12, seed=1)           # 144 vertices
+    b = model_block_size(g, 4, MemoryModel())
+    assert -(-g.n // b) >= 2             # never collapses to one partition
+
+
+def test_plan_tune_measures_and_picks_feasible():
+    g = grid2d(16, 16, seed=2)
+    srcs = np.array([0, 100, 200, 255])
+    sess = FPPSession(g).plan(num_queries=4, tune=True, tune_sources=srcs)
+    plan = sess.current_plan
+    assert plan.tuned and len(plan.tuning_rows) >= 1
+    assert plan.mem.fits(plan.block_size, 4, g.n)
+    # the tuned pick minimizes the recorded traffic objective
+    rows = [dict(r) for r in plan.tuning_rows]
+    best = min(rows, key=lambda r: (r["traffic_bytes"], r["runtime_s"]))
+    assert plan.block_size == best["block_size"]
+
+
+# ------------------------------------------------------- backend agreement
+
+
+def _oracle_sssp(g, srcs):
+    return np.stack([oracles.dijkstra(g, int(s))[0] for s in srcs])
+
+
+def test_engine_and_baselines_match_oracles_same_contract():
+    g = grid2d(12, 12, seed=3)
+    srcs = np.array([0, 70, 143, 5])
+    want = _oracle_sssp(g, srcs)
+    sess = FPPSession(g).plan(num_queries=len(srcs), block_size=32)
+    for backend in ("engine", "baselines"):
+        res = sess.run("sssp", srcs, backend=backend)
+        assert res.values.dtype == np.float32          # identical dtypes
+        assert res.values.shape == (len(srcs), g.n)    # identical shapes
+        assert res.edges_processed.dtype == np.float64
+        assert res.edges_processed.shape == (len(srcs),)
+        np.testing.assert_allclose(
+            np.nan_to_num(res.values, posinf=1e30),
+            np.nan_to_num(want, posinf=1e30), atol=1e-3)
+
+
+def test_bfs_both_backends_match_oracle():
+    g = rmat(7, 4, seed=4, weighted=False)
+    srcs = np.array([0, 17, 90])
+    sess = FPPSession(g).plan(num_queries=len(srcs), block_size=32)
+    for backend in ("engine", "baselines"):
+        res = sess.run("bfs", srcs, backend=backend)
+        for qi, s in enumerate(srcs):
+            want, _ = oracles.bfs(g, int(s))
+            got = np.where(np.isfinite(res.values[qi]),
+                           res.values[qi], -1).astype(np.int32)
+            assert (got == want).all(), (backend, qi)
+
+
+def test_ppr_backends_contract_and_accuracy():
+    g = rmat(7, 6, seed=5)
+    deg = g.out_degree()
+    srcs = np.random.default_rng(0).choice(np.flatnonzero(deg > 0), 3,
+                                           replace=False)
+    eps = 1e-4
+    sess = FPPSession(g).plan(num_queries=len(srcs), block_size=32)
+    outs = {}
+    for backend in ("engine", "baselines"):
+        res = sess.run("ppr", srcs, backend=backend, eps=eps)
+        assert res.values.dtype == np.float32
+        assert res.values.shape == (len(srcs), g.n)
+        outs[backend] = res
+    for qi, s in enumerate(srcs):
+        want_p, _, _ = oracles.ppr_push(g, int(s), eps=eps)
+        for backend, res in outs.items():
+            err = np.abs(res.values[qi] - want_p) / np.maximum(deg, 1)
+            assert err.max() <= 2 * eps, (backend, qi)
+    # distributed push is explicitly unsupported — loud, not silent
+    with pytest.raises(NotImplementedError):
+        sess.run("ppr", srcs, backend="distributed")
+
+
+_DISTRIBUTED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    from repro.core import oracles
+    from repro.fpp import FPPSession
+    from repro.graphs.generators import grid2d
+
+    g = grid2d(12, 12, seed=3)
+    srcs = np.array([0, 70, 143, 5])
+    sess = FPPSession(g).plan(num_queries=len(srcs), block_size=32)
+    res = sess.run("sssp", srcs, backend="distributed")
+    assert res.values.dtype == np.float32, res.values.dtype
+    assert res.values.shape == (len(srcs), g.n), res.values.shape
+    assert res.edges_processed.dtype == np.float64
+    for qi, s in enumerate(srcs):
+        want, _ = oracles.dijkstra(g, int(s))
+        np.testing.assert_allclose(np.nan_to_num(res.values[qi], posinf=1e30),
+                                   np.nan_to_num(want, posinf=1e30), atol=1e-3)
+    assert res.stats["supersteps"] > 0
+    print("SESSION_DISTRIBUTED_OK")
+""")
+
+
+def test_distributed_backend_matches_oracles_two_device_mesh():
+    """Same queries through the shard_map runtime on a 2-device CPU mesh.
+
+    Subprocess because the host-platform device-count flag must be set
+    before jax initializes (same pattern as tests/test_distributed.py).
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _DISTRIBUTED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SESSION_DISTRIBUTED_OK" in out.stdout
+
+
+# ----------------------------------------------------------------- stream
+
+
+def test_streaming_staggered_matches_one_shot():
+    g = grid2d(12, 12, seed=6)
+    srcs = np.array([0, 40, 80, 120, 143, 7])
+    sess = FPPSession(g).plan(num_queries=len(srcs), block_size=32)
+    one = sess.run("sssp", srcs)
+    # capacity below the union size forces admission-queue + lane recycling
+    stream = sess.stream("sssp", capacity=4)
+    first = stream.submit(srcs[:3])
+    stream.pump(3)                        # in-flight work between arrivals
+    second = stream.submit(srcs[3:])
+    out = stream.run()
+    assert len(out) == len(srcs)
+    for i, qid in enumerate(first + second):
+        q = stream.result(qid)
+        assert q.done and q.values.dtype == np.float32
+        np.testing.assert_array_equal(out[qid], one.values[i])
+
+
+def test_streaming_ppr_invariants():
+    g = grid2d(10, 10, seed=7)
+    srcs = np.array([0, 55, 99])
+    eps = 1e-3
+    sess = FPPSession(g).plan(num_queries=len(srcs), block_size=32)
+    stream = sess.stream("ppr", capacity=2, eps=eps)
+    qids = stream.submit(srcs[:2])
+    stream.pump(2)
+    qids += stream.submit(srcs[2:])
+    out = stream.run()
+    deg = g.out_degree()
+    for qid, s in zip(qids, srcs):
+        q = stream.result(qid)
+        # mass conservation and the ACL terminal condition hold per lane
+        assert abs(q.values.sum() + q.residual.sum() - 1.0) < 5e-3
+        assert (q.residual <= eps * np.maximum(deg, 1) + 1e-6).all()
+        want_p, _, _ = oracles.ppr_push(g, int(s), eps=eps)
+        err = np.abs(q.values - want_p) / np.maximum(deg, 1)
+        assert err.max() <= 2 * eps
+
+
+def test_streaming_empty_run_terminates():
+    g = grid2d(6, 6, seed=8)
+    sess = FPPSession(g).plan(num_queries=2, block_size=16)
+    stream = sess.stream("sssp", capacity=2)
+    assert stream.run() == {}
+    assert stream.visits == 0

@@ -1,7 +1,11 @@
 """Unit + property tests for CSR / BlockGraph containers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # degrade: unit tests run, property tests skip
+    given = None
 
 from repro.core.graph import BlockGraph, CSRGraph, vmem_block_size
 from repro.graphs.generators import erdos_renyi, grid2d, rmat, watts_strogatz
@@ -73,14 +77,18 @@ def test_vmem_block_size_monotone():
     assert 2 * b * b * 4 + 2 * 256 * b * 4 <= 96 << 20
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 23), st.integers(0, 23)),
-                min_size=1, max_size=60))
-def test_blockgraph_roundtrip_property(edges):
-    src = np.array([e[0] for e in edges])
-    dst = np.array([e[1] for e in edges])
-    g = CSRGraph.from_edges(24, src, dst)
-    bg = BlockGraph.from_csr(g, 8)
-    # every finite entry corresponds to a real edge and vice versa
-    total = int(np.isfinite(bg.blocks).sum())
-    assert total == g.m
+if given is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 23), st.integers(0, 23)),
+                    min_size=1, max_size=60))
+    def test_blockgraph_roundtrip_property(edges):
+        src = np.array([e[0] for e in edges])
+        dst = np.array([e[1] for e in edges])
+        g = CSRGraph.from_edges(24, src, dst)
+        bg = BlockGraph.from_csr(g, 8)
+        # every finite entry corresponds to a real edge and vice versa
+        total = int(np.isfinite(bg.blocks).sum())
+        assert total == g.m
+else:
+    def test_blockgraph_roundtrip_property():
+        pytest.importorskip("hypothesis")

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # degrade: unit tests run, property tests skip
+    given = None
 
 from repro.kernels.minplus import ops
 from repro.kernels.minplus.ref import masked_matmul_ref, minplus_ref
@@ -84,21 +88,26 @@ def test_minplus_identity_on_empty_frontier():
     assert np.isinf(np.asarray(got)).all()
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.9))
-def test_minplus_property(seed, density):
-    rng = np.random.default_rng(seed)
-    d = _rand_dist(rng, 8, 32)
-    w = _rand_block(rng, 32, density=density)
-    got = np.asarray(ops.minplus_pallas(jnp.asarray(d), jnp.asarray(w)))
-    want = np.asarray(minplus_ref(jnp.asarray(d), jnp.asarray(w)))
-    np.testing.assert_allclose(np.nan_to_num(got, posinf=1e30),
-                               np.nan_to_num(want, posinf=1e30), rtol=1e-6)
-    # semiring properties: monotone (adding sources only lowers results)
-    d2 = np.minimum(d, _rand_dist(rng, 8, 32))
-    got2 = np.asarray(ops.minplus_pallas(jnp.asarray(d2), jnp.asarray(w)))
-    assert (np.nan_to_num(got2, posinf=1e30)
-            <= np.nan_to_num(got, posinf=1e30) + 1e-5).all()
+if given is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.9))
+    def test_minplus_property(seed, density):
+        rng = np.random.default_rng(seed)
+        d = _rand_dist(rng, 8, 32)
+        w = _rand_block(rng, 32, density=density)
+        got = np.asarray(ops.minplus_pallas(jnp.asarray(d), jnp.asarray(w)))
+        want = np.asarray(minplus_ref(jnp.asarray(d), jnp.asarray(w)))
+        np.testing.assert_allclose(np.nan_to_num(got, posinf=1e30),
+                                   np.nan_to_num(want, posinf=1e30),
+                                   rtol=1e-6)
+        # semiring properties: monotone (adding sources only lowers results)
+        d2 = np.minimum(d, _rand_dist(rng, 8, 32))
+        got2 = np.asarray(ops.minplus_pallas(jnp.asarray(d2), jnp.asarray(w)))
+        assert (np.nan_to_num(got2, posinf=1e30)
+                <= np.nan_to_num(got, posinf=1e30) + 1e-5).all()
+else:
+    def test_minplus_property():
+        pytest.importorskip("hypothesis")
 
 
 def test_engine_with_pallas_kernels_matches_ref_engine():

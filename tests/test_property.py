@@ -1,5 +1,7 @@
 """Hypothesis property tests on the system's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # whole module is property-based
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
