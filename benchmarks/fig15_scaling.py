@@ -2,7 +2,9 @@
 
 The paper's finding: throughput grows with more queries (the buffered
 execution amortizes partition loads over more queries) — PPR/RW scale
-best, SSSP/BFS hold steady.
+best, SSSP/BFS hold steady.  The distributed rows run the SAME queries
+through the shard_map pod runtime (one visit algebra, two runtimes), so the
+single-device engine and the superstep program scale side by side.
 """
 from __future__ import annotations
 
@@ -14,9 +16,14 @@ from repro.graphs.generators import build_suite
 
 
 def run(quick: bool = True):
+    from repro.core.distributed import run_distributed_ppr
+    from repro.fpp.backends import default_mesh
+
     g = build_suite("social-lj")
     bg, perm = prepare(g, 256)
     counts = (8, 32, 128) if quick else (8, 32, 128, 512)
+    mesh = default_mesh()
+    ndev = int(np.prod(list(mesh.shape.values())))
     rows = []
     for nq in counts:
         srcs = sources_for(g, nq, seed=8)
@@ -30,6 +37,12 @@ def run(quick: bool = True):
                      "runtime_s": rnd(secs),
                      "qps": rnd(nq / max(secs, 1e-9), 1),
                      "visits": res.stats.visits})
+        dres, secs = timed(run_distributed_ppr, bg, perm[srcs], mesh,
+                           eps=1e-3)
+        rows.append({"query": f"PPR-dist({ndev}dev)", "n_queries": nq,
+                     "runtime_s": rnd(secs),
+                     "qps": rnd(nq / max(secs, 1e-9), 1),
+                     "visits": dres.supersteps})
         wres, secs = timed(run_rw, bg, perm[srcs], length=16)
         rows.append({"query": "RW", "n_queries": nq,
                      "runtime_s": rnd(secs),

@@ -34,22 +34,31 @@ def main():
     mods = [args.only] if args.only else MODULES
     failures = []
     for name in mods:
-        mod = importlib.import_module(f"benchmarks.{name}")
         print(f"\n=== {name} {'(full)' if args.full else '(quick)'} ===",
               flush=True)
         t0 = time.perf_counter()
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             rows = mod.run(quick=not args.full)
         except Exception as e:                      # noqa: BLE001
             import traceback
             traceback.print_exc()
-            failures.append(name)
+            failures.append({"module": name,
+                             "error": f"{type(e).__name__}: {e}"})
+            # persist the failure where the rows would have gone, so
+            # results/bench/ reflects partial runs instead of silence
+            save_rows(name, [{"module": name, "status": "failed",
+                              "error": f"{type(e).__name__}: {e}"}])
             continue
         path = save_rows(name, rows)
         print(fmt_table(rows, mod.COLUMNS))
         print(f"[{time.perf_counter() - t0:6.1f}s] -> {path}")
+    # always write _failures.json (empty on success) so results/bench/
+    # reflects THIS run's status rather than a stale earlier failure
+    save_rows("_failures", failures)
     if failures:
-        raise SystemExit(f"benchmark failures: {failures}")
+        raise SystemExit("benchmark failures: "
+                         + ", ".join(f["module"] for f in failures))
     print("\nAll benchmarks complete.")
 
 

@@ -17,6 +17,14 @@ execution model at the second level:
     exchanged in batches with a single ``all_to_all`` — Algorithm 2 line 16
     *is* the collective.
 
+The superstep body is the generic skeleton from ``core/visit.py``; this module
+only supplies the mesh program around it.  Both the minplus family (SSSP/BFS)
+and the push family (PPR) run through the same program — residual
+contributions exchange by ``+`` through the same ``all_to_all`` routing that
+minplus uses for ``min``, and the run converges when no device holds a
+pending op (max-residual ratio below eps for push), a ``pmax`` across the
+``model`` + query axes.
+
 The superstep loop is a single ``lax.while_loop`` inside ``shard_map`` so the
 whole FPP run lowers to one XLA program — this is what the multi-pod dry-run
 compiles.
@@ -25,18 +33,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import visit as _visit
 from repro.core.graph import BlockGraph
+from repro.core.visit import EDGE_SHIFT, VisitAlgebra
 from repro.core.yielding import YieldConfig
-from repro.kernels.minplus import ops as minplus_ops
-
-INF = jnp.inf
 
 if hasattr(jax, "shard_map"):                      # jax >= 0.6
     _shard_map = functools.partial(jax.shard_map, check_vma=False)
@@ -100,100 +107,110 @@ class ShardedGraph:
 class DistributedResult:
     values: np.ndarray          # [Q, n]
     supersteps: int
-    edges_processed: np.ndarray
+    edges_processed: np.ndarray  # [Q] float64, exact
+    residual: Optional[np.ndarray] = None   # [Q, n] (push kinds)
 
 
-def _superstep_minplus(sg_blocks, sg_dst, sg_nnz, sg_budget, dist, buf, edges,
-                       *, window, max_rounds, pl, dmax, B, ndev, model_axis):
-    """One superstep on one device's shard. dist/buf: [pl, Qs, B]."""
-    # --- local priority-based selection (paper §5.2, per-device) ---
-    pending_all = jnp.isfinite(buf) & (buf <= dist)
-    prio = jnp.min(jnp.where(pending_all, buf, INF), axis=(1, 2))    # [pl]
-    p = jnp.argmin(prio)
-    has_work = jnp.isfinite(prio[p])
+# ---------------------------------------------------------------------------
+# the one mesh program: while(superstep) under shard_map
 
-    w_all = sg_blocks[p]                 # [1+dmax, B, B]
-    nnz_all = sg_nnz[p]                  # [1+dmax, B]
-    w_pp, nnz_pp = w_all[0], nnz_all[0]
-    d0, bufrow = dist[p], buf[p]
-    pending0 = jnp.isfinite(bufrow) & (bufrow <= d0)
-    pending0 = pending0 & has_work       # no-op visit when empty
-    d1 = jnp.minimum(d0, jnp.where(pending0, bufrow, INF))
-    alpha = jnp.min(jnp.where(pending0, d1, INF), axis=1, keepdims=True)
-    budget = sg_budget[p]
 
-    def cond(c):
-        d, pending, emit, eq, rounds = c
-        active = pending & (d <= alpha + window) & (eq < budget)[:, None]
-        return jnp.logical_and(rounds < max_rounds, jnp.any(active))
+def _make_program(algebra: VisitAlgebra, mesh: Mesh, *, pl: int, dmax: int,
+                  ndev: int, max_rounds: int, max_supersteps: int,
+                  query_axes: Tuple[str, ...], part_axis: str):
+    """jit(shard_map(while(superstep))) for one algebra on one mesh.
 
-    def body(c):
-        d, pending, emit, eq, rounds = c
-        active = pending & (d <= alpha + window) & (eq < budget)[:, None]
-        srcs = jnp.where(active, d, INF)
-        nd = minplus_ops.minplus(srcs, w_pp)
-        eq = eq + jnp.sum(jnp.where(active, nnz_pp[None, :], 0), axis=1)
-        emit = emit | active
-        pending = pending & ~active
-        improved = nd < d
-        d = jnp.minimum(d, nd)
-        pending = pending | improved
-        return d, pending, emit, eq, rounds + 1
+    Takes/returns value planes stacked as one ``[nplanes, P_pad, Q, B]``
+    array so the same in/out specs serve both modes.  Edge counts ride as an
+    (hi, lo) int32 pair per query — exact integer accumulation without x64.
+    """
+    nplanes = algebra.num_planes
 
-    Qs = d1.shape[0]
-    eq0 = jnp.zeros(Qs, dtype=jnp.float32)
-    d, pending, emit, eq, _ = jax.lax.while_loop(
-        cond, body, (d1, pending0, jnp.zeros_like(pending0), eq0,
-                     jnp.int32(0)))
+    def stepper(blocks, dstp, nnz, deg, budget, vals, buf, ehi, elo):
+        planes0 = tuple(vals[i] for i in range(nplanes))
 
-    # --- emissions: one [B,B] relax per (padded) out-slot ---
-    srcs = jnp.where(emit, d, INF)
-    cands = jax.vmap(lambda w: minplus_ops.minplus(srcs, w))(
-        w_all[1:])                                        # [dmax, Qs, B]
-    dsts = sg_dst[p, 1:]                                  # [dmax]
-    eq = eq + jnp.sum(
-        jnp.where(emit[None], nnz_all[1:][:, None, :], 0),
-        axis=(0, 2)).astype(jnp.float32)
+        def cond(c):
+            *_, done, steps = c
+            return jnp.logical_and(~done, steps < max_supersteps)
 
-    # route to owner devices over the model axis: payload [ndev, dmax, Qs, B]
-    owner = jnp.where(dsts >= 0, dsts // pl, -1)
-    payload = jnp.full((ndev, dmax, Qs, B), INF, dtype=d.dtype)
-    slot_dst = jnp.full((ndev, dmax), -1, dtype=jnp.int32)
+        def body(c):
+            planes, buf, ehi, elo, done, steps = c
+            planes, buf, eq = _visit.superstep(
+                blocks, dstp, nnz, deg, budget, planes, buf,
+                algebra=algebra, max_rounds=max_rounds, pl=pl, dmax=dmax,
+                ndev=ndev, model_axis=part_axis)
+            elo = elo + eq
+            spill = elo >> EDGE_SHIFT
+            ehi = ehi + spill
+            elo = elo - (spill << EDGE_SHIFT)
+            local_pending = jnp.any(algebra.pending(buf, planes, deg))
+            any_pending = local_pending
+            for ax in (part_axis,) + tuple(query_axes):
+                any_pending = jax.lax.pmax(any_pending.astype(jnp.int32),
+                                           ax).astype(bool)
+            return planes, buf, ehi, elo, ~any_pending, steps + 1
 
-    def route(s, c):
-        payload, slot_dst = c
-        o = owner[s]
-        valid = o >= 0
-        oo = jnp.where(valid, o, 0)
-        payload = payload.at[oo, s].set(
-            jnp.where(valid, cands[s], payload[oo, s]))
-        slot_dst = slot_dst.at[oo, s].set(
-            jnp.where(valid, dsts[s] % pl, slot_dst[oo, s]))
-        return payload, slot_dst
+        planes, buf, ehi, elo, _, steps = jax.lax.while_loop(
+            cond, body, (planes0, buf, ehi, elo, jnp.bool_(False),
+                         jnp.int32(0)))
+        # each device only counted edges of partitions it owns; a query's
+        # total is the sum over the partition axis (replicated on return)
+        ehi = jax.lax.psum(ehi, part_axis)
+        elo = jax.lax.psum(elo, part_axis)
+        return jnp.stack(planes), buf, ehi, elo, steps
 
-    payload, slot_dst = jax.lax.fori_loop(0, dmax, route,
-                                          (payload, slot_dst))
-    recv = jax.lax.all_to_all(payload, model_axis, 0, 0, tiled=False)
-    recv_dst = jax.lax.all_to_all(slot_dst, model_axis, 0, 0, tiled=False)
-    # recv: [ndev, dmax, Qs, B] — contributions from every device
+    graph_specs = (P(part_axis),) * 5
+    state_spec = P(*((part_axis,) + tuple(query_axes) + (None,)))
+    vals_spec = P(*((None, part_axis) + tuple(query_axes) + (None,)))
+    q_spec = P(*query_axes)
+    return jax.jit(_shard_map(
+        stepper, mesh=mesh,
+        in_specs=graph_specs + (vals_spec, state_spec, q_spec, q_spec),
+        out_specs=(vals_spec, state_spec, q_spec, q_spec, P()),
+    ))
 
-    # keep yielded ops in own buffer, then apply received contributions
-    keep_vals = jnp.where(pending, d, INF)
-    buf = buf.at[p].set(keep_vals)
-    dist = dist.at[p].set(d)
-    flat_recv = recv.reshape(ndev * dmax, Qs, B)
-    flat_dst = recv_dst.reshape(ndev * dmax)
 
-    def apply_one(i, buf):
-        l = flat_dst[i]
-        valid = l >= 0
-        ll = jnp.where(valid, l, 0)
-        new = jnp.minimum(buf[ll], jnp.where(valid, flat_recv[i], INF))
-        return buf.at[ll].set(jnp.where(valid, new, buf[ll]))
+def _check_query_sharding(Q: int, mesh: Mesh, query_axes) -> int:
+    nq_dev = int(np.prod([mesh.shape[a] for a in query_axes]))
+    if Q % nq_dev != 0:
+        raise ValueError(
+            f"query batch of Q={Q} cannot shard evenly over query axes "
+            f"{tuple(query_axes)} (total size {nq_dev}); pad the sources to "
+            f"a multiple of {nq_dev} or re-mesh so the query-axes size "
+            f"divides Q")
+    return nq_dev
 
-    buf = jax.lax.fori_loop(0, ndev * dmax, apply_one, buf)
-    edges = edges + (eq - eq0)
-    return dist, buf, edges
+
+def _run_program(algebra: VisitAlgebra, bg: BlockGraph, sources: np.ndarray,
+                 mesh: Mesh, yc: YieldConfig, max_rounds: int,
+                 max_supersteps: int, query_axes, part_axis: str):
+    """Shared driver: build shards, init state, run, unshift edge counters."""
+    ndev = int(mesh.shape[part_axis])
+    Q = len(sources)
+    _check_query_sharding(Q, mesh, query_axes)
+    sg = ShardedGraph.build(bg, ndev, yc, Q)
+    B, pl, dmax = sg.block_size, sg.pl, sg.dmax
+    p_pad = ndev * pl
+    planes0, buf0 = _visit.init_dense_state(
+        algebra, p_pad, Q, B, np.asarray(sources), trash_row=False)
+    fn = _make_program(algebra, mesh, pl=pl, dmax=dmax, ndev=ndev,
+                       max_rounds=max_rounds, max_supersteps=max_supersteps,
+                       query_axes=tuple(query_axes), part_axis=part_axis)
+    vals, buf, ehi, elo, steps = fn(
+        sg.blocks.reshape(p_pad, 1 + dmax, B, B),
+        sg.dst_part.reshape(p_pad, 1 + dmax),
+        sg.row_nnz.reshape(p_pad, 1 + dmax, B),
+        sg.deg.reshape(p_pad, B),
+        sg.edge_budget.reshape(p_pad),
+        np.stack(planes0), buf0,
+        np.zeros((Q,), dtype=np.int32), np.zeros((Q,), dtype=np.int32))
+    edges = (np.asarray(ehi, dtype=np.float64) * float(1 << EDGE_SHIFT)
+             + np.asarray(elo, dtype=np.float64))
+    return np.asarray(vals), np.asarray(buf), edges, int(np.asarray(steps))
+
+
+def _to_values(plane: np.ndarray, num_parts: int, Q: int, n: int):
+    return plane[:num_parts].transpose(1, 0, 2).reshape(Q, -1)[:, :n]
 
 
 def run_distributed_sssp(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
@@ -205,75 +222,43 @@ def run_distributed_sssp(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
     sources: [Q] in the reordered id space; Q must divide the query-axes size.
     """
     yc = yield_config or YieldConfig()
-    ndev = int(np.prod([mesh.shape[a] for a in (part_axis,)]))
-    nq_dev = int(np.prod([mesh.shape[a] for a in query_axes]))
+    algebra = _visit.minplus_algebra(yc.window())
+    vals, _, edges, steps = _run_program(
+        algebra, bg, sources, mesh, yc,
+        max_rounds=yc.max_rounds or bg.block_size,
+        max_supersteps=max_supersteps, query_axes=query_axes,
+        part_axis=part_axis)
     Q = len(sources)
-    assert Q % nq_dev == 0, (Q, nq_dev)
-    sg = ShardedGraph.build(bg, ndev, yc, Q)
-    B, pl, dmax = sg.block_size, sg.pl, sg.dmax
-    window = yc.window()
-    max_rounds = yc.max_rounds or B
+    return DistributedResult(_to_values(vals[0], bg.num_parts, Q, bg.n),
+                             steps, edges)
 
-    # global initial state [P_pad, Q, B]
-    p_pad = sg.ndev * pl
-    dist0 = np.full((p_pad, Q, B), np.inf, dtype=np.float32)
-    buf0 = np.full((p_pad, Q, B), np.inf, dtype=np.float32)
-    parts = np.asarray(sources) // B
-    locs = np.asarray(sources) % B
-    buf0[parts, np.arange(Q), locs] = 0.0
-    edges0 = np.zeros((Q,), dtype=np.float32)
 
-    qspec = P(*((None,) + query_axes + (None,)))     # [P_pad, Q, B]
-    model_first = P(part_axis)
+def run_distributed_ppr(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
+                        alpha: float = 0.15, eps: float = 1e-4,
+                        yield_config: Optional[YieldConfig] = None,
+                        max_supersteps: int = 100_000,
+                        query_axes=("data",), part_axis: str = "model"):
+    """Batched PPR: the push instantiation of the same superstep program.
 
-    def stepper(blocks, dstp, nnz, budget, dist, buf, edges):
-        def cond(c):
-            dist, buf, edges, done, steps = c
-            return jnp.logical_and(~done, steps < max_supersteps)
-
-        def body(c):
-            dist, buf, edges, done, steps = c
-            dist, buf, edges = _superstep_minplus(
-                blocks, dstp, nnz, budget, dist, buf, edges,
-                window=window, max_rounds=max_rounds, pl=pl, dmax=dmax,
-                B=B, ndev=ndev, model_axis=part_axis)
-            local_pending = jnp.any(jnp.isfinite(buf) & (buf <= dist))
-            any_pending = local_pending
-            for ax in (part_axis,) + tuple(query_axes):
-                any_pending = jax.lax.pmax(any_pending.astype(jnp.int32),
-                                           ax).astype(bool)
-            return dist, buf, edges, ~any_pending, steps + 1
-
-        dist, buf, edges, _, steps = jax.lax.while_loop(
-            cond, body, (dist, buf, edges, jnp.bool_(False), jnp.int32(0)))
-        return dist, buf, edges, steps
-
-    graph_specs = (P(part_axis), P(part_axis), P(part_axis), P(part_axis))
-    fn = jax.jit(_shard_map(
-        stepper, mesh=mesh,
-        in_specs=graph_specs + (
-            P(*((part_axis,) + query_axes + (None,))),   # dist
-            P(*((part_axis,) + query_axes + (None,))),   # buf
-            P(*query_axes),                               # edges
-        ),
-        out_specs=(
-            P(*((part_axis,) + query_axes + (None,))),
-            P(*((part_axis,) + query_axes + (None,))),
-            P(*query_axes),
-            P(),
-        ),
-    ))
-    dist, buf, edges, steps = fn(
-        sg.blocks.reshape(p_pad, 1 + dmax, B, B),
-        sg.dst_part.reshape(p_pad, 1 + dmax),
-        sg.row_nnz.reshape(p_pad, 1 + dmax, B),
-        sg.edge_budget.reshape(p_pad),
-        dist0, buf0, edges0)
-    n = bg.n
-    vals = np.asarray(dist)[:bg.num_parts].transpose(1, 0, 2).reshape(
-        Q, -1)[:, :n]
-    return DistributedResult(vals, int(np.asarray(steps).max()),
-                             np.asarray(edges))
+    Residual contributions exchange by ``+`` through the same ``all_to_all``
+    routing minplus uses; the run converges when every device's max residual
+    ratio drops below eps (``pmax`` across the ``model`` + query axes).
+    Returns DistributedResult with ``values`` = PPR mass and ``residual`` =
+    terminal residual (pending buffered contributions folded in, so
+    values + residual conserves probability mass exactly).
+    """
+    yc = yield_config or YieldConfig()
+    algebra = _visit.push_algebra(alpha, eps)
+    vals, buf, edges, steps = _run_program(
+        algebra, bg, sources, mesh, yc,
+        max_rounds=yc.max_rounds or 64,
+        max_supersteps=max_supersteps, query_axes=query_axes,
+        part_axis=part_axis)
+    Q = len(sources)
+    pvals = _to_values(vals[0], bg.num_parts, Q, bg.n)
+    # un-consolidated buffered contributions are residual mass (engine twin)
+    rvals = _to_values(vals[1] + buf, bg.num_parts, Q, bg.n)
+    return DistributedResult(pvals, steps, edges, residual=rvals)
 
 
 def lower_distributed_sssp(bg: BlockGraph, num_queries: int, mesh: Mesh,
@@ -282,50 +267,27 @@ def lower_distributed_sssp(bg: BlockGraph, num_queries: int, mesh: Mesh,
                            max_supersteps: int = 1000):
     """AOT lowering entry used by the multi-pod dry-run (no real data)."""
     yc = yield_config or YieldConfig()
+    algebra = _visit.minplus_algebra(yc.window())
     ndev = mesh.shape[part_axis]
-    sgB = bg.block_size
+    B = bg.block_size
     pl = -(-bg.num_parts // ndev)
     p_pad = pl * ndev
     dmax = bg.nbr_blk.shape[1]
     Q = num_queries
-
-    def run(blocks, dstp, nnz, budget, dist, buf, edges):
-        def cond(c):
-            dist, buf, edges, done, steps = c
-            return jnp.logical_and(~done, steps < max_supersteps)
-
-        def body(c):
-            dist, buf, edges, done, steps = c
-            dist, buf, edges = _superstep_minplus(
-                blocks, dstp, nnz, budget, dist, buf, edges,
-                window=yc.window(), max_rounds=yc.max_rounds or sgB,
-                pl=pl, dmax=dmax, B=sgB, ndev=ndev, model_axis=part_axis)
-            local_pending = jnp.any(jnp.isfinite(buf) & (buf <= dist))
-            any_pending = local_pending
-            for ax in (part_axis,) + tuple(query_axes):
-                any_pending = jax.lax.pmax(any_pending.astype(jnp.int32),
-                                           ax).astype(bool)
-            return dist, buf, edges, ~any_pending, steps + 1
-
-        dist, buf, edges, _, steps = jax.lax.while_loop(
-            cond, body, (dist, buf, edges, jnp.bool_(False), jnp.int32(0)))
-        return dist, buf, edges, steps
-
-    graph_specs = (P(part_axis), P(part_axis), P(part_axis), P(part_axis))
-    state_spec = P(*((part_axis,) + query_axes + (None,)))
-    fn = jax.jit(_shard_map(
-        run, mesh=mesh,
-        in_specs=graph_specs + (state_spec, state_spec, P(*query_axes)),
-        out_specs=(state_spec, state_spec, P(*query_axes), P()),
-    ))
-    f32 = jnp.float32
+    fn = _make_program(algebra, mesh, pl=pl, dmax=dmax, ndev=ndev,
+                       max_rounds=yc.max_rounds or B,
+                       max_supersteps=max_supersteps,
+                       query_axes=tuple(query_axes), part_axis=part_axis)
+    f32, i32 = jnp.float32, jnp.int32
     args = (
-        jax.ShapeDtypeStruct((p_pad, 1 + dmax, sgB, sgB), f32),
-        jax.ShapeDtypeStruct((p_pad, 1 + dmax), jnp.int32),
-        jax.ShapeDtypeStruct((p_pad, 1 + dmax, sgB), jnp.int32),
+        jax.ShapeDtypeStruct((p_pad, 1 + dmax, B, B), f32),
+        jax.ShapeDtypeStruct((p_pad, 1 + dmax), i32),
+        jax.ShapeDtypeStruct((p_pad, 1 + dmax, B), i32),
+        jax.ShapeDtypeStruct((p_pad, B), i32),
         jax.ShapeDtypeStruct((p_pad,), f32),
-        jax.ShapeDtypeStruct((p_pad, Q, sgB), f32),
-        jax.ShapeDtypeStruct((p_pad, Q, sgB), f32),
-        jax.ShapeDtypeStruct((Q,), f32),
+        jax.ShapeDtypeStruct((algebra.num_planes, p_pad, Q, B), f32),
+        jax.ShapeDtypeStruct((p_pad, Q, B), f32),
+        jax.ShapeDtypeStruct((Q,), i32),
+        jax.ShapeDtypeStruct((Q,), i32),
     )
     return fn.lower(*args)

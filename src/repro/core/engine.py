@@ -2,7 +2,10 @@
 
 One *visit* makes a partition resident (HBM->VMEM via the Pallas kernels on
 real hardware; a [B, B] block on CPU) and drains its buffered operations for
-all Q queries at once:
+all Q queries at once.  The visit body itself lives in ``core/visit.py`` as a
+single generic skeleton; this module owns the *host-driven* engine around it
+(device graph staging, the scheduler loop, traffic modeling) and instantiates
+the skeleton for both modes:
 
   minplus mode (SSSP / BFS / BC / LL):
     d <- min(d, buf)                      # apply + consolidate buffered ops
@@ -24,43 +27,21 @@ relax), and the dense min/sum buffer *is* query-centric consolidation
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import visit as _visit
 from repro.core.graph import BlockGraph
 from repro.core.scheduler import PartitionScheduler
+from repro.core.visit import (VisitAlgebra, VisitState, minplus_algebra,
+                              push_algebra)
 from repro.core.yielding import YieldConfig
 from repro.kernels.minplus import ops as minplus_ops
 
-INF = jnp.inf
-_BIG_STAMP = np.iinfo(np.int32).max - 1
-
-
-# ---------------------------------------------------------------------------
-# state containers
-
-
-class MinplusState(NamedTuple):
-    dist: jax.Array       # [P, Q, B] tentative values (partition-major)
-    buf: jax.Array        # [P+1, Q, B] pending ops (+inf empty; row P = trash)
-    prio: jax.Array       # [P] best pending value per partition (+inf empty)
-    ops_count: jax.Array  # [P] pending op count
-    stamp: jax.Array      # [P] visit counter when buffer became non-empty
-    edges: jax.Array      # [Q] edges processed per query (work accounting)
-
-
-class PushState(NamedTuple):
-    p: jax.Array          # [P, Q, B] PPR mass
-    r: jax.Array          # [P, Q, B] residual
-    buf: jax.Array        # [P+1, Q, B] pending residual contributions (0 empty)
-    prio: jax.Array       # [P] -max(residual ratio) (+inf when below eps)
-    ops_count: jax.Array
-    stamp: jax.Array
-    edges: jax.Array
+MODES = ("minplus", "push")
 
 
 class VisitStats(NamedTuple):
@@ -109,246 +90,31 @@ class DeviceGraph:
 
 
 # ---------------------------------------------------------------------------
-# minplus visit (SSSP / BFS family)
-
-
-def _pending_row_prio(buf_row: jax.Array, dist_row: jax.Array):
-    """Pending = buffered op that can still improve (<=: yielded ops re-enter)."""
-    pending = jnp.isfinite(buf_row) & (buf_row <= dist_row)
-    vals = jnp.where(pending, buf_row, INF)
-    return pending, vals
+# mode instantiations of the shared skeleton (core/visit.py)
 
 
 def make_minplus_visit(dg: DeviceGraph, window: float, max_rounds: int,
                        relax: Callable = None) -> Callable:
-    relax = relax or minplus_ops.minplus
-    P, B = dg.num_parts, dg.block_size
-
-    @jax.jit
-    def visit(state: MinplusState, p: jax.Array, counter: jax.Array):
-        w_pp = dg.blocks[dg.diag_blk[p]]
-        nnz_pp = dg.row_nnz[dg.diag_blk[p]]          # [B]
-        d0 = state.dist[p]                           # [Q, B]
-        bufrow = state.buf[p]
-        pending0, vals0 = _pending_row_prio(bufrow, d0)
-        d1 = jnp.minimum(d0, jnp.where(pending0, bufrow, INF))
-        alpha = jnp.min(jnp.where(pending0, d1, INF), axis=1, keepdims=True)
-        budget = dg.edge_budget[p]                   # per-query edges this visit
-
-        def cond(c):
-            d, pending, emit, eq, rounds = c
-            active = pending & (d <= alpha + window) & (eq < budget)[:, None]
-            return jnp.logical_and(rounds < max_rounds, jnp.any(active))
-
-        def body(c):
-            d, pending, emit, eq, rounds = c
-            active = pending & (d <= alpha + window) & (eq < budget)[:, None]
-            srcs = jnp.where(active, d, INF)
-            nd = relax(srcs, w_pp)
-            eq = eq + jnp.sum(jnp.where(active, nnz_pp[None, :], 0), axis=1)
-            emit = emit | active
-            pending = pending & ~active
-            improved = nd < d
-            d = jnp.minimum(d, nd)
-            pending = pending | improved
-            return d, pending, emit, eq, rounds + 1
-
-        eq0 = jnp.zeros(d1.shape[0], dtype=jnp.float32)
-        emit0 = jnp.zeros_like(pending0)
-        d, pending, emit, eq, rounds = jax.lax.while_loop(
-            cond, body, (d1, pending0, emit0, eq0, jnp.int32(0)))
-
-        # ---- emission to neighbor partitions (Alg. 2 line 16, batched) ----
-        srcs = jnp.where(emit, d, INF)
-
-        def emit_one(slot, carry):
-            buf, prio, ops, stamp, eq = carry
-            blk = dg.nbr_blk[p, slot]
-            j = dg.nbr_part[p, slot]
-            valid = j >= 0
-            jj = jnp.where(valid, j, P)              # trash row for padding
-            w_pj = dg.blocks[jnp.where(valid, blk, 0)]
-            cand = jnp.where(valid, relax(srcs, w_pj), INF)
-            eq = eq + jnp.where(
-                valid,
-                jnp.sum(jnp.where(emit, dg.row_nnz[jnp.where(valid, blk, 0)][None, :], 0),
-                        axis=1).astype(jnp.float32),
-                0.0)
-            dj = state.dist[jnp.where(valid, j, 0)]
-            new_row = jnp.minimum(buf[jj], cand)
-            buf = buf.at[jj].set(new_row)
-            pj, vj = _pending_row_prio(new_row, dj)
-            newprio = jnp.min(vj)
-            newops = jnp.sum(pj)
-            was_empty = ~jnp.isfinite(prio[jj % P])
-            prio = prio.at[jj].set(jnp.where(valid, newprio, prio[jj % P]),
-                                   mode="drop")
-            ops = ops.at[jj].set(jnp.where(valid, newops, ops[jj % P]),
-                                 mode="drop")
-            stamp = stamp.at[jj].set(
-                jnp.where(valid & was_empty & jnp.isfinite(newprio),
-                          counter, stamp[jj % P]), mode="drop")
-            return buf, prio, ops, stamp, eq
-
-        carry = (state.buf, state.prio, state.ops_count, state.stamp, eq)
-        buf, prio, ops_count, stamp, eq = jax.lax.fori_loop(
-            0, dg.dmax, emit_one, carry)
-
-        # ---- store yielded/pending ops back into own buffer ----
-        keep_vals = jnp.where(pending, d, INF)
-        buf = buf.at[p].set(keep_vals)
-        own_prio = jnp.min(keep_vals)
-        prio = prio.at[p].set(own_prio)
-        ops_count = ops_count.at[p].set(jnp.sum(pending))
-        stamp = stamp.at[p].set(jnp.where(jnp.isfinite(own_prio), counter,
-                                          jnp.int32(_BIG_STAMP)))
-        dist = state.dist.at[p].set(d)
-        edges = state.edges + (eq - eq0)
-        return MinplusState(dist, buf, prio, ops_count, stamp, edges), rounds
-
-    return visit
-
-
-def init_minplus_state(dg: DeviceGraph, sources: np.ndarray) -> MinplusState:
-    """sources: [Q] vertex ids in the *reordered* id space."""
-    P, B = dg.num_parts, dg.block_size
-    Q = int(len(sources))
-    dist = jnp.full((P, Q, B), INF, dtype=jnp.float32)
-    buf = jnp.full((P + 1, Q, B), INF, dtype=jnp.float32)
-    parts = np.asarray(sources) // B
-    locs = np.asarray(sources) % B
-    buf = buf.at[parts, np.arange(Q), locs].set(0.0)
-    prio = jnp.full((P,), INF, dtype=jnp.float32)
-    prio = prio.at[parts].min(0.0)
-    ops_count = jnp.zeros((P,), dtype=jnp.int32)
-    ops_count = ops_count.at[parts].add(1)
-    stamp = jnp.full((P,), _BIG_STAMP, dtype=jnp.int32)
-    stamp = stamp.at[parts].set(0)
-    edges = jnp.zeros((Q,), dtype=jnp.float32)
-    return MinplusState(dist, buf, prio, ops_count, stamp, edges)
-
-
-# ---------------------------------------------------------------------------
-# push visit (PPR family)
+    """SSSP/BFS visit = the generic kernel under the minplus algebra."""
+    return _visit.make_visit(dg, minplus_algebra(window, relax=relax),
+                             max_rounds)
 
 
 def make_push_visit(dg: DeviceGraph, alpha: float, eps: float, max_rounds: int,
                     spread: Callable = None) -> Callable:
-    spread = spread or minplus_ops.masked_matmul
-    P, B = dg.num_parts, dg.block_size
+    """PPR visit = the generic kernel under the push algebra."""
+    return _visit.make_visit(dg, push_algebra(alpha, eps, spread=spread),
+                             max_rounds)
 
-    @jax.jit
-    def visit(state: PushState, pid: jax.Array, counter: jax.Array):
-        w_pp = dg.blocks[dg.diag_blk[pid]]
-        nnz_pp = dg.row_nnz[dg.diag_blk[pid]]
-        degc = jnp.maximum(dg.deg[pid], 1).astype(jnp.float32)   # [B]
-        thresh = eps * degc
-        pr0 = state.p[pid]
-        r0 = state.r[pid] + state.buf[pid]
-        budget = dg.edge_budget[pid]
-        has_edges = (dg.deg[pid] > 0)
 
-        def cond(c):
-            pr, r, acc, eq, rounds = c
-            active = (r >= thresh[None, :]) & has_edges[None, :] \
-                & (eq < budget)[:, None]
-            return jnp.logical_and(rounds < max_rounds, jnp.any(active))
-
-        def body(c):
-            pr, r, acc, eq, rounds = c
-            active = (r >= thresh[None, :]) & has_edges[None, :] \
-                & (eq < budget)[:, None]
-            af = active.astype(r.dtype)
-            pr = pr + alpha * r * af
-            push = (1.0 - alpha) * r * af / degc[None, :]
-            eq = eq + jnp.sum(jnp.where(active, nnz_pp[None, :], 0), axis=1)
-            s = spread(push, w_pp)
-            r = r * (1.0 - af) + s
-            acc = acc + push
-            return pr, r, acc, eq, rounds + 1
-
-        acc0 = jnp.zeros_like(r0)
-        eq0 = jnp.zeros(r0.shape[0], dtype=jnp.float32)
-        pr, r, acc, eq, rounds = jax.lax.while_loop(
-            cond, body, (pr0, r0, acc0, eq0, jnp.int32(0)))
-
-        def emit_one(slot, carry):
-            buf, prio, ops, stamp, eq = carry
-            blk = dg.nbr_blk[pid, slot]
-            j = dg.nbr_part[pid, slot]
-            valid = j >= 0
-            jj = jnp.where(valid, j, P)
-            w_pj = dg.blocks[jnp.where(valid, blk, 0)]
-            contrib = jnp.where(valid, spread(acc, w_pj), 0.0)
-            eq = eq + jnp.where(
-                valid,
-                jnp.sum((acc > 0)
-                        * dg.row_nnz[jnp.where(valid, blk, 0)][None, :],
-                        axis=1).astype(jnp.float32),
-                0.0)
-            new_row = buf[jj] + contrib
-            buf = buf.at[jj].set(new_row)
-            # neighbor priority: -max residual ratio of (r + buf)
-            rj = state.r[jnp.where(valid, j, 0)] + new_row
-            degj = jnp.maximum(dg.deg[jnp.where(valid, j, 0)], 1)
-            ratio = rj / (eps * degj.astype(jnp.float32)[None, :])
-            ready = ratio >= 1.0
-            newprio = jnp.where(jnp.any(ready), -jnp.max(ratio), INF)
-            was_empty = ~jnp.isfinite(prio[jj % P])
-            prio = prio.at[jj].set(jnp.where(valid, newprio, prio[jj % P]),
-                                   mode="drop")
-            ops = ops.at[jj].set(jnp.where(valid, jnp.sum(ready),
-                                           ops[jj % P]), mode="drop")
-            stamp = stamp.at[jj].set(
-                jnp.where(valid & was_empty & jnp.isfinite(newprio),
-                          counter, stamp[jj % P]), mode="drop")
-            return buf, prio, ops, stamp, eq
-
-        carry = (state.buf, state.prio, state.ops_count, state.stamp, eq)
-        buf, prio, ops_count, stamp, eq = jax.lax.fori_loop(
-            0, dg.dmax, emit_one, carry)
-
-        buf = buf.at[pid].set(jnp.zeros_like(r))
-        ratio = r / thresh[None, :]
-        ready = (ratio >= 1.0) & has_edges[None, :]
-        own_prio = jnp.where(jnp.any(ready), -jnp.max(jnp.where(
-            has_edges[None, :], ratio, -INF)), INF)
-        prio = prio.at[pid].set(own_prio)
-        ops_count = ops_count.at[pid].set(jnp.sum(ready))
-        stamp = stamp.at[pid].set(jnp.where(jnp.isfinite(own_prio), counter,
-                                            jnp.int32(_BIG_STAMP)))
-        pout = state.p.at[pid].set(pr)
-        rout = state.r.at[pid].set(r)
-        edges = state.edges + (eq - eq0)
-        return PushState(pout, rout, buf, prio, ops_count, stamp, edges), rounds
-
-    return visit
+def init_minplus_state(dg: DeviceGraph, sources: np.ndarray) -> VisitState:
+    """sources: [Q] vertex ids in the *reordered* id space."""
+    return _visit.init_engine_state(minplus_algebra(np.inf), dg, sources)
 
 
 def init_push_state(dg: DeviceGraph, sources: np.ndarray,
-                    eps: float) -> PushState:
-    P, B = dg.num_parts, dg.block_size
-    Q = int(len(sources))
-    p = jnp.zeros((P, Q, B), dtype=jnp.float32)
-    r = jnp.zeros((P, Q, B), dtype=jnp.float32)
-    buf = jnp.zeros((P + 1, Q, B), dtype=jnp.float32)
-    parts = np.asarray(sources) // B
-    locs = np.asarray(sources) % B
-    r = r.at[parts, np.arange(Q), locs].set(1.0)
-    deg = np.asarray(dg.deg)
-    degc = np.maximum(deg, 1)
-    rnp = np.zeros((P, B), dtype=np.float32)
-    np.maximum.at(rnp, (parts, locs), 1.0)
-    ratio = rnp / (eps * degc)
-    ready = (ratio >= 1.0) & (deg > 0)
-    prio_np = np.where(ready.any(axis=1),
-                       -np.where(ready, ratio, -np.inf).max(axis=1), np.inf)
-    prio = jnp.asarray(prio_np.astype(np.float32))
-    ops_count = jnp.asarray(ready.sum(axis=1).astype(np.int32))
-    stamp = jnp.asarray(np.where(np.isfinite(prio_np), 0, _BIG_STAMP)
-                        .astype(np.int32))
-    edges = jnp.zeros((Q,), dtype=jnp.float32)
-    return PushState(p, r, buf, prio, ops_count, stamp, edges)
+                    eps: float, alpha: float = 0.15) -> VisitState:
+    return _visit.init_engine_state(push_algebra(alpha, eps), dg, sources)
 
 
 # ---------------------------------------------------------------------------
@@ -359,7 +125,7 @@ def init_push_state(dg: DeviceGraph, sources: np.ndarray,
 class EngineResult:
     values: np.ndarray        # [Q, n] distances (minplus) or PPR mass (push)
     residual: Optional[np.ndarray]
-    edges_processed: np.ndarray  # [Q]
+    edges_processed: np.ndarray  # [Q] float64, exact (host-accumulated)
     stats: VisitStats
     visit_order: list
 
@@ -375,7 +141,8 @@ class FPPEngine:
                  schedule: str = "priority", num_queries: int = 1,
                  alpha: float = 0.15, eps: float = 1e-4, seed: int = 0,
                  use_pallas: bool = False):
-        assert mode in ("minplus", "push")
+        if mode not in MODES:
+            raise ValueError(f"unknown engine mode {mode!r}; one of {MODES}")
         self.bg = bg
         self.mode = mode
         self.yc = yield_config
@@ -385,14 +152,14 @@ class FPPEngine:
         self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
         max_rounds = yield_config.max_rounds or (
             bg.block_size if mode == "minplus" else 64)
-        relax = (minplus_ops.minplus_pallas if use_pallas else None)
-        spread = (minplus_ops.masked_matmul_pallas if use_pallas else None)
         if mode == "minplus":
-            self._visit = make_minplus_visit(self.dg, yield_config.window(),
-                                             max_rounds, relax=relax)
+            relax = minplus_ops.minplus_pallas if use_pallas else None
+            self.algebra: VisitAlgebra = minplus_algebra(
+                yield_config.window(), relax=relax)
         else:
-            self._visit = make_push_visit(self.dg, alpha, eps, max_rounds,
-                                          spread=spread)
+            spread = minplus_ops.masked_matmul_pallas if use_pallas else None
+            self.algebra = push_algebra(alpha, eps, spread=spread)
+        self._visit = _visit.make_visit(self.dg, self.algebra, max_rounds)
         # modeled HBM traffic per visit: diagonal block + touched out-blocks +
         # two state tiles — the cache-miss analogue used by fig10.
         B = bg.block_size
@@ -401,20 +168,25 @@ class FPPEngine:
                              + 2 * num_queries * B * 4).astype(np.float64)
         self._visit_blocks = (1 + out_blocks).astype(np.int64)
 
-    def init_state(self, sources: np.ndarray):
-        if self.mode == "minplus":
-            return init_minplus_state(self.dg, sources)
-        return init_push_state(self.dg, sources, self.eps)
+    def init_state(self, sources: np.ndarray) -> VisitState:
+        return _visit.init_engine_state(self.algebra, self.dg, sources)
 
     def run(self, sources: np.ndarray, max_visits: int | None = None,
             record_order: bool = False) -> EngineResult:
-        assert len(sources) == self.num_queries
+        if len(sources) != self.num_queries:
+            raise ValueError(
+                f"got {len(sources)} sources for an engine planned for "
+                f"num_queries={self.num_queries}; rebuild the engine (or the "
+                f"session plan) with num_queries={len(sources)}")
         state = self.init_state(np.asarray(sources))
         max_visits = max_visits or 2000 * self.bg.num_parts
         visits = rounds = blocks = 0
         traffic = 0.0
         order = []
         counter = 0
+        # edge counts leave the device as exact per-visit int32 and accumulate
+        # here in float64, so totals stay exact past 2^24 (f32) edges.
+        edges = np.zeros(self.num_queries, dtype=np.float64)
         while visits < max_visits:
             prio = np.asarray(state.prio)
             stamp = np.asarray(state.stamp)
@@ -422,7 +194,9 @@ class FPPEngine:
             p = self.scheduler.select(prio, stamp, ops)
             if p is None:
                 break
-            state, r = self._visit(state, jnp.int32(p), jnp.int32(counter))
+            state, (r, eq) = self._visit(state, jnp.int32(p),
+                                         jnp.int32(counter))
+            edges += np.asarray(eq, dtype=np.float64)
             counter += 1
             visits += 1
             rounds += int(r)
@@ -434,18 +208,17 @@ class FPPEngine:
                            modeled_bytes=traffic)
         n = self.bg.n
         if self.mode == "minplus":
-            vals = np.asarray(state.dist).transpose(1, 0, 2).reshape(
+            dist = state.planes[0]
+            vals = np.asarray(dist).transpose(1, 0, 2).reshape(
                 self.num_queries, -1)[:, :n]
-            return EngineResult(vals, None, np.asarray(state.edges), stats,
-                                order)
-        pvals = np.asarray(state.p).transpose(1, 0, 2).reshape(
+            return EngineResult(vals, None, edges, stats, order)
+        pvals = np.asarray(state.planes[0]).transpose(1, 0, 2).reshape(
             self.num_queries, -1)[:, :n]
         # pending buffered contributions ARE residual mass that was never
         # consolidated (below-eps ops at termination): fold them in so
         # p + r conserves probability exactly (test_ppr_mass_is_conserved)
-        rfull = np.asarray(state.r) + np.asarray(
+        rfull = np.asarray(state.planes[1]) + np.asarray(
             state.buf[:self.bg.num_parts])
         rvals = rfull.transpose(1, 0, 2).reshape(
             self.num_queries, -1)[:, :n]
-        return EngineResult(pvals, rvals, np.asarray(state.edges), stats,
-                            order)
+        return EngineResult(pvals, rvals, edges, stats, order)

@@ -1,0 +1,420 @@
+"""The visit algebra — one Algorithm-2 skeleton for every runtime and mode.
+
+The paper's Algorithm 2 is a single shape regardless of query family:
+
+    apply buffered ops   (consolidate into the resident partition's state)
+    relax locally        (until converged, yielded, or out of budget)
+    emit boundary ops    (one contribution per neighbor partition)
+
+The repo used to hand-write that skeleton three times (minplus visit, push
+visit, distributed minplus superstep) and the copies drifted — the push family
+never reached the pod runtime.  This module factors the *mode-specific*
+operators into a :class:`VisitAlgebra` and keeps exactly two generic drivers:
+
+  :func:`make_visit`   the single-device visit kernel (host-scheduled engine)
+  :func:`superstep`    the per-device superstep body (``shard_map`` runtime)
+
+Both are instantiated twice — :func:`minplus_algebra` (SSSP/BFS/BC/LL: buffer
+combines by ``min``, relax is a tropical matmul) and :func:`push_algebra`
+(PPR/NCP: buffer combines by ``+``, relax is a masked residual push).  Any
+future mode (weighted PPR variants, reachability, k-hop sketches) lands in
+*both* runtimes by defining one more operator set here (DESIGN.md §2.1).
+
+Edge accounting is integral on device (int32 per visit — a visit touches far
+fewer than 2^31 edges per query) and accumulated on host in float64, so counts
+stay exact past float32's 2^24 integer ceiling on paper-scale graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.minplus import ops as minplus_ops
+
+INF = jnp.inf
+_BIG_STAMP = np.iinfo(np.int32).max - 1
+
+#: distributed edge counters carry (hi, lo) int32 lanes; lo spills into hi in
+#: units of 2**_EDGE_SHIFT so totals stay exact up to ~2^51 edges per query.
+EDGE_SHIFT = 20
+
+
+# ---------------------------------------------------------------------------
+# algebra: the mode-specific operators of Algorithm 2
+
+
+class MinplusCarry(NamedTuple):
+    d: jax.Array        # [Q, B] tentative values
+    pending: jax.Array  # [Q, B] ops not yet relaxed this visit
+    emit: jax.Array     # [Q, B] rows relaxed this visit (emission sources)
+    alpha: jax.Array    # [Q, 1] best applied value (Δ-window anchor)
+
+
+class PushCarry(NamedTuple):
+    p: jax.Array        # [Q, B] PPR mass
+    r: jax.Array        # [Q, B] residual (buffered ops consolidated in)
+    acc: jax.Array      # [Q, B] accumulated pushed mass (emission payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class VisitAlgebra:
+    """Mode-specific operators; everything else is the shared skeleton.
+
+    Conventions: ``planes`` is a tuple of ``[..., Q, B]`` value planes —
+    ``(dist,)`` for minplus, ``(p, r)`` for push.  ``deg`` broadcasts on the
+    last axis (``[B]`` per-partition row or ``[P, B]`` full), so ``pending``
+    works on both a single resident partition and a whole device shard.
+    """
+    name: str
+    identity: float                  # empty-buffer cell (+inf / 0)
+    source_value: float              # buffered op injected per query source
+    plane_init: Tuple[float, ...]    # initial plane fill values
+    combine: Callable                # consolidate ops: (buf, contrib) -> buf
+    begin: Callable                  # (planes_row, buf_row, deg_row) -> carry
+    active: Callable                 # (carry, deg_row, eq, budget) -> [Q, B]
+    step: Callable                   # (carry, active, w_pp, deg_row) -> carry
+    emit_payload: Callable           # (carry) -> [Q, B] boundary payload
+    emit_mask: Callable              # (carry) -> [Q, B] rows that cost edges
+    contrib: Callable                # (payload, w_pj) -> [Q, B] neighbor ops
+    pending: Callable                # (buf, planes, deg) -> bool [..., Q, B]
+    prio_of: Callable                # (buf_row, planes_row, deg_row)
+    #                                  -> (f32 priority, i32 op count)
+    finish: Callable                 # (carry, deg_row) -> (planes_row', keep)
+
+    @property
+    def num_planes(self) -> int:
+        return len(self.plane_init)
+
+
+def minplus_algebra(window: float, relax: Optional[Callable] = None
+                    ) -> VisitAlgebra:
+    """SSSP/BFS family: ops combine by ``min``, relax is min-plus matmul."""
+    relax = relax or minplus_ops.minplus
+
+    def pending(buf, planes, deg):
+        (d,) = planes
+        return jnp.isfinite(buf) & (buf <= d)
+
+    def prio_of(buf_row, planes_row, deg_row):
+        pend = pending(buf_row, planes_row, deg_row)
+        return (jnp.min(jnp.where(pend, buf_row, INF)),
+                jnp.sum(pend, dtype=jnp.int32))
+
+    def begin(planes_row, buf_row, deg_row):
+        (d0,) = planes_row
+        pending0 = jnp.isfinite(buf_row) & (buf_row <= d0)
+        d1 = jnp.minimum(d0, jnp.where(pending0, buf_row, INF))
+        alpha = jnp.min(jnp.where(pending0, d1, INF), axis=1, keepdims=True)
+        return MinplusCarry(d=d1, pending=pending0,
+                            emit=jnp.zeros_like(pending0), alpha=alpha)
+
+    def active(carry, deg_row, eq, budget):
+        return (carry.pending & (carry.d <= carry.alpha + window)
+                & (eq.astype(jnp.float32) < budget)[:, None])
+
+    def step(carry, act, w_pp, deg_row):
+        srcs = jnp.where(act, carry.d, INF)
+        nd = relax(srcs, w_pp)
+        improved = nd < carry.d
+        return MinplusCarry(d=jnp.minimum(carry.d, nd),
+                            pending=(carry.pending & ~act) | improved,
+                            emit=carry.emit | act, alpha=carry.alpha)
+
+    def finish(carry, deg_row):
+        keep = jnp.where(carry.pending, carry.d, INF)
+        return (carry.d,), keep
+
+    return VisitAlgebra(
+        name="minplus", identity=float(np.inf), source_value=0.0,
+        plane_init=(float(np.inf),), combine=jnp.minimum,
+        begin=begin, active=active, step=step,
+        emit_payload=lambda carry: jnp.where(carry.emit, carry.d, INF),
+        emit_mask=lambda carry: carry.emit,
+        contrib=relax, pending=pending, prio_of=prio_of, finish=finish)
+
+
+def push_algebra(alpha: float, eps: float,
+                 spread: Optional[Callable] = None) -> VisitAlgebra:
+    """PPR family: residual contributions combine by ``+``, relax is a masked
+    ACL push round, priority is the most negative residual ratio."""
+    spread = spread or minplus_ops.masked_matmul
+
+    def _thresh(deg):
+        return eps * jnp.maximum(deg, 1).astype(jnp.float32)
+
+    def pending(buf, planes, deg):
+        _, r = planes
+        return (((r + buf) >= _thresh(deg)[..., None, :])
+                & (deg > 0)[..., None, :])
+
+    def prio_of(buf_row, planes_row, deg_row):
+        _, r = planes_row
+        ratio = (r + buf_row) / _thresh(deg_row)[None, :]
+        has_edges = (deg_row > 0)[None, :]
+        ready = (ratio >= 1.0) & has_edges
+        prio = jnp.where(jnp.any(ready),
+                         -jnp.max(jnp.where(has_edges, ratio, -INF)), INF)
+        return prio, jnp.sum(ready, dtype=jnp.int32)
+
+    def begin(planes_row, buf_row, deg_row):
+        p0, r0 = planes_row
+        return PushCarry(p=p0, r=r0 + buf_row, acc=jnp.zeros_like(r0))
+
+    def active(carry, deg_row, eq, budget):
+        return ((carry.r >= _thresh(deg_row)[None, :])
+                & (deg_row > 0)[None, :]
+                & (eq.astype(jnp.float32) < budget)[:, None])
+
+    def step(carry, act, w_pp, deg_row):
+        degc = jnp.maximum(deg_row, 1).astype(jnp.float32)
+        af = act.astype(carry.r.dtype)
+        pushed = (1.0 - alpha) * carry.r * af / degc[None, :]
+        return PushCarry(p=carry.p + alpha * carry.r * af,
+                         r=carry.r * (1.0 - af) + spread(pushed, w_pp),
+                         acc=carry.acc + pushed)
+
+    def finish(carry, deg_row):
+        return (carry.p, carry.r), jnp.zeros_like(carry.r)
+
+    return VisitAlgebra(
+        name="push", identity=0.0, source_value=1.0, plane_init=(0.0, 0.0),
+        combine=lambda buf, contrib: buf + contrib,
+        begin=begin, active=active, step=step,
+        emit_payload=lambda carry: carry.acc,
+        emit_mask=lambda carry: carry.acc > 0,
+        contrib=spread, pending=pending, prio_of=prio_of, finish=finish)
+
+
+# ---------------------------------------------------------------------------
+# shared state container + initialization
+
+
+class VisitState(NamedTuple):
+    """Engine-side buffered state; the algebra defines what the planes mean."""
+    planes: Tuple[jax.Array, ...]  # mode value planes, each [P, Q, B]
+    buf: jax.Array                 # [P+1, Q, B] pending ops (row P = trash)
+    prio: jax.Array                # [P] best pending priority (+inf empty)
+    ops_count: jax.Array           # [P] pending op count
+    stamp: jax.Array               # [P] visit counter when buf became non-empty
+
+
+def init_dense_state(algebra: VisitAlgebra, num_parts: int, num_queries: int,
+                     block_size: int, sources: np.ndarray,
+                     trash_row: bool = True):
+    """Host-side (planes, buf) with one source op buffered per query lane.
+
+    ``sources``: [k] reordered vertex ids, k <= num_queries — lane ``i`` gets
+    ``sources[i]``; remaining lanes start empty (streaming admission fills
+    them later by the exact same buffered-op injection).
+    """
+    P, Q, B = num_parts, num_queries, block_size
+    planes = tuple(np.full((P, Q, B), v, dtype=np.float32)
+                   for v in algebra.plane_init)
+    buf = np.full((P + (1 if trash_row else 0), Q, B), algebra.identity,
+                  dtype=np.float32)
+    sources = np.asarray(sources)
+    if sources.size:
+        parts, locs = np.divmod(sources, B)
+        buf[parts, np.arange(sources.size), locs] = algebra.source_value
+    return planes, buf
+
+
+def state_meta(algebra: VisitAlgebra, planes, buf, deg, counter: int = 0):
+    """(prio, ops_count, stamp) for every partition, from the algebra's own
+    priority operator — the single source of scheduling truth."""
+    P = deg.shape[0]
+    prio, ops = jax.vmap(algebra.prio_of)(buf[:P], planes, deg)
+    stamp = jnp.where(jnp.isfinite(prio), jnp.int32(counter),
+                      jnp.int32(_BIG_STAMP))
+    return prio, ops, stamp
+
+
+def init_engine_state(algebra: VisitAlgebra, dg, sources: np.ndarray,
+                      num_queries: Optional[int] = None) -> VisitState:
+    """Device state for the host-scheduled engine (trash buffer row included)."""
+    Q = int(num_queries if num_queries is not None else len(sources))
+    planes_np, buf_np = init_dense_state(
+        algebra, dg.num_parts, Q, dg.block_size, sources, trash_row=True)
+    planes = tuple(jnp.asarray(x) for x in planes_np)
+    buf = jnp.asarray(buf_np)
+    prio, ops, stamp = state_meta(algebra, planes, buf, dg.deg)
+    return VisitState(planes, buf, prio, ops, stamp)
+
+
+# ---------------------------------------------------------------------------
+# generic visit kernel (single-device engine)
+
+
+def make_visit(dg, algebra: VisitAlgebra, max_rounds: int) -> Callable:
+    """The one visit kernel (Alg. 2 lines 6-16): apply + relax until yield,
+    then emit one combined contribution per neighbor partition.
+
+    Returns ``visit(state, p, counter) -> (state', (rounds, eq))`` where
+    ``eq`` is this visit's per-query edge count (int32 [Q], exact).
+    """
+    P = dg.num_parts
+
+    @jax.jit
+    def visit(state: VisitState, p: jax.Array, counter: jax.Array):
+        kd = dg.diag_blk[p]
+        w_pp, nnz_pp, deg_p = dg.blocks[kd], dg.row_nnz[kd], dg.deg[p]
+        planes_row = tuple(x[p] for x in state.planes)
+        buf_row = state.buf[p]
+        carry0 = algebra.begin(planes_row, buf_row, deg_p)
+        budget = dg.edge_budget[p]
+
+        def cond(c):
+            carry, eq, rounds = c
+            return jnp.logical_and(
+                rounds < max_rounds,
+                jnp.any(algebra.active(carry, deg_p, eq, budget)))
+
+        def body(c):
+            carry, eq, rounds = c
+            act = algebra.active(carry, deg_p, eq, budget)
+            eq = eq + jnp.sum(jnp.where(act, nnz_pp[None, :], 0), axis=1,
+                              dtype=jnp.int32)
+            return algebra.step(carry, act, w_pp, deg_p), eq, rounds + 1
+
+        eq0 = jnp.zeros(buf_row.shape[0], dtype=jnp.int32)
+        carry, eq, rounds = jax.lax.while_loop(
+            cond, body, (carry0, eq0, jnp.int32(0)))
+
+        # ---- emission to neighbor partitions (Alg. 2 line 16, batched) ----
+        payload = algebra.emit_payload(carry)
+        emask = algebra.emit_mask(carry)
+
+        def emit_one(slot, c):
+            buf, prio, ops, stamp, eq = c
+            blk = dg.nbr_blk[p, slot]
+            j = dg.nbr_part[p, slot]
+            valid = j >= 0
+            jj = jnp.where(valid, j, P)              # trash row for padding
+            j0 = jnp.where(valid, j, 0)
+            blk0 = jnp.where(valid, blk, 0)
+            cand = jnp.where(valid, algebra.contrib(payload, dg.blocks[blk0]),
+                             algebra.identity)
+            eq = eq + jnp.where(
+                valid,
+                jnp.sum(jnp.where(emask, dg.row_nnz[blk0][None, :], 0),
+                        axis=1, dtype=jnp.int32), 0)
+            new_row = algebra.combine(buf[jj], cand)
+            buf = buf.at[jj].set(new_row)
+            planes_j = tuple(x[j0] for x in state.planes)
+            newprio, newops = algebra.prio_of(new_row, planes_j, dg.deg[j0])
+            was_empty = ~jnp.isfinite(prio[jj % P])
+            prio = prio.at[jj].set(jnp.where(valid, newprio, prio[jj % P]),
+                                   mode="drop")
+            ops = ops.at[jj].set(jnp.where(valid, newops, ops[jj % P]),
+                                 mode="drop")
+            stamp = stamp.at[jj].set(
+                jnp.where(valid & was_empty & jnp.isfinite(newprio),
+                          counter, stamp[jj % P]), mode="drop")
+            return buf, prio, ops, stamp, eq
+
+        buf, prio, ops_count, stamp, eq = jax.lax.fori_loop(
+            0, dg.dmax, emit_one,
+            (state.buf, state.prio, state.ops_count, state.stamp, eq))
+
+        # ---- write back own planes, keep yielded ops, refresh priority ----
+        new_rows, keep_row = algebra.finish(carry, deg_p)
+        buf = buf.at[p].set(keep_row)
+        own_prio, own_ops = algebra.prio_of(keep_row, new_rows, deg_p)
+        prio = prio.at[p].set(own_prio)
+        ops_count = ops_count.at[p].set(own_ops)
+        stamp = stamp.at[p].set(jnp.where(jnp.isfinite(own_prio), counter,
+                                          jnp.int32(_BIG_STAMP)))
+        planes = tuple(x.at[p].set(nr)
+                       for x, nr in zip(state.planes, new_rows))
+        return VisitState(planes, buf, prio, ops_count, stamp), (rounds, eq)
+
+    return visit
+
+
+# ---------------------------------------------------------------------------
+# generic superstep (shard_map pod runtime)
+
+
+def superstep(blocks, dstp, nnz, deg, budget, planes, buf, *,
+              algebra: VisitAlgebra, max_rounds: int, pl: int, dmax: int,
+              ndev: int, model_axis: str):
+    """One superstep on one device's shard: visit the locally best-priority
+    partition, then exchange boundary ops with a single ``all_to_all``.
+
+    planes/buf: [pl, Qs, B].  Returns (planes', buf', eq int32 [Qs]).
+    """
+    prio, _ = jax.vmap(algebra.prio_of)(buf, planes, deg)
+    p = jnp.argmin(prio)                  # all-INF => a harmless no-op visit
+
+    w_all, nnz_all, deg_p = blocks[p], nnz[p], deg[p]
+    w_pp, nnz_pp = w_all[0], nnz_all[0]
+    planes_row = tuple(x[p] for x in planes)
+    buf_row = buf[p]
+    carry0 = algebra.begin(planes_row, buf_row, deg_p)
+    budget_p = budget[p]
+    Qs, B = buf_row.shape
+
+    def cond(c):
+        carry, eq, rounds = c
+        return jnp.logical_and(
+            rounds < max_rounds,
+            jnp.any(algebra.active(carry, deg_p, eq, budget_p)))
+
+    def body(c):
+        carry, eq, rounds = c
+        act = algebra.active(carry, deg_p, eq, budget_p)
+        eq = eq + jnp.sum(jnp.where(act, nnz_pp[None, :], 0), axis=1,
+                          dtype=jnp.int32)
+        return algebra.step(carry, act, w_pp, deg_p), eq, rounds + 1
+
+    eq0 = jnp.zeros(Qs, dtype=jnp.int32)
+    carry, eq, _ = jax.lax.while_loop(cond, body, (carry0, eq0, jnp.int32(0)))
+
+    # --- emissions: one contribution per (padded) out-slot ---
+    payload = algebra.emit_payload(carry)
+    emask = algebra.emit_mask(carry)
+    cands = jax.vmap(lambda w: algebra.contrib(payload, w))(w_all[1:])
+    dsts = dstp[p, 1:]                                    # [dmax]
+    eq = eq + jnp.sum(jnp.where(emask[None], nnz_all[1:][:, None, :], 0),
+                      axis=(0, 2), dtype=jnp.int32)
+
+    # route to owner devices over the model axis: payload [ndev, dmax, Qs, B]
+    owner = jnp.where(dsts >= 0, dsts // pl, -1)
+    pay = jnp.full((ndev, dmax, Qs, B), algebra.identity, dtype=buf_row.dtype)
+    slot_dst = jnp.full((ndev, dmax), -1, dtype=jnp.int32)
+
+    def route(s, c):
+        pay, slot_dst = c
+        o = owner[s]
+        valid = o >= 0
+        oo = jnp.where(valid, o, 0)
+        pay = pay.at[oo, s].set(jnp.where(valid, cands[s], pay[oo, s]))
+        slot_dst = slot_dst.at[oo, s].set(
+            jnp.where(valid, dsts[s] % pl, slot_dst[oo, s]))
+        return pay, slot_dst
+
+    pay, slot_dst = jax.lax.fori_loop(0, dmax, route, (pay, slot_dst))
+    recv = jax.lax.all_to_all(pay, model_axis, 0, 0, tiled=False)
+    recv_dst = jax.lax.all_to_all(slot_dst, model_axis, 0, 0, tiled=False)
+
+    # --- write back own planes / yielded ops, apply received contributions --
+    new_rows, keep_row = algebra.finish(carry, deg_p)
+    buf = buf.at[p].set(keep_row)
+    planes = tuple(x.at[p].set(nr) for x, nr in zip(planes, new_rows))
+    flat_recv = recv.reshape(ndev * dmax, Qs, B)
+    flat_dst = recv_dst.reshape(ndev * dmax)
+
+    def apply_one(i, b):
+        l = flat_dst[i]
+        valid = l >= 0
+        ll = jnp.where(valid, l, 0)
+        new = algebra.combine(
+            b[ll], jnp.where(valid, flat_recv[i], algebra.identity))
+        return b.at[ll].set(jnp.where(valid, new, b[ll]))
+
+    buf = jax.lax.fori_loop(0, ndev * dmax, apply_one, buf)
+    return planes, buf, eq

@@ -6,11 +6,14 @@
   baselines    global-frontier GPS engines (core/baselines.py), kept callable
                so every speedup claim stays one flag away from its baseline
 
-Whatever the backend, the caller gets the same contract back: ``values`` is
-float32 ``[Q, n]`` in the *reordered* id space (the session maps back to
-original ids), ``edges_processed`` is float64 ``[Q]``.  That uniformity is
-what lets tests assert all three paths against core/oracles.py bit-for-bit on
-dtype/shape (DESIGN.md §3).
+Every (backend, kind) pair in ``BACKENDS × KINDS`` dispatches — the engine
+and the distributed runtime instantiate the same ``core/visit.py`` algebra
+for both the minplus (sssp/bfs) and push (ppr) families, so no combination
+raises.  Whatever the backend, the caller gets the same contract back:
+``values`` is float32 ``[Q, n]`` in the *reordered* id space (the session
+maps back to original ids), ``edges_processed`` is float64 ``[Q]`` holding
+exact integral counts.  That uniformity is what lets tests assert all three
+paths against core/oracles.py bit-for-bit on dtype/shape (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -45,7 +48,7 @@ def _normalize(values, residual, edges, stats) -> BackendResult:
         stats=stats)
 
 
-def _default_mesh():
+def default_mesh():
     """(data=1, model=ndev) mesh over whatever devices this process has."""
     import jax
     return jax.make_mesh((1, len(jax.devices())), ("data", "model"))
@@ -87,14 +90,15 @@ def run_query(backend: str, kind: str, bg: BlockGraph, sources: np.ndarray,
             "rounds": res.rounds, "modeled_bytes": res.modeled_bytes,
             "modeled_bytes_shared": res.modeled_bytes_shared})
 
-    # distributed
+    # distributed: the same visit algebra at pod scale (DESIGN.md §2.2)
+    from repro.core.distributed import (run_distributed_ppr,
+                                        run_distributed_sssp)
+    mesh = mesh or default_mesh()
     if kind == "ppr":
-        raise NotImplementedError(
-            "distributed backend covers the minplus family (sssp/bfs); "
-            "run ppr on the 'engine' backend (DESIGN.md §3)")
-    from repro.core.distributed import run_distributed_sssp
-    mesh = mesh or _default_mesh()
-    res = run_distributed_sssp(bg, sources, mesh,
-                               yield_config=yield_config)
-    return _normalize(res.values, None, res.edges_processed, {
+        res = run_distributed_ppr(bg, sources, mesh, alpha=alpha, eps=eps,
+                                  yield_config=yield_config)
+    else:
+        res = run_distributed_sssp(bg, sources, mesh,
+                                   yield_config=yield_config)
+    return _normalize(res.values, res.residual, res.edges_processed, {
         "supersteps": res.supersteps})

@@ -6,12 +6,15 @@ One object owns the whole life of a fork-processing pattern:
     sess.plan(num_queries=64)                  # memory-model block-size plan
     res = sess.run("sssp", sources)            # original ids in AND out
     res = sess.run("sssp", sources, backend="baselines")   # same contract
+    res = sess.run("ppr", seeds, backend="distributed")    # pod-scale push
     bc  = sess.bc(sources)                     # applications ride the same path
     stream = sess.stream("sssp", capacity=8)   # queries arriving over time
 
 Everything downstream of here (engine, distributed runtime, baselines) speaks
 the *reordered* id space and partition-major state; the session is the only
-layer that owns ``perm`` and hides it.  All three backends return identical
+layer that owns ``perm`` and hides it.  All three backends serve every query
+kind — both visit-algebra families (minplus and push, core/visit.py) run on
+the single-device engine AND the shard_map pod runtime — and return identical
 dtypes/shapes (see backends.py), so swapping ``backend=`` is a one-word
 experiment, not a rewrite.
 """

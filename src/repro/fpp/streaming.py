@@ -12,10 +12,14 @@ lanes, and between partition visits the executor
     (queries are independent, so per-lane completion is exact), records
     their values, and recycles the lane.
 
-Because yielding/scheduling never change results (paper §5.1) and admission
-only adds ops a one-shot run would have started with, a staggered streaming
-run returns bit-identical minplus answers to the one-shot run of the union —
-``tests/test_fpp_session.py`` pins that property.
+Everything mode-specific — what a buffered op means, when a lane is pending,
+what a partition's priority is — comes from the engine's ``core/visit.py``
+algebra, so minplus (sssp/bfs) and push (ppr) lanes stream through the same
+loop.  Because yielding/scheduling never change results (paper §5.1) and
+admission only adds ops a one-shot run would have started with, a staggered
+streaming run returns bit-identical minplus answers to the one-shot run of
+the union, and push answers within the same eps tolerance the one-shot run
+carries — ``tests/test_fpp_session.py`` pins both properties.
 """
 from __future__ import annotations
 
@@ -27,13 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine as _engine
-from repro.core.engine import FPPEngine, MinplusState, PushState
+from repro.core import visit as _visit
+from repro.core.engine import FPPEngine
 from repro.core.scheduler import PartitionScheduler
 from repro.core.yielding import YieldConfig
 from repro.fpp import planner as _planner
-
-INF = jnp.inf
 
 
 @dataclasses.dataclass
@@ -80,9 +82,9 @@ class StreamingExecutor:
         self.engine = FPPEngine(bg, mode=self.mode, num_queries=self.capacity,
                                 yield_config=yc, schedule=schedule,
                                 alpha=alpha, eps=eps, seed=seed)
+        self.algebra = self.engine.algebra
         self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
         self.state = self._empty_state()
-        self.deg_np = np.asarray(self.engine.dg.deg)
         self.queue: collections.deque = collections.deque()
         self.queries: Dict[int, StreamQuery] = {}
         self.free_slots: List[int] = list(range(self.capacity))
@@ -90,32 +92,19 @@ class StreamingExecutor:
         self.visits = 0
         self.modeled_bytes = 0.0
         self._next_qid = 0
-        if self.mode == "minplus":
-            self._pending_q = jax.jit(lambda d, b: jnp.any(
-                jnp.isfinite(b[:-1]) & (b[:-1] <= d), axis=(0, 2)))
-        else:
-            degc = jnp.maximum(jnp.asarray(self.engine.dg.deg), 1)
-            has_edges = jnp.asarray(self.engine.dg.deg) > 0
-            self._pending_q = jax.jit(lambda r, b: jnp.any(
-                ((r + b[:-1]) >= eps * degc.astype(jnp.float32)[:, None, :])
-                & has_edges[:, None, :], axis=(0, 2)))
+        # per-lane edge counts: exact int32 per visit, float64 on host
+        self._edges = np.zeros(self.capacity, dtype=np.float64)
+        alg, deg = self.algebra, self.engine.dg.deg
+        self._pending_q = jax.jit(lambda planes, buf: jnp.any(
+            alg.pending(buf[:-1], planes, deg), axis=(0, 2)))
+        self._prio_row = jax.jit(alg.prio_of)
 
     # ----------------------------------------------------------- lifecycle
 
-    def _empty_state(self):
-        P, B, Q = (self.engine.dg.num_parts, self.engine.dg.block_size,
-                   self.capacity)
-        prio = jnp.full((P,), INF, dtype=jnp.float32)
-        ops = jnp.zeros((P,), dtype=jnp.int32)
-        stamp = jnp.full((P,), _engine._BIG_STAMP, dtype=jnp.int32)
-        edges = jnp.zeros((Q,), dtype=jnp.float32)
-        if self.mode == "minplus":
-            dist = jnp.full((P, Q, B), INF, dtype=jnp.float32)
-            buf = jnp.full((P + 1, Q, B), INF, dtype=jnp.float32)
-            return MinplusState(dist, buf, prio, ops, stamp, edges)
-        z = jnp.zeros((P, Q, B), dtype=jnp.float32)
-        buf = jnp.zeros((P + 1, Q, B), dtype=jnp.float32)
-        return PushState(z, z, buf, prio, ops, stamp, edges)
+    def _empty_state(self) -> _visit.VisitState:
+        return _visit.init_engine_state(
+            self.algebra, self.engine.dg,
+            np.empty(0, dtype=np.int64), num_queries=self.capacity)
 
     def submit(self, sources: np.ndarray) -> List[int]:
         """Enqueue a batch of sources (original ids); returns their qids."""
@@ -139,22 +128,16 @@ class StreamingExecutor:
         src = int(self.perm[q.source])
         pv, lv = divmod(src, B)
         st = self.state
-        prio_p = float(np.asarray(st.prio[pv]))
-        was_empty = not np.isfinite(prio_p)
-        if self.mode == "minplus":
-            buf = st.buf.at[pv, slot, lv].min(0.0)
-            prio = st.prio.at[pv].min(0.0)
-            ops = st.ops_count.at[pv].add(1)
-            ready = True
-        else:
-            buf = st.buf.at[pv, slot, lv].add(1.0)
-            deg = int(self.deg_np[pv, lv])
-            ratio = 1.0 / (self.eps * max(deg, 1))
-            ready = deg > 0 and ratio >= 1.0
-            prio = st.prio.at[pv].min(-ratio) if ready else st.prio
-            ops = st.ops_count.at[pv].add(1) if ready else st.ops_count
+        was_empty = not np.isfinite(float(np.asarray(st.prio[pv])))
+        buf = st.buf.at[pv, slot, lv].set(self.algebra.combine(
+            st.buf[pv, slot, lv], jnp.float32(self.algebra.source_value)))
+        planes_row = tuple(x[pv] for x in st.planes)
+        newprio, newops = self._prio_row(buf[pv], planes_row,
+                                         self.engine.dg.deg[pv])
+        prio = st.prio.at[pv].set(newprio)
+        ops = st.ops_count.at[pv].set(newops)
         stamp = st.stamp
-        if was_empty and ready:
+        if was_empty and np.isfinite(float(np.asarray(newprio))):
             stamp = stamp.at[pv].set(jnp.int32(self.visits))
         self.state = st._replace(buf=buf, prio=prio, ops_count=ops,
                                  stamp=stamp)
@@ -171,16 +154,11 @@ class StreamingExecutor:
 
     def _reset_slot(self, slot: int):
         st = self.state
-        edges = st.edges.at[slot].set(0.0)
-        if self.mode == "minplus":
-            dist = st.dist.at[:, slot, :].set(INF)
-            buf = st.buf.at[:, slot, :].set(INF)
-            self.state = st._replace(dist=dist, buf=buf, edges=edges)
-        else:
-            p = st.p.at[:, slot, :].set(0.0)
-            r = st.r.at[:, slot, :].set(0.0)
-            buf = st.buf.at[:, slot, :].set(0.0)
-            self.state = st._replace(p=p, r=r, buf=buf, edges=edges)
+        planes = tuple(x.at[:, slot, :].set(v)
+                       for x, v in zip(st.planes, self.algebra.plane_init))
+        buf = st.buf.at[:, slot, :].set(self.algebra.identity)
+        self.state = st._replace(planes=planes, buf=buf)
+        self._edges[slot] = 0.0
 
     def _harvest(self):
         """Finish every active lane with no pending op anywhere."""
@@ -188,22 +166,17 @@ class StreamingExecutor:
         if not active.any():
             return
         st = self.state
-        if self.mode == "minplus":
-            pending = np.asarray(self._pending_q(st.dist, st.buf))
-        else:
-            pending = np.asarray(self._pending_q(st.r, st.buf))
+        pending = np.asarray(self._pending_q(st.planes, st.buf))
         n = self.bg.n
         for slot in np.flatnonzero(active & ~pending):
             q = self.queries[int(self.slot_qid[slot])]
-            if self.mode == "minplus":
-                vals = np.asarray(st.dist[:, slot, :]).reshape(-1)[:n]
-            else:
-                vals = np.asarray(st.p[:, slot, :]).reshape(-1)[:n]
-                rfull = (np.asarray(st.r[:, slot, :])
+            vals = np.asarray(st.planes[0][:, slot, :]).reshape(-1)[:n]
+            if self.mode == "push":
+                rfull = (np.asarray(st.planes[1][:, slot, :])
                          + np.asarray(st.buf[:-1, slot, :])).reshape(-1)[:n]
                 q.residual = rfull[self.perm].astype(np.float32)
             q.values = vals[self.perm].astype(np.float32)
-            q.edges = float(np.asarray(st.edges[slot]))
+            q.edges = float(self._edges[slot])
             q.finished_visit = self.visits
             q.done = True
             self.slot_qid[slot] = -1
@@ -227,8 +200,9 @@ class StreamingExecutor:
             self._harvest()
             self._admit()
             return bool(self.queue) or self.active > 0
-        self.state, _ = self.engine._visit(self.state, jnp.int32(p),
-                                           jnp.int32(self.visits))
+        self.state, (_, eq) = self.engine._visit(self.state, jnp.int32(p),
+                                                 jnp.int32(self.visits))
+        self._edges += np.asarray(eq, dtype=np.float64)
         self.visits += 1
         self.modeled_bytes += float(self.engine._visit_bytes[p])
         if self.visits % self.harvest_every == 0:

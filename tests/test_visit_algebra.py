@@ -1,0 +1,114 @@
+"""The shared visit algebra (core/visit.py): the one Algorithm-2 skeleton.
+
+What these tests pin (ISSUE 3):
+  * the engine's minplus/push visits and the distributed superstep are
+    instantiations of the same algebra — operator laws (combine identity,
+    pending/priority consistency) hold for both operator sets;
+  * state initialization is shared: the source op lives in the buffer for
+    both modes, so one-shot init and streaming admission are the same code;
+  * edge accounting is integral (int32 on device, float64 on host) — counts
+    are exact integers, never drifted float32 sums.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import visit as V  # noqa: E402
+from repro.core.engine import FPPEngine  # noqa: E402
+from repro.core.partition import partition  # noqa: E402
+from repro.graphs.generators import grid2d  # noqa: E402
+
+ALGEBRAS = {
+    "minplus": V.minplus_algebra(np.inf),
+    "push": V.push_algebra(0.15, 1e-3),
+}
+
+
+@pytest.mark.parametrize("name", list(ALGEBRAS))
+def test_combine_identity_law(name):
+    """combine(identity, x) == x — padded emission slots must be no-ops."""
+    alg = ALGEBRAS[name]
+    x = jnp.asarray(np.random.default_rng(0).uniform(0, 2, (3, 8))
+                    .astype(np.float32))
+    ident = jnp.full_like(x, alg.identity)
+    np.testing.assert_array_equal(np.asarray(alg.combine(x, ident)),
+                                  np.asarray(x))
+
+
+@pytest.mark.parametrize("name", list(ALGEBRAS))
+def test_source_injection_is_buffered(name):
+    """Both modes start a query as ONE buffered op — identical to streaming
+    admission, so late arrivals and one-shot inits share one code path."""
+    alg = ALGEBRAS[name]
+    planes, buf = V.init_dense_state(alg, num_parts=4, num_queries=3,
+                                     block_size=8, sources=np.array([1, 9, 30]))
+    assert buf.shape == (5, 3, 8)          # trash row included
+    for x, v in zip(planes, alg.plane_init):
+        assert (x == v).all()              # planes hold no mass yet
+    hits = np.argwhere(buf != alg.identity)
+    np.testing.assert_array_equal(
+        hits, [[0, 0, 1], [1, 1, 1], [3, 2, 6]])
+    assert (buf[hits[:, 0], hits[:, 1], hits[:, 2]]
+            == alg.source_value).all()
+
+
+@pytest.mark.parametrize("name", list(ALGEBRAS))
+def test_prio_consistent_with_pending(name):
+    """prio_of is finite exactly when pending ops exist — the invariant the
+    host scheduler and the distributed argmin both rely on."""
+    alg = ALGEBRAS[name]
+    P, Q, B = 3, 2, 8
+    deg = jnp.asarray(np.random.default_rng(1).integers(0, 4, (P, B))
+                      .astype(np.int32))
+    planes, buf = V.init_dense_state(alg, P, Q, B, np.array([2, 17]))
+    planes = tuple(jnp.asarray(x) for x in planes)
+    buf = jnp.asarray(buf)
+    prio, ops, stamp = V.state_meta(alg, planes, buf, deg)
+    pend = np.asarray(alg.pending(buf[:P], planes, deg))
+    for p in range(P):
+        has = bool(pend[p].any())
+        assert np.isfinite(float(prio[p])) == has, (name, p)
+        assert (int(ops[p]) > 0) == has, (name, p)
+
+
+def test_engine_modes_share_one_generic_kernel():
+    """make_minplus_visit / make_push_visit are instantiations of the single
+    core/visit.py skeleton — no per-mode visit bodies left in core/engine.py."""
+    import inspect
+
+    from repro.core import engine as E
+    for fn in (E.make_minplus_visit, E.make_push_visit):
+        src = inspect.getsource(fn)
+        assert "_visit.make_visit" in src, fn.__name__
+        # no hand-written relax/emit loop bodies remain in the wrappers
+        assert "while_loop" not in src and "fori_loop" not in src, fn.__name__
+    import repro.core.distributed as D
+    dsrc = inspect.getsource(D)
+    assert "_visit.superstep" in dsrc
+    assert "def _superstep_minplus" not in dsrc
+
+
+def test_edge_counts_are_exact_integers():
+    """int32-per-visit / float64-on-host accounting returns exact integral
+    per-query totals (the float32 2^24 ceiling no longer applies)."""
+    g = grid2d(12, 12, seed=3)
+    bg, perm = partition(g, 32, method="bfs")
+    srcs = perm[np.array([0, 70, 143])]
+    for mode, kw in (("minplus", {}), ("push", {"eps": 1e-3})):
+        eng = FPPEngine(bg, mode=mode, num_queries=len(srcs), **kw)
+        res = eng.run(srcs)
+        assert res.edges_processed.dtype == np.float64
+        assert (res.edges_processed == np.round(res.edges_processed)).all()
+        assert (res.edges_processed > 0).all()
+
+
+def test_engine_rejects_wrong_batch_size_with_actionable_error():
+    g = grid2d(6, 6, seed=4)
+    bg, perm = partition(g, 16, method="natural")
+    eng = FPPEngine(bg, mode="minplus", num_queries=2)
+    with pytest.raises(ValueError, match="num_queries=3"):
+        eng.run(perm[np.array([0, 1, 2])])
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        FPPEngine(bg, mode="pull")
