@@ -1,0 +1,93 @@
+"""Dispatch microbench: per-visit host loop vs the K-visit megastep.
+
+The engine's throughput story (ISSUE 4) is that the scheduler decision is
+trivially cheap next to a partition visit, so it belongs on device: the
+host-scheduled loop pays one device->host round trip *per visit* (sync
+prio/stamp/ops, numpy argmin, dispatch one jitted visit, sync eq back),
+the megastep pays one per K visits.  This module measures both — visits/s
+and host-syncs-per-run for the host loop and for megastep K in {1, 8, 64},
+in both visit-algebra modes — and asserts the O(visits/K) sync bound.
+
+Besides the usual results/bench/bench_dispatch.json row dump, the rows are
+mirrored to a top-level ``BENCH_engine.json`` so the engine-dispatch perf
+trajectory persists at the repo root across PRs (CI uploads both).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import rnd, sources_for, timed
+from repro.core.engine import FPPEngine
+from repro.core.partition import partition
+from repro.graphs.generators import grid2d, rmat
+
+COLUMNS = ["kind", "dispatch", "K", "visits", "host_syncs", "runtime_s",
+           "visits_per_s", "edges_per_q"]
+
+K_SWEEP = (1, 8, 64)
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+
+
+def _row(kind, dispatch, K, res, secs):
+    visits = res.stats.visits
+    return {
+        "kind": kind, "dispatch": dispatch, "K": K,
+        "visits": visits, "host_syncs": res.stats.host_syncs,
+        "runtime_s": rnd(secs, 4),
+        "visits_per_s": rnd(visits / max(secs, 1e-9), 1),
+        "edges_per_q": rnd(float(np.mean(res.edges_processed)), 1),
+    }
+
+
+def run(quick: bool = True):
+    if quick:
+        graphs = {"sssp": grid2d(24, 24, seed=0), "ppr": rmat(8, 6, seed=1)}
+        B, Q = 32, 8
+    else:
+        graphs = {"sssp": grid2d(64, 64, seed=0), "ppr": rmat(12, 8, seed=1)}
+        B, Q = 128, 32
+
+    rows = []
+    for kind, g in graphs.items():
+        mode = "push" if kind == "ppr" else "minplus"
+        bg, perm = partition(g, B, method="bfs")
+        srcs = perm[sources_for(g, Q)]
+        kw = dict(mode=mode, num_queries=len(srcs))
+        if kind == "ppr":
+            kw["eps"] = 1e-3 if quick else 1e-4
+
+        # --- baseline: the legacy one-sync-per-visit host loop ---
+        eng = FPPEngine(bg, k_visits=1, **kw)
+        eng.run(srcs, host_loop=True)                   # warm the jit cache
+        res, secs = timed(eng.run, srcs, host_loop=True, repeats=2)
+        assert res.stats.host_syncs == res.stats.visits, \
+            "host loop must sync once per visit"
+        rows.append(_row(kind, "host-loop", 0, res, secs))
+        base_visits = res.stats.visits
+
+        # --- device-resident scheduling at K in {1, 8, 64} ---
+        for K in K_SWEEP:
+            eng = FPPEngine(bg, k_visits=K, **kw)
+            eng.run(srcs)                               # warm the jit cache
+            res, secs = timed(eng.run, srcs, repeats=2)
+            # the acceptance bound: O(visits/K) host synchronizations
+            # (+1 for the final empty chunk that signals termination)
+            assert res.stats.host_syncs <= -(-res.stats.visits // K) + 1, \
+                (kind, K, res.stats.host_syncs, res.stats.visits)
+            # same work, different dispatch: visit count matches the loop
+            # (priority policy is deterministic on both paths)
+            assert res.stats.visits == base_visits, (kind, K)
+            rows.append(_row(kind, "megastep", K, res, secs))
+
+    with open(ROOT_JSON, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_table
+    print(fmt_table(run(quick=True), COLUMNS))

@@ -23,6 +23,7 @@ MODULES = [
     "table4_tuning",      # Table 4: scheduling + yield threshold sweeps
     "fig15_scaling",      # Fig 15: query-count scaling
     "fig16_partition_size",  # Fig 16: partition-size sweep
+    "bench_dispatch",     # ISSUE 4: host-loop vs K-visit megastep dispatch
 ]
 
 

@@ -3,9 +3,14 @@
 One *visit* makes a partition resident (HBM->VMEM via the Pallas kernels on
 real hardware; a [B, B] block on CPU) and drains its buffered operations for
 all Q queries at once.  The visit body itself lives in ``core/visit.py`` as a
-single generic skeleton; this module owns the *host-driven* engine around it
-(device graph staging, the scheduler loop, traffic modeling) and instantiates
-the skeleton for both modes:
+single generic skeleton; this module owns the engine around it (device graph
+staging, traffic modeling) and instantiates the skeleton for both modes.
+The hot loop is *device-resident*: ``FPPEngine.run`` dispatches K-visit
+megasteps (``core/visit.make_megastep``) whose scheduler decision is an
+on-device argmin over the ``[P]`` metadata planes, so the host is consulted
+once per K visits — O(visits/K) synchronizations instead of O(visits)
+(``host_loop=True`` keeps the legacy per-visit loop as the tested oracle).
+The two modes:
 
   minplus mode (SSSP / BFS / BC / LL):
     d <- min(d, buf)                      # apply + consolidate buffered ops
@@ -49,6 +54,8 @@ class VisitStats(NamedTuple):
     rounds: int
     blocks_loaded: int
     modeled_bytes: float  # modeled HBM->VMEM traffic (cache-miss analogue)
+    host_syncs: int = 0   # device->host round trips the run paid (megastep:
+    #                       one per K-visit chunk; host loop: one per visit)
 
 
 # ---------------------------------------------------------------------------
@@ -140,18 +147,23 @@ class FPPEngine:
                  yield_config: YieldConfig = YieldConfig(),
                  schedule: str = "priority", num_queries: int = 1,
                  alpha: float = 0.15, eps: float = 1e-4, seed: int = 0,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, k_visits: int = 64):
         if mode not in MODES:
             raise ValueError(f"unknown engine mode {mode!r}; one of {MODES}")
+        if k_visits < 1:
+            raise ValueError(f"k_visits must be >= 1, got {k_visits}")
         self.bg = bg
         self.mode = mode
         self.yc = yield_config
         self.num_queries = num_queries
         self.alpha, self.eps = alpha, eps
+        self.seed = seed
+        self.k_visits = int(k_visits)
         self.dg = DeviceGraph.build(bg, yield_config, num_queries)
         self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
         max_rounds = yield_config.max_rounds or (
             bg.block_size if mode == "minplus" else 64)
+        self.max_rounds = max_rounds
         if mode == "minplus":
             relax = minplus_ops.minplus_pallas if use_pallas else None
             self.algebra: VisitAlgebra = minplus_algebra(
@@ -160,6 +172,10 @@ class FPPEngine:
             spread = minplus_ops.masked_matmul_pallas if use_pallas else None
             self.algebra = push_algebra(alpha, eps, spread=spread)
         self._visit = _visit.make_visit(self.dg, self.algebra, max_rounds)
+        # the hot loop: K visits per host dispatch, scheduler on device
+        self._megastep = _visit.make_megastep(
+            self.dg, self.algebra, max_rounds, policy=schedule,
+            K=self.k_visits)
         # modeled HBM traffic per visit: diagonal block + touched out-blocks +
         # two state tiles — the cache-miss analogue used by fig10.
         B = bg.block_size
@@ -172,7 +188,18 @@ class FPPEngine:
         return _visit.init_engine_state(self.algebra, self.dg, sources)
 
     def run(self, sources: np.ndarray, max_visits: int | None = None,
-            record_order: bool = False) -> EngineResult:
+            record_order: bool = False,
+            host_loop: bool = False) -> EngineResult:
+        """Run the engine to completion (or ``max_visits``).
+
+        The default path dispatches K-visit *megasteps*: partition selection
+        happens on device and the host is consulted O(visits/K) times — one
+        dispatch + one small stats harvest per chunk (``stats.host_syncs``
+        counts them).  ``host_loop=True`` keeps the legacy one-sync-per-visit
+        loop with the numpy :class:`PartitionScheduler`; it is the oracle the
+        megastep is tested against (tests/test_megastep.py) and the baseline
+        the dispatch microbench compares (benchmarks/bench_dispatch.py).
+        """
         if len(sources) != self.num_queries:
             raise ValueError(
                 f"got {len(sources)} sources for an engine planned for "
@@ -180,12 +207,51 @@ class FPPEngine:
                 f"session plan) with num_queries={len(sources)}")
         state = self.init_state(np.asarray(sources))
         max_visits = max_visits or 2000 * self.bg.num_parts
+        if host_loop:
+            return self._run_host_loop(state, max_visits, record_order)
+        visits = rounds = syncs = 0
+        order: list = []
+        counts = np.zeros(self.dg.num_parts, dtype=np.int64)
+        # edge counts leave the device as an exact (hi, lo) int32 pair per
+        # chunk and accumulate here in float64, so totals stay exact past
+        # 2^24 (f32) edges.
+        edges = np.zeros(self.num_queries, dtype=np.float64)
+        key = jax.random.PRNGKey(self.seed)
+        while visits < max_visits:
+            limit = min(self.k_visits, max_visits - visits)
+            state, ms = self._megastep(state, jnp.int32(visits),
+                                       jnp.int32(limit), key)
+            syncs += 1
+            v = int(ms.visits)          # the one host sync per chunk
+            if v == 0:
+                break
+            key = ms.key
+            edges += _visit.harvest_edges(ms.eq_hi, ms.eq_lo)
+            counts += np.asarray(ms.visit_counts, dtype=np.int64)
+            visits += v
+            rounds += int(ms.rounds)
+            if record_order:
+                order.extend(int(x) for x in np.asarray(ms.order)[:v])
+            if v < limit:
+                # the while-cond can only exit below the limit when no
+                # partition holds a pending op: the run is complete, no
+                # empty confirmation dispatch needed
+                break
+        stats = VisitStats(
+            visits=visits, rounds=rounds,
+            blocks_loaded=int(counts @ self._visit_blocks),
+            modeled_bytes=float(counts @ self._visit_bytes),
+            host_syncs=syncs)
+        return self._finalize(state, edges, stats, order)
+
+    def _run_host_loop(self, state: VisitState, max_visits: int,
+                       record_order: bool) -> EngineResult:
+        """Legacy per-visit loop: prio/stamp/ops sync to host, numpy argmin,
+        one jitted visit per dispatch — O(visits) host synchronizations."""
         visits = rounds = blocks = 0
         traffic = 0.0
-        order = []
+        order: list = []
         counter = 0
-        # edge counts leave the device as exact per-visit int32 and accumulate
-        # here in float64, so totals stay exact past 2^24 (f32) edges.
         edges = np.zeros(self.num_queries, dtype=np.float64)
         while visits < max_visits:
             prio = np.asarray(state.prio)
@@ -205,7 +271,11 @@ class FPPEngine:
             if record_order:
                 order.append(p)
         stats = VisitStats(visits=visits, rounds=rounds, blocks_loaded=blocks,
-                           modeled_bytes=traffic)
+                           modeled_bytes=traffic, host_syncs=visits)
+        return self._finalize(state, edges, stats, order)
+
+    def _finalize(self, state: VisitState, edges: np.ndarray,
+                  stats: VisitStats, order: list) -> EngineResult:
         n = self.bg.n
         if self.mode == "minplus":
             dist = state.planes[0]

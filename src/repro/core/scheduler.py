@@ -10,8 +10,12 @@ The scheduler selects which partition to make cache/VMEM-resident next:
   max_ops    most pending ops first — cache-reuse-greedy; the paper shows it is
              counterproductive (more redundant work than random)
 
-Scores are produced on device by the engine; selection is a host-side argmin —
-|P| is small (<< |V|), exactly the paper's STL priority-queue argument.
+Scores are produced on device by the engine.  In the hot path selection is
+on-device too (``core/visit.device_select``, inside the K-visit megastep);
+this host implementation is the *oracle* the device policies are tested
+against (tests/test_megastep.py) and what the legacy per-visit loop and the
+streaming ``step()`` path still call — |P| is small (<< |V|), exactly the
+paper's STL priority-queue argument.
 """
 from __future__ import annotations
 
@@ -30,9 +34,18 @@ class PartitionScheduler:
 
     def select(self, prio: np.ndarray, stamp: np.ndarray,
                ops_count: np.ndarray) -> int | None:
-        """prio: [P] lower=more urgent, +inf empty. stamp: [P] visit counter at
-        which the buffer last became non-empty (int64, huge for empty).
-        ops_count: [P] pending op count. Returns partition id or None (done)."""
+        """prio: [P] float32, lower=more urgent, +inf empty.  stamp: [P]
+        *int32* visit counter at which the buffer last became non-empty
+        (empty rows carry the int32-max-1 sentinel from core/visit.py, so
+        the fifo masking below is belt-and-braces, not a dtype rescue —
+        the docstring used to claim int64, which the device state never
+        was).  ops_count: [P] pending op count.  Returns the partition id,
+        or None when every buffer is drained (run complete).
+
+        Deterministic policies here and in ``core/visit.device_select``
+        must agree bit-for-bit, first-index ties included; ``random`` is
+        numpy-Generator-driven here and threefry-driven on device (both
+        uniform over non-empty partitions, streams differ)."""
         nonempty = np.isfinite(prio)
         if not nonempty.any():
             return None

@@ -9,10 +9,14 @@ The paper's Algorithm 2 is a single shape regardless of query family:
 The repo used to hand-write that skeleton three times (minplus visit, push
 visit, distributed minplus superstep) and the copies drifted — the push family
 never reached the pod runtime.  This module factors the *mode-specific*
-operators into a :class:`VisitAlgebra` and keeps exactly two generic drivers:
+operators into a :class:`VisitAlgebra` and keeps exactly three generic drivers:
 
-  :func:`make_visit`   the single-device visit kernel (host-scheduled engine)
-  :func:`superstep`    the per-device superstep body (``shard_map`` runtime)
+  :func:`make_visit`     the single-device visit kernel (one visit per dispatch)
+  :func:`make_megastep`  K visits per host dispatch: partition selection is an
+                         on-device argmin/argmax over the ``[P]`` metadata
+                         planes and the visit body runs in a ``lax.while_loop``
+                         (DESIGN.md §2.3) — the engine's hot loop
+  :func:`superstep`      the per-device superstep body (``shard_map`` runtime)
 
 Both are instantiated twice — :func:`minplus_algebra` (SSSP/BFS/BC/LL: buffer
 combines by ``min``, relax is a tropical matmul) and :func:`push_algebra`
@@ -37,6 +41,7 @@ from repro.kernels.minplus import ops as minplus_ops
 
 INF = jnp.inf
 _BIG_STAMP = np.iinfo(np.int32).max - 1
+_INT32_MAX = np.iinfo(np.int32).max
 
 #: distributed edge counters carry (hi, lo) int32 lanes; lo spills into hi in
 #: units of 2**_EDGE_SHIFT so totals stay exact up to ~2^51 edges per query.
@@ -80,6 +85,9 @@ class VisitAlgebra:
     emit_payload: Callable           # (carry) -> [Q, B] boundary payload
     emit_mask: Callable              # (carry) -> [Q, B] rows that cost edges
     contrib: Callable                # (payload, w_pj) -> [Q, B] neighbor ops
+    scatter: Callable                # (buf, idx [S], cands [S, Q, B]) -> buf;
+    #                                  segment-combine: duplicate idx entries
+    #                                  fold by ``combine`` (min / add)
     pending: Callable                # (buf, planes, deg) -> bool [..., Q, B]
     prio_of: Callable                # (buf_row, planes_row, deg_row)
     #                                  -> (f32 priority, i32 op count)
@@ -134,7 +142,9 @@ def minplus_algebra(window: float, relax: Optional[Callable] = None
         begin=begin, active=active, step=step,
         emit_payload=lambda carry: jnp.where(carry.emit, carry.d, INF),
         emit_mask=lambda carry: carry.emit,
-        contrib=relax, pending=pending, prio_of=prio_of, finish=finish)
+        contrib=relax,
+        scatter=lambda buf, idx, cands: buf.at[idx].min(cands),
+        pending=pending, prio_of=prio_of, finish=finish)
 
 
 def push_algebra(alpha: float, eps: float,
@@ -186,7 +196,9 @@ def push_algebra(alpha: float, eps: float,
         begin=begin, active=active, step=step,
         emit_payload=lambda carry: carry.acc,
         emit_mask=lambda carry: carry.acc > 0,
-        contrib=spread, pending=pending, prio_of=prio_of, finish=finish)
+        contrib=spread,
+        scatter=lambda buf, idx, cands: buf.at[idx].add(cands),
+        pending=pending, prio_of=prio_of, finish=finish)
 
 
 # ---------------------------------------------------------------------------
@@ -249,16 +261,17 @@ def init_engine_state(algebra: VisitAlgebra, dg, sources: np.ndarray,
 # generic visit kernel (single-device engine)
 
 
-def make_visit(dg, algebra: VisitAlgebra, max_rounds: int) -> Callable:
-    """The one visit kernel (Alg. 2 lines 6-16): apply + relax until yield,
-    then emit one combined contribution per neighbor partition.
+def _make_visit_body(dg, algebra: VisitAlgebra, max_rounds: int) -> Callable:
+    """The unjitted visit body (Alg. 2 lines 6-16): apply + relax until
+    yield, then emit one combined contribution per neighbor partition.
 
-    Returns ``visit(state, p, counter) -> (state', (rounds, eq))`` where
-    ``eq`` is this visit's per-query edge count (int32 [Q], exact).
+    ``visit(state, p, counter) -> (state', (rounds, eq))`` where ``eq`` is
+    this visit's per-query edge count (int32 [Q], exact).  :func:`make_visit`
+    jits it for per-visit host dispatch; :func:`make_megastep` runs it inside
+    a device-resident ``lax.while_loop``.
     """
     P = dg.num_parts
 
-    @jax.jit
     def visit(state: VisitState, p: jax.Array, counter: jax.Array):
         kd = dg.diag_blk[p]
         w_pp, nnz_pp, deg_p = dg.blocks[kd], dg.row_nnz[kd], dg.deg[p]
@@ -284,41 +297,34 @@ def make_visit(dg, algebra: VisitAlgebra, max_rounds: int) -> Callable:
         carry, eq, rounds = jax.lax.while_loop(
             cond, body, (carry0, eq0, jnp.int32(0)))
 
-        # ---- emission to neighbor partitions (Alg. 2 line 16, batched) ----
+        # ---- emission to neighbor partitions (Alg. 2 line 16): ONE batched
+        # contrib over all neighbor blocks (vmap) + a single segment-combine
+        # scatter, instead of a serial dmax-step fori_loop ----
         payload = algebra.emit_payload(carry)
         emask = algebra.emit_mask(carry)
-
-        def emit_one(slot, c):
-            buf, prio, ops, stamp, eq = c
-            blk = dg.nbr_blk[p, slot]
-            j = dg.nbr_part[p, slot]
-            valid = j >= 0
-            jj = jnp.where(valid, j, P)              # trash row for padding
-            j0 = jnp.where(valid, j, 0)
-            blk0 = jnp.where(valid, blk, 0)
-            cand = jnp.where(valid, algebra.contrib(payload, dg.blocks[blk0]),
-                             algebra.identity)
-            eq = eq + jnp.where(
-                valid,
-                jnp.sum(jnp.where(emask, dg.row_nnz[blk0][None, :], 0),
-                        axis=1, dtype=jnp.int32), 0)
-            new_row = algebra.combine(buf[jj], cand)
-            buf = buf.at[jj].set(new_row)
-            planes_j = tuple(x[j0] for x in state.planes)
-            newprio, newops = algebra.prio_of(new_row, planes_j, dg.deg[j0])
-            was_empty = ~jnp.isfinite(prio[jj % P])
-            prio = prio.at[jj].set(jnp.where(valid, newprio, prio[jj % P]),
-                                   mode="drop")
-            ops = ops.at[jj].set(jnp.where(valid, newops, ops[jj % P]),
-                                 mode="drop")
-            stamp = stamp.at[jj].set(
-                jnp.where(valid & was_empty & jnp.isfinite(newprio),
-                          counter, stamp[jj % P]), mode="drop")
-            return buf, prio, ops, stamp, eq
-
-        buf, prio, ops_count, stamp, eq = jax.lax.fori_loop(
-            0, dg.dmax, emit_one,
-            (state.buf, state.prio, state.ops_count, state.stamp, eq))
+        parts = dg.nbr_part[p]                         # [dmax] (-1 pad)
+        valid = parts >= 0
+        blk0 = jnp.where(valid, dg.nbr_blk[p], 0)
+        j0 = jnp.where(valid, parts, 0)                # clamped gather index
+        jj = jnp.where(valid, parts, P)                # trash row for padding
+        cands = jax.vmap(lambda w: algebra.contrib(payload, w))(
+            dg.blocks[blk0])                           # [dmax, Q, B]
+        cands = jnp.where(valid[:, None, None], cands, algebra.identity)
+        nnz_sl = jnp.where(valid[:, None], dg.row_nnz[blk0], 0)  # [dmax, B]
+        eq = eq + jnp.sum(jnp.where(emask[None], nnz_sl[:, None, :], 0),
+                          axis=(0, 2), dtype=jnp.int32)
+        was_empty = ~jnp.isfinite(state.prio)          # [P], pre-emission
+        buf = algebra.scatter(state.buf, jj, cands)
+        # metadata refresh gathers AFTER the full scatter, so duplicate
+        # destinations all observe the combined row (order-independent)
+        planes_j = tuple(x[j0] for x in state.planes)
+        newprio, newops = jax.vmap(algebra.prio_of)(buf[j0], planes_j,
+                                                    dg.deg[j0])
+        prio = state.prio.at[jj].set(newprio, mode="drop")
+        ops_count = state.ops_count.at[jj].set(newops, mode="drop")
+        stamp = state.stamp.at[jj].set(
+            jnp.where(was_empty[j0] & jnp.isfinite(newprio), counter,
+                      state.stamp[j0]), mode="drop")
 
         # ---- write back own planes, keep yielded ops, refresh priority ----
         new_rows, keep_row = algebra.finish(carry, deg_p)
@@ -333,6 +339,141 @@ def make_visit(dg, algebra: VisitAlgebra, max_rounds: int) -> Callable:
         return VisitState(planes, buf, prio, ops_count, stamp), (rounds, eq)
 
     return visit
+
+
+def make_visit(dg, algebra: VisitAlgebra, max_rounds: int) -> Callable:
+    """The one visit kernel, jitted for per-visit host dispatch.
+
+    ``visit(state, p, counter) -> (state', (rounds, eq))``.
+    """
+    return jax.jit(_make_visit_body(dg, algebra, max_rounds))
+
+
+# ---------------------------------------------------------------------------
+# device-resident scheduling: the K-visit megastep (DESIGN.md §2.3)
+
+
+def device_select(policy: str, prio: jax.Array, stamp: jax.Array,
+                  ops_count: jax.Array, key: jax.Array) -> jax.Array:
+    """On-device mirror of ``PartitionScheduler.select`` (the host oracle).
+
+    Returns the selected partition index (i32 scalar); the caller guarantees
+    at least one finite-priority partition (the megastep's while-cond).  The
+    deterministic policies reproduce the host argmin/argmax bit-for-bit,
+    including first-index tie-breaking; ``random`` draws a uniform per
+    partition from the carried threefry ``key`` and argmaxes it over the
+    non-empty set — a uniform choice, seeded and replayable on device (the
+    host scheduler's numpy ``Generator`` stream differs, but scheduling
+    never changes results, paper §5.1).
+    """
+    if policy == "priority":
+        return jnp.argmin(prio)
+    nonempty = jnp.isfinite(prio)
+    if policy == "fifo":
+        return jnp.argmin(jnp.where(nonempty, stamp, jnp.int32(_INT32_MAX)))
+    if policy == "max_ops":
+        return jnp.argmax(jnp.where(nonempty, ops_count, jnp.int32(-1)))
+    if policy == "random":
+        u = jax.random.uniform(key, prio.shape)
+        return jnp.argmax(jnp.where(nonempty, u, -1.0))
+    raise ValueError(f"unknown scheduling policy {policy!r}")
+
+
+class MegastepStats(NamedTuple):
+    """Per-chunk device accumulators, harvested once per host dispatch."""
+    visits: jax.Array        # i32 scalar: visits executed this chunk (<= K)
+    rounds: jax.Array        # i32 scalar: total relaxation rounds
+    eq_hi: jax.Array         # [Q] i32: per-query edge count, high lane
+    eq_lo: jax.Array         # [Q] i32: low lane (< 2**EDGE_SHIFT)
+    visit_counts: jax.Array  # [P] i32: visits per partition (traffic model)
+    order: jax.Array         # [K] i32 visit-order ring (-1 = unused slot)
+    lane_pending: jax.Array  # [Q] bool: query lane still has a pending op
+    #                          anywhere (streaming harvest, same dispatch)
+    key: jax.Array           # threefry key to carry into the next chunk
+
+
+def make_megastep(dg, algebra: VisitAlgebra, max_rounds: int,
+                  policy: str = "priority", K: int = 64,
+                  harvest_mask: bool = False) -> Callable:
+    """Device-resident scheduling loop: up to K visits per host dispatch.
+
+    Wraps the visit body in a ``lax.while_loop`` whose scheduler decision is
+    an on-device argmin/argmax over the ``[P]`` prio/stamp/ops planes the
+    visit kernel already maintains (``random`` draws from a threefry key
+    carried in the loop), so the host is consulted once per K visits instead
+    of once per visit.  Per-visit stats accumulate on device
+    (:class:`MegastepStats`) and are harvested once per chunk; the edge
+    counters carry an exact ``(hi, lo)`` int32 pair per query (lo spills
+    into hi in 2**EDGE_SHIFT units, the distributed-runtime idiom).
+
+    Returns ``megastep(state, counter, limit, key) -> (state', stats)``:
+    ``counter`` is the global visit counter at chunk start (stamps continue
+    across chunks), ``limit`` dynamically caps this chunk at
+    ``min(limit, K)`` visits (exact ``max_visits`` semantics without a
+    recompile), and the loop exits early when no partition holds a pending
+    op — ``stats.visits < limit`` is the host's termination signal.
+
+    ``harvest_mask=True`` additionally reduces the per-query pending-lane
+    mask from the chunk-end state into ``stats.lane_pending`` — the
+    streaming executor's harvest rides the same dispatch.  Plain engine
+    runs never read it, so they skip the [P, Q, B] reduction (the field is
+    an empty placeholder).
+    """
+    from repro.core.scheduler import POLICIES
+    if policy not in POLICIES:
+        raise ValueError(f"unknown scheduling policy {policy!r}; "
+                         f"one of {POLICIES}")
+    if K < 1:
+        raise ValueError(f"megastep chunk size K must be >= 1, got {K}")
+    visit = _make_visit_body(dg, algebra, max_rounds)
+    P = dg.num_parts
+
+    @jax.jit
+    def megastep(state: VisitState, counter: jax.Array, limit: jax.Array,
+                 key: jax.Array):
+        limit_k = jnp.minimum(jnp.int32(limit), jnp.int32(K))
+
+        def cond(c):
+            st, k = c[0], c[1]
+            return jnp.logical_and(k < limit_k,
+                                   jnp.any(jnp.isfinite(st.prio)))
+
+        def body(c):
+            st, k, rounds, hi, lo, counts, order, key = c
+            if policy == "random":          # trace-time: only the random
+                key, sub = jax.random.split(key)  # policy consumes entropy
+            else:
+                sub = key
+            p = device_select(policy, st.prio, st.stamp, st.ops_count, sub)
+            st, (r, eq) = visit(st, p, counter + k)
+            lo = lo + eq
+            spill = lo >> EDGE_SHIFT
+            hi = hi + spill
+            lo = lo - (spill << EDGE_SHIFT)
+            counts = counts.at[p].add(1)
+            order = order.at[k].set(p.astype(jnp.int32))
+            return st, k + 1, rounds + r, hi, lo, counts, order, key
+
+        Q = state.buf.shape[1]
+        init = (state, jnp.int32(0), jnp.int32(0),
+                jnp.zeros(Q, jnp.int32), jnp.zeros(Q, jnp.int32),
+                jnp.zeros(P, jnp.int32), jnp.full((K,), -1, jnp.int32), key)
+        st, k, rounds, hi, lo, counts, order, key = jax.lax.while_loop(
+            cond, body, init)
+        lane_pending = (jnp.any(
+            algebra.pending(st.buf[:P], st.planes, dg.deg), axis=(0, 2))
+            if harvest_mask else jnp.zeros((0,), dtype=bool))
+        return st, MegastepStats(visits=k, rounds=rounds, eq_hi=hi, eq_lo=lo,
+                                 visit_counts=counts, order=order,
+                                 lane_pending=lane_pending, key=key)
+
+    return megastep
+
+
+def harvest_edges(eq_hi: np.ndarray, eq_lo: np.ndarray) -> np.ndarray:
+    """Fold a harvested (hi, lo) int32 pair into exact float64 edge counts."""
+    return (np.asarray(eq_hi, dtype=np.float64) * float(1 << EDGE_SHIFT)
+            + np.asarray(eq_lo, dtype=np.float64))
 
 
 # ---------------------------------------------------------------------------

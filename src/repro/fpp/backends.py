@@ -77,7 +77,8 @@ def run_query(backend: str, kind: str, bg: BlockGraph, sources: np.ndarray,
         return _normalize(res.values, res.residual, res.edges_processed, {
             "visits": res.stats.visits, "rounds": res.stats.rounds,
             "blocks_loaded": res.stats.blocks_loaded,
-            "modeled_bytes": res.stats.modeled_bytes})
+            "modeled_bytes": res.stats.modeled_bytes,
+            "host_syncs": res.stats.host_syncs})
 
     if backend == "baselines":
         if kind == "ppr":

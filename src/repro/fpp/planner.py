@@ -127,7 +127,11 @@ def measure_run(session, kind: str, sources: np.ndarray,
     The reusable measurement unit behind ``autotune_block_size`` and the
     benchmark sweeps (table4 policies/thresholds, fig16 block sizes).
     Partitioning is warmed outside the timed window — it is a one-time
-    per-graph cost, not part of the execution being compared.
+    per-graph cost, not part of the execution being compared.  The engine
+    backend runs its K-visit megastep loop here like everywhere else, so
+    the measured candidates see the real O(visits/K) dispatch cost
+    (``host_syncs`` is recorded per row; benchmarks/bench_dispatch.py
+    sweeps K itself).
     """
     session.prepared(block_size=overrides.get("block_size"),
                      method=overrides.get("method"),
@@ -138,6 +142,7 @@ def measure_run(session, kind: str, sources: np.ndarray,
     return {
         "runtime_s": secs,
         "visits": res.stats.get("visits", 0),
+        "host_syncs": res.stats.get("host_syncs", 0),
         "traffic_bytes": res.stats.get("modeled_bytes", 0.0),
         "edges_per_q": float(np.mean(res.edges_processed)),
     }

@@ -151,15 +151,21 @@ class FPPSession:
                schedule: Optional[str] = None,
                yield_config: Optional[YieldConfig] = None,
                alpha: float = 0.15, eps: float = 1e-4,
-               harvest_every: int = 1):
+               harvest_every: int = 1, k_visits: int = 64):
         """A streaming executor: submit query batches as they arrive
-        (fpp/streaming.py); answers match the one-shot run of the union."""
+        (fpp/streaming.py); answers match the one-shot run of the union.
+        ``k_visits`` sets the device-resident chunk size — admission and
+        harvest happen at chunk boundaries (DESIGN.md §3.3), so it is also
+        the lane-recycling latency knob: lower K = fresher harvests, more
+        host syncs.  ``harvest_every`` only affects the legacy per-visit
+        ``step()`` cadence; the default ``pump()``/``run()`` path harvests
+        once per chunk regardless."""
         from repro.fpp.streaming import StreamingExecutor
         return StreamingExecutor(
             self, kind=kind, capacity=capacity,
             schedule=schedule or self.current_plan.schedule,
             yield_config=yield_config, alpha=alpha, eps=eps,
-            harvest_every=harvest_every)
+            harvest_every=harvest_every, k_visits=k_visits)
 
     # --------------------------------------------------- paper applications
 

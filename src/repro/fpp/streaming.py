@@ -12,6 +12,15 @@ lanes, and between partition visits the executor
     (queries are independent, so per-lane completion is exact), records
     their values, and recycles the lane.
 
+The visits between those boundaries run as device-resident K-visit
+*megasteps* (``core/visit.make_megastep``): partition selection happens on
+device and the host is consulted once per chunk, not once per visit.
+Admission and harvest move to chunk boundaries — which the DESIGN.md §3.3
+exactness argument already permits: admission only adds ops a one-shot run
+would have started with, and harvesting later never changes a finished
+lane's values, so chunking delays *when* lanes recycle, never *what* a
+query answers.
+
 Everything mode-specific — what a buffered op means, when a lane is pending,
 what a partition's priority is — comes from the engine's ``core/visit.py``
 algebra, so minplus (sssp/bfs) and push (ppr) lanes stream through the same
@@ -66,13 +75,16 @@ class StreamingExecutor:
                  schedule: str = "priority",
                  yield_config: Optional[YieldConfig] = None,
                  alpha: float = 0.15, eps: float = 1e-4,
-                 harvest_every: int = 1, seed: int = 0):
+                 harvest_every: int = 1, seed: int = 0,
+                 k_visits: int = 64):
         if kind not in ("sssp", "bfs", "ppr"):
             raise ValueError(f"streaming supports sssp/bfs/ppr, got {kind!r}")
         self.session = session
         self.kind = kind
         self.capacity = int(capacity)
         self.alpha, self.eps = alpha, eps
+        # per-visit cadence of the legacy step() path; pump()/run() harvest
+        # at megastep chunk boundaries instead
         self.harvest_every = max(1, int(harvest_every))
         bg, perm = session.prepared(unit_weights=(kind == "bfs"))
         self.bg, self.perm = bg, perm
@@ -81,7 +93,13 @@ class StreamingExecutor:
         self.mode = "push" if kind == "ppr" else "minplus"
         self.engine = FPPEngine(bg, mode=self.mode, num_queries=self.capacity,
                                 yield_config=yc, schedule=schedule,
-                                alpha=alpha, eps=eps, seed=seed)
+                                alpha=alpha, eps=eps, seed=seed,
+                                k_visits=k_visits)
+        # own megastep with the pending-lane harvest mask folded into the
+        # chunk dispatch (the engine's plain-run megastep skips it)
+        self._megastep = _visit.make_megastep(
+            self.engine.dg, self.engine.algebra, self.engine.max_rounds,
+            policy=schedule, K=self.engine.k_visits, harvest_mask=True)
         self.algebra = self.engine.algebra
         self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
         self.state = self._empty_state()
@@ -91,6 +109,10 @@ class StreamingExecutor:
         self.slot_qid = np.full(self.capacity, -1, dtype=np.int64)
         self.visits = 0
         self.modeled_bytes = 0.0
+        self.host_syncs = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._lane_pending: Optional[np.ndarray] = None  # set by _chunk
+        self._drained = False                            # set by _chunk
         self._next_qid = 0
         # per-lane edge counts: exact int32 per visit, float64 on host
         self._edges = np.zeros(self.capacity, dtype=np.float64)
@@ -160,13 +182,20 @@ class StreamingExecutor:
         self.state = st._replace(planes=planes, buf=buf)
         self._edges[slot] = 0.0
 
-    def _harvest(self):
-        """Finish every active lane with no pending op anywhere."""
+    def _harvest(self, pending: Optional[np.ndarray] = None):
+        """Finish every active lane with no pending op anywhere.
+
+        ``pending`` is the [capacity] bool lane mask when the caller already
+        has one (the megastep harvests it in the same dispatch as the chunk
+        stats); without it a dedicated ``_pending_q`` dispatch runs — the
+        legacy ``step()`` cadence."""
         active = self.slot_qid >= 0
         if not active.any():
             return
         st = self.state
-        pending = np.asarray(self._pending_q(st.planes, st.buf))
+        if pending is None:
+            self.host_syncs += 1
+            pending = np.asarray(self._pending_q(st.planes, st.buf))
         n = self.bg.n
         for slot in np.flatnonzero(active & ~pending):
             q = self.queries[int(self.slot_qid[slot])]
@@ -209,19 +238,56 @@ class StreamingExecutor:
             self._harvest()
         return True
 
+    def _chunk(self, limit: int) -> int:
+        """One megastep dispatch of up to ``min(limit, K)`` visits; chunk
+        stats AND the pending-lane harvest mask come back in that single
+        host sync.  Returns visits executed."""
+        limit = min(int(limit), self.engine.k_visits)
+        if limit <= 0:
+            self._lane_pending = None   # a stale mask must never be harvested
+            return 0
+        st, ms = self._megastep(self.state, jnp.int32(self.visits),
+                                jnp.int32(limit), self._key)
+        self.host_syncs += 1
+        v = int(ms.visits)
+        # the mask reflects the chunk-end state even when v == 0 (megastep
+        # recomputes it from the unchanged input state); a chunk that stops
+        # below its limit proves the device is drained — no confirmation
+        # dispatch needed
+        self._lane_pending = np.asarray(ms.lane_pending)
+        self._drained = v < limit
+        if v == 0:
+            return 0
+        self.state = st
+        self._key = ms.key
+        self._edges += _visit.harvest_edges(ms.eq_hi, ms.eq_lo)
+        counts = np.asarray(ms.visit_counts, dtype=np.int64)
+        self.modeled_bytes += float(counts @ self.engine._visit_bytes)
+        self.visits += v
+        return v
+
     def pump(self, max_visits: int) -> int:
-        """Advance up to ``max_visits`` visits; returns visits executed."""
+        """Advance up to ``max_visits`` visits in device-resident chunks of
+        up to the engine's K; admission and harvest happen at the chunk
+        boundaries (DESIGN.md §3.3).  Returns visits executed."""
         start = self.visits
         while self.visits - start < max_visits:
-            if not self.step():
-                break
+            self._admit()
+            did = self._chunk(max_visits - (self.visits - start))
+            self._harvest(pending=self._lane_pending)
+            if did == 0 or self._drained:
+                # nothing left pending on device: every unfinished lane was
+                # just harvested; refill from the queue or stop
+                self._admit()
+                if not self.queue and self.active == 0:
+                    break
         return self.visits - start
 
     def run(self, max_visits: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Drain queue + lanes; returns {qid: values} (original ids)."""
         budget = max_visits or 2000 * self.bg.num_parts
         while (self.queue or self.active) and self.visits < budget:
-            if not self.step():
+            if self.pump(budget - self.visits) == 0:
                 break
         self._harvest()
         return {qid: q.values for qid, q in self.queries.items() if q.done}

@@ -49,7 +49,21 @@ def _masked_matmul_kernel(x_ref, w_ref, o_ref):
 
 
 def _tile(q: int, q_tile: int) -> int:
-    return min(q_tile, q) if q % min(q_tile, q) == 0 else q
+    """Resolve the query-tile size; Q must divide into whole tiles.
+
+    A non-dividing Q used to silently collapse the grid to one [Q, B]
+    program, defeating the tiling (and the VMEM working-set bound) exactly
+    when Q grew past the tile.  ``ops.py`` already pads the query axis with
+    the mode identity, so inside this module divisibility is a contract,
+    not a fallback.
+    """
+    qt = min(q_tile, q)
+    if q % qt != 0:
+        raise ValueError(
+            f"Q={q} does not divide into q_tile={qt} tiles; pad the query "
+            f"axis to a tile multiple first (repro.kernels.minplus.ops pads "
+            f"with the mode identity)")
+    return qt
 
 
 @functools.partial(jax.jit, static_argnames=("q_tile", "u_chunk", "interpret"))

@@ -26,16 +26,20 @@ def masked_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
     return masked_matmul_ref(x, w)
 
 
-def _pad_q(x: jax.Array, tile: int):
+def _pad_q(x: jax.Array, tile: int, identity: float):
+    """Pad the query axis to a tile multiple with the *mode identity*
+    (``+inf`` for min-plus, ``0`` for the masked matmul) so padded rows are
+    inert under the kernel's combine and the kernel can require exact
+    divisibility (minplus._tile) instead of silently un-tiling."""
     q = x.shape[0]
     if q % tile == 0 or q < tile:
         return x, q
     pad = (-q) % tile
-    return jnp.pad(x, ((0, pad), (0, 0)), constant_values=jnp.inf), q
+    return jnp.pad(x, ((0, pad), (0, 0)), constant_values=identity), q
 
 
 def minplus_pallas(d: jax.Array, w: jax.Array, q_tile: int = 128) -> jax.Array:
-    dp, q = _pad_q(d, q_tile)
+    dp, q = _pad_q(d, q_tile, jnp.inf)
     out = _k.minplus_pallas_call(dp, w, q_tile=q_tile,
                                  interpret=not _on_tpu())
     return out[:q]
@@ -43,7 +47,7 @@ def minplus_pallas(d: jax.Array, w: jax.Array, q_tile: int = 128) -> jax.Array:
 
 def masked_matmul_pallas(x: jax.Array, w: jax.Array,
                          q_tile: int = 128) -> jax.Array:
-    xp, q = _pad_q(x, q_tile)
+    xp, q = _pad_q(x, q_tile, 0.0)
     out = _k.masked_matmul_pallas_call(xp, w, q_tile=q_tile,
                                        interpret=not _on_tpu())
     return out[:q]
