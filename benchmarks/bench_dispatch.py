@@ -9,17 +9,16 @@ and host-syncs-per-run for the host loop and for megastep K in {1, 8, 64},
 in both visit-algebra modes — and asserts the O(visits/K) sync bound.
 
 Besides the usual results/bench/bench_dispatch.json row dump, the rows are
-mirrored to a top-level ``BENCH_engine.json`` so the engine-dispatch perf
-trajectory persists at the repo root across PRs (CI uploads both).
+mirrored into the ``bench_dispatch`` section of the top-level
+``BENCH_engine.json`` (benchmarks/common.mirror_engine_rows) so the
+engine-dispatch perf trajectory persists at the repo root across PRs
+alongside the serving trajectory (CI uploads both).
 """
 from __future__ import annotations
 
-import json
-import os
-
 import numpy as np
 
-from benchmarks.common import rnd, sources_for, timed
+from benchmarks.common import mirror_engine_rows, rnd, sources_for, timed
 from repro.core.engine import FPPEngine
 from repro.core.partition import partition
 from repro.graphs.generators import grid2d, rmat
@@ -28,8 +27,6 @@ COLUMNS = ["kind", "dispatch", "K", "visits", "host_syncs", "runtime_s",
            "visits_per_s", "edges_per_q"]
 
 K_SWEEP = (1, 8, 64)
-
-ROOT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
 
 
 def _row(kind, dispatch, K, res, secs):
@@ -83,8 +80,7 @@ def run(quick: bool = True):
             assert res.stats.visits == base_visits, (kind, K)
             rows.append(_row(kind, "megastep", K, res, secs))
 
-    with open(ROOT_JSON, "w") as f:
-        json.dump(rows, f, indent=1, default=float)
+    mirror_engine_rows("bench_dispatch", rows)
     return rows
 
 

@@ -1,0 +1,113 @@
+"""Serving microbench: offered-load sweep through the GraphServer pump.
+
+ISSUE 5's serving acceptance: a mixed sssp+ppr, two-tenant, two-graph
+workload served end-to-end with per-request stats.  This module offers that
+workload at increasing arrival rates (requests per serving round) and
+records the latency distribution and throughput at each point — the
+saturation curve a capacity planner reads (queue wait dominating p99 is
+the signal the autoscaling hint consumes; here capacity is held fixed so
+the sweep isolates load, not resize recompiles).
+
+The hot tenant offers 3x the cold tenant's load at equal weight, so the
+recorded per-tenant p99 queue waits also document the weighted-fair
+admission bound under pressure (tests/test_graph_server.py asserts it; the
+bench only reports it).
+
+Rows land in results/bench/bench_serve.json and are mirrored into the
+``bench_serve`` section of the top-level ``BENCH_engine.json`` (CI uploads
+both in the bench-results artifact), next to the dispatch trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import mirror_engine_rows, rnd, sources_for
+from repro.fpp import FPPSession
+from repro.graphs.generators import grid2d, rmat
+from repro.serve import GraphRequest, GraphServer
+
+COLUMNS = ["load_qpr", "requests", "ok", "expired", "rounds", "runtime_s",
+           "qps", "p50_ms", "p99_ms", "hot_wait_p99", "cold_wait_p99",
+           "syncs_per_q"]
+
+KINDS = ("sssp", "ppr")
+
+
+def _workload(road, social, load, rounds_of_arrivals, seed):
+    """``rounds_of_arrivals`` batches of ``load`` requests: mixed kinds,
+    two graphs, hot tenant at 3x the cold tenant's offered load."""
+    rng = np.random.default_rng(seed)
+    road_src = sources_for(road, road.n, seed=seed)
+    soc_src = sources_for(social, social.n, seed=seed + 1)
+    for _ in range(rounds_of_arrivals):
+        batch = []
+        for i in range(load):
+            kind = KINDS[int(rng.integers(len(KINDS)))]
+            graph = "road" if rng.random() < 0.5 else "social"
+            src = rng.choice(road_src if graph == "road" else soc_src)
+            batch.append(GraphRequest(
+                kind=kind, source=int(src), graph=graph,
+                tenant="hot" if i % 4 else "cold"))
+        yield batch
+
+
+def run(quick: bool = True):
+    if quick:
+        road, social = grid2d(16, 16, seed=0), rmat(7, 4, seed=1)
+        B, cap, loads, arrival_rounds = 32, 4, (1, 4, 8), 6
+        eps_note = 1e-3
+    else:
+        road, social = grid2d(48, 48, seed=0), rmat(10, 8, seed=1)
+        B, cap, loads, arrival_rounds = 128, 8, (2, 8, 32), 10
+        eps_note = 1e-4
+
+    # shared sessions across sweep points: the plan (and the partitioning
+    # cache) is per-graph state, not per-load state
+    sess = {"road": FPPSession(road).plan(num_queries=cap, block_size=B),
+            "social": FPPSession(social).plan(num_queries=cap, block_size=B)}
+
+    rows = []
+    for load in loads:
+        server = GraphServer(capacity=cap, k_visits=16, autoscaler=None,
+                             eps=eps_note, seed=0)
+        server.register_graph("road", sess["road"])
+        server.register_graph("social", sess["social"])
+        server.register_tenant("hot", 1.0)
+        server.register_tenant("cold", 1.0)
+        arrivals = _workload(road, social, load, arrival_rounds, seed=load)
+        t0 = time.perf_counter()
+        out = server.serve_forever(arrivals)
+        secs = time.perf_counter() - t0
+
+        ok = [r for r in out.values() if r.status == "ok"]
+        lat = np.array([r.stats["latency_s"] for r in ok]) * 1e3
+        waits = {t: np.array([r.stats["queue_wait_rounds"]
+                              for r in ok if r.tenant == t] or [0.0])
+                 for t in ("hot", "cold")}
+        rows.append({
+            "load_qpr": load,
+            "requests": len(out),
+            "ok": len(ok),
+            "expired": len(out) - len(ok),
+            "rounds": server.rounds,
+            "runtime_s": rnd(secs, 3),
+            "qps": rnd(len(ok) / max(secs, 1e-9), 1),
+            "p50_ms": rnd(np.percentile(lat, 50), 2),
+            "p99_ms": rnd(np.percentile(lat, 99), 2),
+            "hot_wait_p99": rnd(np.percentile(waits["hot"], 99), 1),
+            "cold_wait_p99": rnd(np.percentile(waits["cold"], 99), 1),
+            "syncs_per_q": rnd(float(np.mean(
+                [r.stats["host_syncs"] for r in ok])), 1),
+            "eps": eps_note,
+        })
+        assert len(out) == load * arrival_rounds, \
+            "server must answer every offered request"
+    mirror_engine_rows("bench_serve", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_table
+    print(fmt_table(run(quick=True), COLUMNS))

@@ -14,6 +14,30 @@ from repro.graphs.generators import build_suite
 RESULTS_DIR = os.environ.get("BENCH_OUT", os.path.join(
     os.path.dirname(__file__), "..", "results", "bench"))
 
+#: the repo-root perf-trajectory file CI uploads across PRs; sections keyed
+#: by benchmark module (bench_dispatch, bench_serve)
+ROOT_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                               "BENCH_engine.json")
+
+
+def mirror_engine_rows(section: str, rows: list) -> str:
+    """Merge ``rows`` into the top-level BENCH_engine.json under ``section``.
+
+    The file is a dict of benchmark-module -> rows so dispatch and serving
+    trajectories coexist; a legacy flat list (pre-serving format) is folded
+    in as the ``bench_dispatch`` section.  Other sections are preserved, so
+    running one microbench never erases the other's trajectory.
+    """
+    data = {}
+    if os.path.exists(ROOT_BENCH_JSON):
+        with open(ROOT_BENCH_JSON) as f:
+            cur = json.load(f)
+        data = cur if isinstance(cur, dict) else {"bench_dispatch": cur}
+    data[section] = rows
+    with open(ROOT_BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return ROOT_BENCH_JSON
+
 
 def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
     """Returns (result_of_last, best_seconds)."""

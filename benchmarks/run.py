@@ -24,15 +24,17 @@ MODULES = [
     "fig15_scaling",      # Fig 15: query-count scaling
     "fig16_partition_size",  # Fig 16: partition-size sweep
     "bench_dispatch",     # ISSUE 4: host-loop vs K-visit megastep dispatch
+    "bench_serve",        # ISSUE 5: GraphServer offered-load latency sweep
 ]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="module name, or a comma-separated list")
     args = ap.parse_args()
-    mods = [args.only] if args.only else MODULES
+    mods = args.only.split(",") if args.only else MODULES
     failures = []
     for name in mods:
         print(f"\n=== {name} {'(full)' if args.full else '(quick)'} ===",

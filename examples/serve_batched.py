@@ -2,7 +2,7 @@
 
 The decode batch is the serving-side fork-processing pattern: B
 independent requests against the shared partitioned KV structure, with
-finished slots refilled from the queue (DESIGN.md §4).
+finished slots refilled from the queue (DESIGN.md §4.1).
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2-72b
 """

@@ -16,6 +16,16 @@ this host implementation is the *oracle* the device policies are tested
 against (tests/test_megastep.py) and what the legacy per-visit loop and the
 streaming ``step()`` path still call — |P| is small (<< |V|), exactly the
 paper's STL priority-queue argument.
+
+The same selector arbitrates one level up: ``serve/graph_server.py``
+(DESIGN.md §4.2) treats its per-(graph, kind) lane pools as "partitions" —
+pool priority is the best queued/in-flight *request* priority, the stamp is
+the round a pool first became non-empty, ops is its backlog — so request
+priorities plumb through the identical policy set that orders partition
+visits.  Serving wants priority ties broken toward the *oldest* pool
+(otherwise a low pool index wins every tie and a same-priority pool can
+wait arbitrarily); ``prefer_older_ties=True`` opts into that host-only
+refinement without perturbing the device-oracle contract below.
 """
 from __future__ import annotations
 
@@ -33,7 +43,8 @@ class PartitionScheduler:
         self._rng = np.random.default_rng(seed)
 
     def select(self, prio: np.ndarray, stamp: np.ndarray,
-               ops_count: np.ndarray) -> int | None:
+               ops_count: np.ndarray, *,
+               prefer_older_ties: bool = False) -> int | None:
         """prio: [P] float32, lower=more urgent, +inf empty.  stamp: [P]
         *int32* visit counter at which the buffer last became non-empty
         (empty rows carry the int32-max-1 sentinel from core/visit.py, so
@@ -45,11 +56,20 @@ class PartitionScheduler:
         Deterministic policies here and in ``core/visit.device_select``
         must agree bit-for-bit, first-index ties included; ``random`` is
         numpy-Generator-driven here and threefry-driven on device (both
-        uniform over non-empty partitions, streams differ)."""
+        uniform over non-empty partitions, streams differ).
+
+        ``prefer_older_ties`` (default off, so the device contract above is
+        untouched) refines the ``priority`` policy only: among rows tied at
+        the best priority, pick the smallest stamp — the serving tie-break
+        GraphServer uses for pool arbitration (DESIGN.md §4.2)."""
         nonempty = np.isfinite(prio)
         if not nonempty.any():
             return None
         if self.policy == "priority":
+            if prefer_older_ties:
+                ties = prio == prio[int(np.argmin(prio))]
+                masked = np.where(ties, stamp, np.iinfo(np.int64).max)
+                return int(np.argmin(masked))
             return int(np.argmin(prio))
         if self.policy == "fifo":
             masked = np.where(nonempty, stamp, np.iinfo(np.int32).max)

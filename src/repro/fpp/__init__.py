@@ -9,14 +9,15 @@ one result contract, session.py owns the vertex reordering, streaming.py
 folds asynchronously-arriving query batches into in-flight execution.
 """
 from repro.fpp.backends import BACKENDS, KINDS, BackendResult, run_query
-from repro.fpp.planner import (MemoryModel, Plan, autotune_block_size,
-                               make_plan, model_block_size)
+from repro.fpp.planner import (MemoryModel, Plan, autoscale_capacity,
+                               autotune_block_size, make_plan,
+                               model_block_size)
 from repro.fpp.session import FPPSession, SessionResult
 from repro.fpp.streaming import StreamingExecutor, StreamQuery
 
 __all__ = [
     "BACKENDS", "KINDS", "BackendResult", "run_query",
-    "MemoryModel", "Plan", "autotune_block_size", "make_plan",
-    "model_block_size", "FPPSession", "SessionResult",
+    "MemoryModel", "Plan", "autoscale_capacity", "autotune_block_size",
+    "make_plan", "model_block_size", "FPPSession", "SessionResult",
     "StreamingExecutor", "StreamQuery",
 ]

@@ -179,6 +179,32 @@ def autotune_block_size(session, kind: str, sources: np.ndarray,
     return int(best["block_size"]), rows
 
 
+def autoscale_capacity(queue_depth: int, active: int, *,
+                       mem: MemoryModel, n_vertices: int, block_size: int,
+                       min_capacity: int = 1,
+                       max_capacity: int = 1024) -> int:
+    """Suggest a lane-pool ``capacity`` from observed queue pressure.
+
+    The serving autoscaling hint (DESIGN.md §4.2): demand is what is
+    in flight plus what is waiting; the suggestion is the next power of two
+    covering it (powers of two keep the set of jitted engine shapes
+    logarithmic in demand), clamped to ``[min_capacity, max_capacity]`` and
+    then shrunk until the §3.1 memory model accepts the visit working set
+    and the HBM state planes at the pool's block size.  Pure function of
+    its inputs — GraphServer calls it between chunks and applies a changed
+    suggestion only when the pool is idle, so resizing never moves an
+    in-flight lane.
+    """
+    demand = max(int(queue_depth) + int(active), int(min_capacity))
+    cap = 1
+    while cap < demand:
+        cap *= 2
+    cap = max(min_capacity, min(int(max_capacity), cap))
+    while cap > min_capacity and not mem.fits(block_size, cap, n_vertices):
+        cap //= 2
+    return int(cap)
+
+
 def make_plan(g: CSRGraph, num_queries: int, *,
               mem: Optional[MemoryModel] = None,
               block_size: Optional[int] = None,

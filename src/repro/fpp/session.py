@@ -10,6 +10,10 @@ One object owns the whole life of a fork-processing pattern:
     bc  = sess.bc(sources)                     # applications ride the same path
     stream = sess.stream("sssp", capacity=8)   # queries arriving over time
 
+Above the session sits the serving layer: ``serve/graph_server.py``
+(DESIGN.md §4.2) registers one session per graph and multiplexes
+multi-tenant request streams onto per-(graph, kind) ``stream()`` executors.
+
 Everything downstream of here (engine, distributed runtime, baselines) speaks
 the *reordered* id space and partition-major state; the session is the only
 layer that owns ``perm`` and hides it.  All three backends serve every query

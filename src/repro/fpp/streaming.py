@@ -49,13 +49,21 @@ from repro.fpp import planner as _planner
 
 @dataclasses.dataclass
 class StreamQuery:
-    """One admitted-or-queued query and, eventually, its answer."""
+    """One admitted-or-queued query and, eventually, its answer.
+
+    The ``*_visit`` fields are snapshots of the executor-global visit
+    counter (queue wait = admitted - submitted, in-flight latency =
+    finished - admitted, both in visits the whole executor ran); the
+    ``*_sync`` fields snapshot ``host_syncs`` the same way, so a serving
+    layer can bill exact per-request host round trips (DESIGN.md §4.2)."""
     qid: int
     source: int                 # original vertex id
     slot: int = -1
     submitted_visit: int = -1
     admitted_visit: int = -1
     finished_visit: int = -1
+    admitted_sync: int = -1
+    finished_sync: int = -1
     values: Optional[np.ndarray] = None      # [n] original ids, on completion
     residual: Optional[np.ndarray] = None    # push kinds
     edges: float = 0.0
@@ -65,10 +73,20 @@ class StreamQuery:
 class StreamingExecutor:
     """Admission queue + slot-recycling loop over the buffered engine.
 
-    Mirrors serve/engine.py's ContinuousBatcher: ``submit`` enqueues work,
-    ``step`` runs one partition visit (admitting and harvesting around it),
-    ``run`` drains everything submitted so far.  ``pump(n)`` advances a
-    bounded number of visits so callers can interleave arrivals.
+    Mirrors serve/engine.py's ContinuousBatcher (DESIGN.md §4.1): ``submit``
+    enqueues work, ``step`` runs one partition visit (admitting and
+    harvesting around it), ``run`` drains everything submitted so far.
+    ``pump(n)`` advances a bounded number of visits so callers can
+    interleave arrivals.  ``serve/graph_server.py`` (DESIGN.md §4.2) stacks
+    multi-tenant admission on top of this loop.
+
+    ``k_visits`` is the device-resident chunk size: ``pump``/``run``
+    dispatch megasteps of up to that many visits, and admission/harvest
+    only happen at those chunk boundaries, so K is simultaneously the
+    host-sync amortization factor and the lane-recycling latency.  The
+    executor builds its megastep with ``harvest_mask=True`` so the [Q]
+    pending-lane mask rides back in the same host sync as the chunk stats —
+    harvesting costs no extra dispatch (core/visit.make_megastep).
     """
 
     def __init__(self, session, kind: str = "sssp", capacity: int = 16, *,
@@ -165,6 +183,7 @@ class StreamingExecutor:
                                  stamp=stamp)
         q.slot = slot
         q.admitted_visit = self.visits
+        q.admitted_sync = self.host_syncs
         self.slot_qid[slot] = q.qid
 
     def _admit(self):
@@ -207,6 +226,7 @@ class StreamingExecutor:
             q.values = vals[self.perm].astype(np.float32)
             q.edges = float(self._edges[slot])
             q.finished_visit = self.visits
+            q.finished_sync = self.host_syncs
             q.done = True
             self.slot_qid[slot] = -1
             self._reset_slot(int(slot))
@@ -217,6 +237,12 @@ class StreamingExecutor:
     @property
     def active(self) -> int:
         return int((self.slot_qid >= 0).sum())
+
+    @property
+    def queue_depth(self) -> int:
+        """Submitted-but-not-yet-admitted queries (free-lane starvation
+        signal; GraphServer's autoscaling hint reads it)."""
+        return len(self.queue)
 
     def step(self) -> bool:
         """One partition visit (admit before, harvest after).  False when

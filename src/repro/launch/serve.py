@@ -3,14 +3,15 @@
 Two workloads share the serving posture (DESIGN.md §4):
 
   lm     token serving — ContinuousBatcher over a reduced model twin
-  graph  graph-query serving — the FPPSession streaming executor admits
-         asynchronously-arriving SSSP/PPR batches into the in-flight
-         buffered engine (fpp/streaming.py)
+         (DESIGN.md §4.1)
+  graph  graph-query serving — a multi-tenant GraphServer (DESIGN.md §4.2)
+         multiplexes an arrival stream of mixed-kind requests onto
+         per-(graph, kind) lane pools over the streaming megastep
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --reduced \
         --requests 16 --batch 4 --max-new 12
     PYTHONPATH=src python -m repro.launch.serve --workload graph \
-        --graph road-ca --requests 32 --batch 8
+        --graph road-ca --kind mixed --requests 32 --batch 8 --tenants 2
 """
 from __future__ import annotations
 
@@ -59,39 +60,50 @@ def serve_lm(args):
 
 
 def serve_graph(args):
-    """Staggered graph-query serving through the session streaming path."""
-    from repro.fpp import FPPSession
+    """Multi-tenant graph-query serving through the GraphServer pump."""
     from repro.graphs.generators import build_suite
+    from repro.serve import GraphRequest, GraphServer
 
     g = build_suite(args.graph)
     rng = np.random.default_rng(args.seed)
-    deg = g.out_degree()
-    cand = np.flatnonzero(deg > 0)
-    sources = rng.choice(cand, size=min(args.requests, cand.size),
-                         replace=False)
-    sess = FPPSession(g).plan(num_queries=args.batch,
-                              block_size=args.block_size)
-    stream = sess.stream(args.kind, capacity=args.batch)
+    cand = np.flatnonzero(g.out_degree() > 0)
+    sources = rng.choice(cand, size=args.requests, replace=True)
+    kinds = (("sssp", "ppr") if args.kind == "mixed" else (args.kind,))
+    # tenant 0 is the hot tenant (most of the offered load); equal weights,
+    # so fair admission alone must keep the cold tenants served
+    tenants = [f"tenant{i}" for i in range(args.tenants)]
+
+    server = GraphServer(capacity=args.batch, k_visits=args.pump_visits,
+                         seed=args.seed)
+    server.register_graph(args.graph, g, num_queries=args.batch,
+                          block_size=args.block_size)
+
+    def arrivals():
+        # one submission batch per serving round — the arrival process the
+        # synchronous pump interleaves with chunk execution
+        for lo in range(0, len(sources), args.batch):
+            yield [GraphRequest(kind=kinds[i % len(kinds)], source=int(s),
+                                graph=args.graph,
+                                tenant=(tenants[0] if i % 4 else
+                                        tenants[(i // 4) % len(tenants)]))
+                   for i, s in enumerate(sources[lo: lo + args.batch],
+                                         start=lo)]
+
     t0 = time.perf_counter()
-    qids = []
-    # arrivals: feed one batch, let the engine work, feed the next —
-    # the serving twin of Alg. 2's dynamic partition scheduling
-    for lo in range(0, len(sources), args.batch):
-        qids += stream.submit(sources[lo: lo + args.batch])
-        stream.pump(args.pump_visits)
-    out = stream.run()
+    out = server.serve_forever(arrivals())
     dt = time.perf_counter() - t0
-    done = [q for q in qids if q in out]
-    print(f"[serve] graph={args.graph} |V|={g.n} kind={args.kind}: "
-          f"{len(done)}/{len(qids)} queries in {stream.visits} visits, "
-          f"{dt:.2f}s ({len(done) / max(dt, 1e-9):.1f} q/s, "
-          f"B={sess.current_plan.block_size}, capacity={args.batch})")
-    assert len(done) == len(qids), "stream failed to drain every query"
-    if done:
-        lat = [stream.result(q).finished_visit
-               - stream.result(q).submitted_visit for q in done]
-        print(f"  visit-latency p50/p95: {np.percentile(lat, 50):.0f}/"
-              f"{np.percentile(lat, 95):.0f} visits")
+    ok = [r for r in out.values() if r.status == "ok"]
+    assert len(out) == len(sources), "server failed to answer every request"
+    lat = np.array([r.stats["latency_s"] for r in ok]) * 1e3
+    print(f"[serve] graph={args.graph} |V|={g.n} kinds={'/'.join(kinds)} "
+          f"tenants={args.tenants}: {len(ok)}/{len(out)} ok in "
+          f"{server.rounds} rounds, {dt:.2f}s "
+          f"({len(ok) / max(dt, 1e-9):.1f} q/s, capacity={args.batch}, "
+          f"K={args.pump_visits})")
+    if len(lat):
+        print(f"  latency p50/p99: {np.percentile(lat, 50):.1f}/"
+              f"{np.percentile(lat, 99):.1f} ms; per-request host syncs "
+              f"p50: {np.percentile([r.stats['host_syncs'] for r in ok], 50):.0f}")
 
 
 def main():
@@ -106,11 +118,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     # graph workload
     ap.add_argument("--graph", default="road-ca", choices=sorted(SUITES))
-    ap.add_argument("--kind", choices=("sssp", "bfs", "ppr"), default="sssp")
+    ap.add_argument("--kind", choices=("sssp", "bfs", "ppr", "mixed"),
+                    default="sssp")
     ap.add_argument("--block-size", type=int, default=256,
                     help="partition size; omit planner autotune on CPU demo")
     ap.add_argument("--pump-visits", type=int, default=8,
-                    help="visits to run between arriving batches")
+                    help="megastep chunk size K: visits per serving round")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="tenant count for the graph workload (tenant0 hot)")
     # shared
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)

@@ -13,7 +13,7 @@ Three execution paths:
   partials combine with a log-sum-exp psum.  This is the paper's buffered
   execution model applied to serving: B independent queries (sequences) ride
   the batch dim, the shared partitioned structure is the KV cache, and the
-  boundary-op exchange of Alg. 2 line 16 is the psum (DESIGN.md §4).
+  boundary-op exchange of Alg. 2 line 16 is the psum (DESIGN.md §4.1).
 * ``decode_attend_local`` — same math on an unsharded cache (CPU tests,
   window attention whose cache is a small ring buffer).
 

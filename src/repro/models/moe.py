@@ -1,6 +1,6 @@
 """Mixture-of-Experts FFN (phi3.5-moe: 16e top-2; qwen3-moe: 128e top-8).
 
-Dispatch is *expert-centric consolidation* (DESIGN.md §4): tokens are sorted
+Dispatch is *expert-centric consolidation* (DESIGN.md §4.1): tokens are sorted
 by owning expert and packed into each expert's contiguous capacity buffer
 before the expert matmul — exactly the paper's query-centric consolidation
 (§4.2): group ops by owner, so each owner processes a contiguous,

@@ -1,2 +1,10 @@
+"""Serving front ends (DESIGN.md §4): LM decode + multi-tenant graph FPP.
+
+``engine.py`` (§4.1) serves LM decode via continuous batching;
+``graph_server.py`` (§4.2) serves mixed graph-query traffic over the
+streaming megastep.
+"""
 from repro.serve.engine import (ContinuousBatcher, Request,  # noqa
                                 make_decode_step, make_prefill_step)
+from repro.serve.graph_server import (GraphRequest, GraphResponse,  # noqa
+                                      GraphServer, default_autoscaler)

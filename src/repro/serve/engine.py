@@ -1,7 +1,7 @@
 """Serving engine: prefill/decode steps + continuous batching.
 
 The decode step is the paper's technique as a first-class serving feature
-(DESIGN.md §4): B independent requests are the FPP queries, the KV cache
+(DESIGN.md §4.1): B independent requests are the FPP queries, the KV cache
 sharded over the "model" axis is the partitioned shared structure, and each
 decode step is one buffered partition visit with an LSE psum as the
 boundary-op exchange (models/attention.decode_attend_partitioned).

@@ -1,0 +1,503 @@
+"""GraphServer: multi-tenant FPP serving over the streaming megastep.
+
+The paper's fork-processing pattern — many independent queries sharing one
+graph — is exactly the shape of a serving workload, and DESIGN.md §4.2
+documents this module as its production-facing front end.  A
+:class:`GraphServer` accepts a continuous stream of heterogeneous
+:class:`GraphRequest`\\ s — mixed kinds (sssp/bfs/ppr), mixed priorities,
+multiple registered graphs, multiple tenants — and multiplexes them onto
+per-(graph, kind) **lane pools**, each backed by the §3.3
+``StreamingExecutor`` and its device-resident K-visit megastep (§2.3).
+
+The serving loop is three decisions per round, all at megastep chunk
+boundaries (the only points where admission/harvest are ever legal — the
+§3.3 exactness argument):
+
+  * **pool arbitration** — which (graph, kind) pool gets the next chunk of
+    device time.  Pools are "partitions" to ``core/scheduler.py``'s
+    :class:`PartitionScheduler`: pool priority is the best queued/in-flight
+    request priority, so request priorities plumb through the same policy
+    set that orders partition visits (``prefer_older_ties`` breaks
+    equal-priority ties toward the longest-waiting pool);
+  * **weighted-fair admission** — which tenant's request takes each free
+    lane.  Start-time fair queueing over per-tenant virtual time: admitting
+    one request from tenant *t* advances ``vtime[t] += 1/weight[t]``, and
+    the lowest vtime among tenants with queued work goes first, so a hot
+    tenant at 10x offered load gets at most its weight share of lanes and
+    cannot starve the rest (tests/test_graph_server.py pins the bound);
+  * **deadline policing** — a request whose deadline lapses while queued is
+    *rejected* with an explicit ``status="expired"`` response (never
+    silently dropped); it is checked before every admission.
+
+Completed lanes come back as :class:`GraphResponse` with exact per-request
+stats (in-flight visits, integral edge work, host syncs billed to the
+request, queue wait in seconds and in scheduling rounds).  Between chunks
+an idle pool may be resized by the pluggable autoscaling hint (default:
+``fpp/planner.autoscale_capacity``, the §3.1 memory model applied to queue
+depth), so ``capacity`` tracks load without ever moving an in-flight lane.
+
+    server = GraphServer(capacity=8)
+    server.register_graph("road", road_csr)
+    rid = server.submit(GraphRequest(kind="sssp", source=7, graph="road"))
+    server.serve()                       # synchronous pump until drained
+    resp = server.poll(rid)              # values + per-request stats
+
+``launch/serve.py --workload graph`` and ``benchmarks/bench_serve.py``
+drive the same pump with synthetic arrival processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import PartitionScheduler
+from repro.fpp import planner as _planner
+from repro.fpp.session import FPPSession
+
+SERVABLE_KINDS = ("sssp", "bfs", "ppr")
+
+#: stamp value for pools with nothing queued or in flight (never selected —
+#: their priority is +inf — but keeps the stamp array total)
+_IDLE_STAMP = np.iinfo(np.int64).max - 1
+
+
+@dataclasses.dataclass
+class GraphRequest:
+    """One graph query as a tenant submits it (original vertex ids).
+
+    ``priority`` follows the engine's convention: lower is more urgent
+    (it feeds pool arbitration directly, see module docstring).
+    ``deadline_s`` is a time-to-live from submission: a request still
+    *queued* when it lapses is rejected with ``status="expired"``; once
+    admitted to a lane it always runs to completion.
+    """
+    kind: str
+    source: int
+    graph: str = "default"
+    tenant: str = "default"
+    priority: float = 0.0
+    deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class GraphResponse:
+    """The server's answer: values on success, always an explicit status.
+
+    ``status`` is ``"ok"`` or ``"expired"``.  ``stats`` carries the
+    per-request accounting: ``visits`` (executor visits while the request
+    was in flight), ``edges`` (exact integral edge work of this lane),
+    ``host_syncs`` (device->host round trips billed to the request's
+    in-flight window), ``queue_wait_s``/``queue_wait_rounds`` (time and
+    scheduling rounds spent waiting for a lane), ``latency_s`` (submit to
+    response).
+    """
+    rid: int
+    tenant: str
+    graph: str
+    kind: str
+    source: int
+    status: str
+    values: Optional[np.ndarray]
+    residual: Optional[np.ndarray]
+    stats: dict
+
+
+@dataclasses.dataclass
+class _Ticket:
+    """Server-side lifecycle record for one request."""
+    rid: int
+    req: GraphRequest
+    submit_t: float
+    submit_round: int
+    admit_t: float = -1.0
+    admit_round: int = -1
+
+
+class _LanePool:
+    """One (graph, kind) lane pool: a StreamingExecutor plus its backlog."""
+
+    def __init__(self, graph: str, kind: str, session: FPPSession,
+                 capacity: int, k_visits: int, alpha: float, eps: float):
+        self.graph = graph
+        self.kind = kind
+        self.session = session
+        self.capacity = int(capacity)
+        self.k_visits = int(k_visits)
+        self.alpha, self.eps = alpha, eps
+        self.exec = session.stream(kind, capacity=self.capacity,
+                                   k_visits=self.k_visits,
+                                   alpha=alpha, eps=eps)
+        # tenant -> heap of (priority, seq, rid): priority then arrival
+        self.queues: Dict[str, List[Tuple[float, int, int]]] = {}
+        self.qid_rid: Dict[int, int] = {}      # executor qid -> server rid
+        self.stamp: int = _IDLE_STAMP          # round backlog became non-empty
+
+    # ------------------------------------------------------------- backlog
+
+    def enqueue(self, tenant: str, prio: float, seq: int, rid: int):
+        heapq.heappush(self.queues.setdefault(tenant, []),
+                       (float(prio), int(seq), int(rid)))
+
+    @property
+    def queued(self) -> int:
+        return sum(len(h) for h in self.queues.values())
+
+    @property
+    def active(self) -> int:
+        return len(self.qid_rid)
+
+    def best_priority(self, tickets: Dict[int, _Ticket]) -> float:
+        """Most urgent request priority across backlog + in-flight lanes."""
+        best = np.inf
+        for heap in self.queues.values():
+            if heap:
+                best = min(best, heap[0][0])
+        for rid in self.qid_rid.values():
+            best = min(best, tickets[rid].req.priority)
+        return best
+
+    def resize(self, capacity: int):
+        """Rebuild the executor at a new capacity.  Only legal when idle
+        (no in-flight lane state to move); the backlog is server-side, so
+        nothing else changes."""
+        if self.active:
+            raise RuntimeError("cannot resize a pool with in-flight lanes")
+        self.capacity = int(capacity)
+        self.exec = self.session.stream(self.kind, capacity=self.capacity,
+                                        k_visits=self.k_visits,
+                                        alpha=self.alpha, eps=self.eps)
+        self.qid_rid = {}
+
+
+def default_autoscaler(pool_stats: dict) -> int:
+    """Planner-backed capacity hint: demand clamped by the memory model."""
+    return _planner.autoscale_capacity(
+        pool_stats["queued"], pool_stats["active"],
+        mem=pool_stats["mem"], n_vertices=pool_stats["n_vertices"],
+        block_size=pool_stats["block_size"],
+        min_capacity=pool_stats["min_capacity"],
+        max_capacity=pool_stats["max_capacity"])
+
+
+class GraphServer:
+    """Multi-tenant serving front end over per-(graph, kind) lane pools.
+
+    ``capacity`` seeds every pool's lane count (the autoscaler may revise
+    it between chunks, bounded by ``max_capacity`` and the memory model);
+    ``k_visits`` is each pool's megastep chunk size — the scheduling
+    quantum of the whole server, since admission, harvest, arbitration and
+    deadline checks all happen at chunk boundaries; ``schedule`` picks the
+    pool-arbitration policy (any ``core/scheduler.py`` policy; request
+    priorities feed it); ``alpha``/``eps`` parameterize the push (ppr)
+    pools exactly as they do ``FPPSession.run``; ``autoscaler`` replaces
+    the default capacity hint
+    (callable: pool-stats dict -> suggested capacity, or ``None`` to
+    disable resizing); ``clock`` is injectable for deterministic deadline
+    tests.
+    """
+
+    def __init__(self, *, capacity: int = 8, max_capacity: int = 64,
+                 k_visits: int = 64, schedule: str = "priority",
+                 alpha: float = 0.15, eps: float = 1e-4,
+                 autoscaler: Optional[Callable[[dict], int]]
+                 = default_autoscaler,
+                 clock: Callable[[], float] = time.monotonic,
+                 seed: int = 0):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.max_capacity = int(max_capacity)
+        self.k_visits = int(k_visits)
+        self.alpha, self.eps = float(alpha), float(eps)
+        self.autoscaler = autoscaler
+        self.clock = clock
+        self.rounds = 0
+        self.responses: Dict[int, GraphResponse] = {}
+        self._sessions: Dict[str, FPPSession] = {}
+        self._pools: Dict[Tuple[str, str], _LanePool] = {}
+        self._pool_order: List[_LanePool] = []
+        self._weights: Dict[str, float] = {}
+        self._vtime: Dict[str, float] = {}
+        self._tickets: Dict[int, _Ticket] = {}
+        self._arb = PartitionScheduler(schedule, 0, seed)
+        self._next_rid = 0
+        self._seq = 0
+
+    # ---------------------------------------------------------- registration
+
+    def register_graph(self, name: str, graph_or_session, **plan_kw):
+        """Register a graph under ``name``; requests address it by name.
+
+        Accepts a host CSR graph (a session is planned for it with
+        ``plan_kw`` forwarded) or a ready :class:`FPPSession` — passing the
+        session a test already ran ``session.run`` on guarantees the served
+        plan is identical, which is how the bit-parity tests pin the
+        contract.  Chainable.
+        """
+        if name in self._sessions:
+            raise ValueError(f"graph {name!r} already registered")
+        if isinstance(graph_or_session, FPPSession):
+            if plan_kw:
+                raise ValueError("plan_kw only applies when registering a "
+                                 "raw graph, not a planned FPPSession")
+            self._sessions[name] = graph_or_session
+        else:
+            plan_kw.setdefault("num_queries", self.capacity)
+            self._sessions[name] = FPPSession(graph_or_session).plan(**plan_kw)
+        return self
+
+    def register_tenant(self, name: str, weight: float = 1.0):
+        """Set a tenant's fair-share weight (admissions per unit virtual
+        time).  Unknown tenants are auto-registered at weight 1 on first
+        submit.  Chainable."""
+        if weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        self._weights[name] = float(weight)
+        self._vtime.setdefault(name, 0.0)
+        return self
+
+    def _pool(self, graph: str, kind: str) -> _LanePool:
+        key = (graph, kind)
+        if key not in self._pools:
+            pool = _LanePool(graph, kind, self._sessions[graph],
+                             self.capacity, self.k_visits,
+                             self.alpha, self.eps)
+            self._pools[key] = pool
+            self._pool_order.append(pool)
+        return self._pools[key]
+
+    # --------------------------------------------------------------- submit
+
+    def submit(self, req: GraphRequest) -> int:
+        """Enqueue one request; returns its rid (poll for the response)."""
+        if req.kind not in SERVABLE_KINDS:
+            raise ValueError(f"kind must be one of {SERVABLE_KINDS}, "
+                             f"got {req.kind!r}")
+        if req.graph not in self._sessions:
+            raise ValueError(f"graph {req.graph!r} not registered "
+                             f"(have {sorted(self._sessions)})")
+        n = self._sessions[req.graph].graph.n
+        if not 0 <= int(req.source) < n:
+            raise ValueError(f"source {req.source} out of range for graph "
+                             f"{req.graph!r} with {n} vertices")
+        if req.tenant not in self._weights:
+            self.register_tenant(req.tenant)
+        rid = self._next_rid
+        self._next_rid += 1
+        t = _Ticket(rid=rid, req=req, submit_t=self.clock(),
+                    submit_round=self.rounds)
+        self._tickets[rid] = t
+        pool = self._pool(req.graph, req.kind)
+        if pool.queued == 0 and pool.active == 0:
+            pool.stamp = self.rounds
+        if not self._tenant_has_work(req.tenant):
+            # a tenant returning from idle joins at the busy tenants' pace
+            # instead of burning banked virtual time as a monopoly burst
+            busy = [self._vtime[tn] for tn in self._weights
+                    if tn != req.tenant and self._tenant_has_work(tn)]
+            if busy:
+                self._vtime[req.tenant] = max(self._vtime[req.tenant],
+                                              min(busy))
+        pool.enqueue(req.tenant, req.priority, self._seq, rid)
+        self._seq += 1
+        return rid
+
+    def _tenant_has_work(self, tenant: str) -> bool:
+        """True while the tenant has anything queued or in flight — the
+        condition under which its virtual time is live rather than banked."""
+        for p in self._pool_order:
+            if p.queues.get(tenant):
+                return True
+            for rid in p.qid_rid.values():
+                if self._tickets[rid].req.tenant == tenant:
+                    return True
+        return False
+
+    def submit_all(self, reqs: Iterable[GraphRequest]) -> List[int]:
+        return [self.submit(r) for r in reqs]
+
+    # ------------------------------------------------------------ deadlines
+
+    def _expired(self, t: _Ticket, now: float) -> bool:
+        d = t.req.deadline_s
+        return d is not None and (now - t.submit_t) >= d
+
+    def _reject(self, t: _Ticket, now: float):
+        self.responses[t.rid] = GraphResponse(
+            rid=t.rid, tenant=t.req.tenant, graph=t.req.graph,
+            kind=t.req.kind, source=t.req.source, status="expired",
+            values=None, residual=None, stats={
+                "queue_wait_s": now - t.submit_t,
+                "queue_wait_rounds": self.rounds - t.submit_round,
+                "latency_s": now - t.submit_t,
+            })
+
+    def _police_deadlines(self, now: float):
+        """Reject every queued request whose deadline lapsed (explicit
+        expired response — never a silent drop)."""
+        for pool in self._pool_order:
+            for tenant, heap in pool.queues.items():
+                keep = []
+                for item in heap:
+                    t = self._tickets[item[2]]
+                    if self._expired(t, now):
+                        self._reject(t, now)
+                    else:
+                        keep.append(item)
+                if len(keep) != len(heap):
+                    heapq.heapify(keep)
+                    pool.queues[tenant] = keep
+
+    # ------------------------------------------------------------ admission
+
+    def _pick_tenant(self, pool: _LanePool) -> Optional[str]:
+        """Lowest virtual time among tenants with backlog in this pool
+        (name-ordered tie break for determinism)."""
+        best = None
+        for tenant, heap in pool.queues.items():
+            if not heap:
+                continue
+            key = (self._vtime[tenant], tenant)
+            if best is None or key < best[0]:
+                best = (key, tenant)
+        return None if best is None else best[1]
+
+    def _admit(self, pool: _LanePool, now: float):
+        """Fill free lanes by weighted-fair start-time order; expired
+        requests discovered here are rejected without charging their
+        tenant's virtual time."""
+        ex = pool.exec
+        while ex.free_slots and pool.queued:
+            tenant = self._pick_tenant(pool)
+            _, _, rid = heapq.heappop(pool.queues[tenant])
+            t = self._tickets[rid]
+            if self._expired(t, now):
+                self._reject(t, now)
+                continue
+            qid = ex.submit([t.req.source])[0]
+            assert ex.queue_depth == 0, "admission must be immediate"
+            pool.qid_rid[qid] = rid
+            t.admit_t = now
+            t.admit_round = self.rounds
+            self._vtime[tenant] += 1.0 / self._weights[tenant]
+
+    # -------------------------------------------------------------- harvest
+
+    def _collect(self, pool: _LanePool, now: float):
+        for qid in [q for q, _ in pool.qid_rid.items()
+                    if pool.exec.queries[q].done]:
+            rid = pool.qid_rid.pop(qid)
+            t = self._tickets[rid]
+            q = pool.exec.queries[qid]
+            self.responses[rid] = GraphResponse(
+                rid=rid, tenant=t.req.tenant, graph=pool.graph,
+                kind=pool.kind, source=t.req.source, status="ok",
+                values=q.values, residual=q.residual, stats={
+                    "visits": q.finished_visit - q.admitted_visit,
+                    "edges": q.edges,
+                    "host_syncs": q.finished_sync - q.admitted_sync,
+                    "queue_wait_s": t.admit_t - t.submit_t,
+                    "queue_wait_rounds": t.admit_round - t.submit_round,
+                    "latency_s": now - t.submit_t,
+                })
+
+    # ------------------------------------------------------------ autoscale
+
+    def _maybe_resize(self, pool: _LanePool):
+        if self.autoscaler is None or pool.active:
+            return
+        plan = pool.session.current_plan
+        hint = int(self.autoscaler({
+            "queued": pool.queued, "active": pool.active,
+            "capacity": pool.capacity, "mem": plan.mem,
+            "n_vertices": pool.session.graph.n,
+            "block_size": pool.exec.bg.block_size,
+            "min_capacity": 1, "max_capacity": self.max_capacity,
+        }))
+        if hint != pool.capacity and hint >= 1:
+            pool.resize(hint)
+
+    # ----------------------------------------------------------------- pump
+
+    @property
+    def pending(self) -> int:
+        """Requests without a response yet (queued + in flight)."""
+        return sum(p.queued + p.active for p in self._pool_order)
+
+    def _arbitrate(self) -> Optional[_LanePool]:
+        if not self._pool_order:
+            return None
+        prio = np.array([p.best_priority(self._tickets)
+                         for p in self._pool_order], dtype=np.float64)
+        stamp = np.array([p.stamp for p in self._pool_order], dtype=np.int64)
+        ops = np.array([p.queued + p.active for p in self._pool_order],
+                       dtype=np.int64)
+        idx = self._arb.select(prio, stamp, ops, prefer_older_ties=True)
+        return None if idx is None else self._pool_order[idx]
+
+    def step(self) -> bool:
+        """One serving round: police deadlines, arbitrate a pool, admit at
+        the chunk boundary, pump one megastep chunk, harvest responses,
+        revisit capacity.  Returns False when no pool holds work."""
+        now = self.clock()
+        self._police_deadlines(now)
+        pool = self._arbitrate()
+        if pool is None:
+            return False
+        self._maybe_resize(pool)
+        self._admit(pool, now)
+        if pool.active:
+            pool.exec.pump(self.k_visits)
+            self._collect(pool, self.clock())
+        if pool.queued == 0 and pool.active == 0:
+            pool.stamp = _IDLE_STAMP
+        else:
+            # refresh: the just-served pool becomes the youngest, so
+            # equal-priority pools rotate least-recently-served instead of
+            # the oldest stamp monopolizing every tie
+            pool.stamp = self.rounds
+        self.rounds += 1
+        return True
+
+    def serve(self, max_rounds: Optional[int] = None
+              ) -> Dict[int, GraphResponse]:
+        """Pump until everything submitted so far has a response (or the
+        round budget runs out); returns the response table."""
+        start = self.rounds
+        while self.pending and (max_rounds is None
+                                or self.rounds - start < max_rounds):
+            if not self.step():
+                break
+        return self.responses
+
+    def serve_forever(self, arrivals: Optional[
+            Iterator[Iterable[GraphRequest]]] = None, *,
+            max_rounds: int = 100_000) -> Dict[int, GraphResponse]:
+        """The synchronous serving pump: draw one batch of requests from
+        ``arrivals`` per round (an iterator of request iterables — the
+        arrival process), interleave with chunk execution, and keep pumping
+        until the arrival stream is exhausted and every request has a
+        response.  ``max_rounds`` bounds loop iterations — idle ones
+        included, so an open-loop arrival stream yielding empty batches
+        cannot spin the pump forever."""
+        it = iter(arrivals) if arrivals is not None else None
+        for _ in range(max_rounds):
+            if it is not None:
+                batch = next(it, None)
+                if batch is None:
+                    it = None
+                else:
+                    self.submit_all(batch)
+            progressed = self.step()
+            if it is None and not progressed and not self.pending:
+                break
+        return self.responses
+
+    def poll(self, rid: int) -> Optional[GraphResponse]:
+        """The response for ``rid``, or None while it is still in the
+        queue/in flight."""
+        return self.responses.get(rid)

@@ -1,0 +1,335 @@
+"""GraphServer: the multi-tenant serving contract (DESIGN.md §4.2).
+
+What serving must never change: answers.  A request served through lane
+pools, weighted-fair admission, and chunked megasteps returns values
+bit-identical to ``FPPSession.run`` of the same query — for every kind,
+because admission only injects source ops a one-shot run would have
+started with (the §3.3 exactness argument) and the engine's deterministic
+priority schedule makes the visit sequence independent of chunking.
+
+What serving must additionally guarantee, pinned here:
+  * a hot tenant at 10x offered load cannot starve another tenant
+    (queue-wait bound from start-time fair queueing);
+  * deadline-expired requests are rejected with an explicit response,
+    never silently dropped;
+  * two registered graphs serve interleaved traffic with no state bleed;
+  * request priorities plumb through pool arbitration
+    (core/scheduler.py ``prefer_older_ties``).
+"""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import PartitionScheduler
+from repro.fpp import FPPSession, MemoryModel
+from repro.fpp.planner import autoscale_capacity
+from repro.graphs.generators import grid2d, rmat
+from repro.serve import GraphRequest, GraphServer
+
+
+def _sources(g, k, seed=0):
+    cand = np.flatnonzero(g.out_degree() > 0)
+    return np.random.default_rng(seed).choice(cand, size=k, replace=False)
+
+
+# ---------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("kind", ["sssp", "bfs", "ppr"])
+def test_served_results_bit_identical_to_session_run(kind):
+    g = grid2d(12, 12, seed=3)
+    srcs = _sources(g, 4, seed=1)
+    sess = FPPSession(g).plan(num_queries=len(srcs), block_size=32)
+    one = sess.run(kind, srcs)
+    # registering the session itself guarantees the served plan is the
+    # same plan the one-shot run used
+    server = GraphServer(capacity=len(srcs), k_visits=16)
+    server.register_graph("g", sess)
+    rids = [server.submit(GraphRequest(kind=kind, source=int(s), graph="g"))
+            for s in srcs]
+    server.serve()
+    for i, rid in enumerate(rids):
+        r = server.poll(rid)
+        assert r is not None and r.status == "ok"
+        np.testing.assert_array_equal(r.values, one.values[i], err_msg=kind)
+        if kind == "ppr":
+            np.testing.assert_array_equal(r.residual, one.residual[i])
+        # per-request stats: exact integral edge work, billed host syncs
+        assert r.stats["edges"] == round(r.stats["edges"])
+        assert r.stats["edges"] == one.edges_processed[i]
+        assert r.stats["host_syncs"] >= 1
+        assert r.stats["visits"] >= 1
+
+
+def test_mixed_two_tenant_two_graph_workload_end_to_end():
+    """The ISSUE 5 acceptance workload: mixed sssp+ppr, two tenants, two
+    graphs, interleaved submissions — every request answered, per-request
+    stats attached, every answer bit-identical to the session run."""
+    road = grid2d(10, 10, seed=6)
+    social = rmat(7, 4, seed=7)
+    road_s = _sources(road, 3, seed=2)
+    soc_s = _sources(social, 3, seed=3)
+    sess = {"road": FPPSession(road).plan(num_queries=3, block_size=32),
+            "social": FPPSession(social).plan(num_queries=3, block_size=32)}
+    want = {("road", "sssp"): sess["road"].run("sssp", road_s),
+            ("social", "ppr"): sess["social"].run("ppr", soc_s)}
+
+    server = GraphServer(capacity=3, k_visits=16)
+    server.register_graph("road", sess["road"])
+    server.register_graph("social", sess["social"])
+    rids = []
+    for i in range(3):      # interleave graphs, kinds, and tenants
+        rids.append((("road", "sssp"), i, server.submit(GraphRequest(
+            kind="sssp", source=int(road_s[i]), graph="road",
+            tenant="alice" if i % 2 else "bob"))))
+        rids.append((("social", "ppr"), i, server.submit(GraphRequest(
+            kind="ppr", source=int(soc_s[i]), graph="social",
+            tenant="bob" if i % 2 else "alice"))))
+    out = server.serve()
+    assert len(out) == len(rids)        # nothing dropped, nothing extra
+    for key, i, rid in rids:
+        r = out[rid]
+        assert r.status == "ok"
+        np.testing.assert_array_equal(r.values, want[key].values[i])
+        for stat in ("visits", "edges", "host_syncs", "queue_wait_s",
+                     "queue_wait_rounds", "latency_s"):
+            assert stat in r.stats, (key, stat)
+
+
+# --------------------------------------------------------------- fairness
+
+
+def test_hot_tenant_cannot_starve_cold_tenant():
+    """10x offered load from one tenant: the other tenant's queue wait
+    stays bounded by the fair-share interleave, nowhere near the backlog
+    a FIFO queue would impose."""
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 10, seed=5)
+    server = GraphServer(capacity=2, k_visits=16, autoscaler=None)
+    server.register_graph("g", g, num_queries=2, block_size=16)
+    hot = [server.submit(GraphRequest(kind="sssp", source=int(srcs[i % 10]),
+                                      graph="g", tenant="hot"))
+           for i in range(20)]
+    cold = [server.submit(GraphRequest(kind="sssp", source=int(s),
+                                       graph="g", tenant="cold"))
+            for s in srcs[:2]]
+    out = server.serve()
+    assert all(out[r].status == "ok" for r in hot + cold)
+    cold_wait = max(out[r].stats["queue_wait_rounds"] for r in cold)
+    hot_wait = max(out[r].stats["queue_wait_rounds"] for r in hot)
+    # fair interleave admits a cold request within ~one fair-share cycle
+    # of the 2-lane pool; the hot backlog (20 deep) waits far longer
+    assert cold_wait <= 4, (cold_wait, hot_wait)
+    assert hot_wait > cold_wait
+
+
+def test_late_joining_tenant_neither_starved_nor_monopolist():
+    """A tenant joining mid-serve, after the hot tenant has accrued
+    virtual time, is caught up to the live pace: admissions after the
+    join interleave instead of the newcomer draining its banked vtime as
+    a monopoly burst (or, unfixed the other way, waiting out the whole
+    hot backlog)."""
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 10, seed=15)
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    hot = [server.submit(GraphRequest(kind="sssp", source=int(srcs[i % 10]),
+                                      graph="g", tenant="hot"))
+           for i in range(8)]
+    while len(server.responses) < 4:     # hot accrues vtime mid-serve
+        assert server.step()
+    join_round = server.rounds
+    cold = [server.submit(GraphRequest(kind="sssp", source=int(s),
+                                       graph="g", tenant="cold"))
+            for s in srcs[:4]]
+    out = server.serve()
+    assert all(out[r].status == "ok" for r in hot + cold)
+
+    def admit_round(r):
+        # queue_wait_rounds is relative to the submit round: 0 for the
+        # hot batch, join_round for the cold batch
+        return ((0 if r in hot else join_round)
+                + out[r].stats["queue_wait_rounds"])
+
+    after = sorted((r for r in hot + cold if admit_round(r) >= join_round),
+                   key=admit_round)
+    tags = ["cold" if r in cold else "hot" for r in after]
+    # post-join admissions interleave: neither the caught-up newcomer nor
+    # the incumbent may run away with consecutive lanes
+    for k in range(1, len(tags) + 1):
+        c, h = tags[:k].count("cold"), tags[:k].count("hot")
+        assert abs(c - h) <= 2, tags
+
+
+def test_tenant_weights_shape_admission_order():
+    """weight=2 buys two admissions per unit virtual time: in any prefix
+    of the admission order the heavy tenant holds at most its share."""
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 8, seed=6)
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    server.register_tenant("heavy", weight=2.0)
+    server.register_tenant("light", weight=1.0)
+    rids = {}
+    for i in range(8):
+        t = "heavy" if i < 4 else "light"
+        rids[server.submit(GraphRequest(kind="sssp", source=int(srcs[i]),
+                                        graph="g", tenant=t))] = t
+    out = server.serve()
+    order = sorted(rids, key=lambda r: out[r].stats["queue_wait_rounds"])
+    admitted = [rids[r] for r in order]
+    for k in range(1, len(admitted) + 1):
+        heavy = admitted[:k].count("heavy")
+        # 2:1 fair share, +1 slack for the start-time tie
+        assert heavy <= (2 * k) // 3 + 1, admitted
+
+
+# --------------------------------------------------------------- deadlines
+
+
+def test_deadline_expired_rejected_not_silently_dropped():
+    tick = [0.0]
+    g = grid2d(8, 8, seed=4)
+    server = GraphServer(capacity=2, k_visits=16, clock=lambda: tick[0],
+                         autoscaler=None)
+    server.register_graph("g", g, num_queries=2, block_size=16)
+    srcs = _sources(g, 2, seed=7)
+    keep = server.submit(GraphRequest(kind="sssp", source=int(srcs[0]),
+                                      graph="g"))
+    doomed = server.submit(GraphRequest(kind="sssp", source=int(srcs[1]),
+                                        graph="g", deadline_s=5.0))
+    tick[0] = 10.0                       # deadline lapses while queued
+    out = server.serve()
+    assert len(out) == 2                 # both answered — nothing dropped
+    assert out[doomed].status == "expired"
+    assert out[doomed].values is None
+    assert out[doomed].stats["queue_wait_s"] == pytest.approx(10.0)
+    assert out[keep].status == "ok" and out[keep].values is not None
+
+
+def test_deadline_never_expires_admitted_requests():
+    """Once a request holds a lane it runs to completion even if its
+    deadline lapses mid-flight (rejection is an admission-time decision)."""
+    tick = [0.0]
+    g = grid2d(8, 8, seed=4)
+    server = GraphServer(capacity=1, k_visits=4, clock=lambda: tick[0],
+                         autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    rid = server.submit(GraphRequest(kind="sssp",
+                                     source=int(_sources(g, 1, seed=8)[0]),
+                                     graph="g", deadline_s=5.0))
+    assert server.step()                 # admitted at t=0
+    tick[0] = 10.0                       # lapses while in flight
+    out = server.serve()
+    assert out[rid].status == "ok"
+
+
+# --------------------------------------------------------------- isolation
+
+
+def test_multi_graph_isolation_no_state_bleed():
+    """Interleaved requests against two different-sized graphs: each
+    answer has its own graph's shape and matches that graph's one-shot
+    run exactly."""
+    a, b = grid2d(9, 9, seed=9), grid2d(12, 12, seed=10)    # 81 vs 144
+    sa, sb = _sources(a, 3, seed=11), _sources(b, 3, seed=12)
+    sess = {"a": FPPSession(a).plan(num_queries=3, block_size=32),
+            "b": FPPSession(b).plan(num_queries=3, block_size=32)}
+    one = {"a": sess["a"].run("sssp", sa), "b": sess["b"].run("sssp", sb)}
+    server = GraphServer(capacity=3, k_visits=8)
+    server.register_graph("a", sess["a"])
+    server.register_graph("b", sess["b"])
+    rids = []
+    for i in range(3):
+        rids.append(("a", i, server.submit(GraphRequest(
+            kind="sssp", source=int(sa[i]), graph="a"))))
+        rids.append(("b", i, server.submit(GraphRequest(
+            kind="sssp", source=int(sb[i]), graph="b"))))
+    out = server.serve()
+    for name, i, rid in rids:
+        r = out[rid]
+        assert r.values.shape == (sess[name].graph.n,)
+        np.testing.assert_array_equal(r.values, one[name].values[i])
+
+
+# ------------------------------------------------- priorities + arbitration
+
+
+def test_request_priority_picks_pool_first():
+    """A more urgent (lower-priority-value) request pulls its pool to the
+    front of arbitration even when another pool queued first."""
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 2, seed=13)
+    server = GraphServer(capacity=1, k_visits=8, autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    server.submit(GraphRequest(kind="sssp", source=int(srcs[0]), graph="g"))
+    urgent = server.submit(GraphRequest(kind="bfs", source=int(srcs[1]),
+                                        graph="g", priority=-1.0))
+    server.step()                        # one round serves exactly one pool
+    bfs_pool = server._pools[("g", "bfs")]
+    sssp_pool = server._pools[("g", "sssp")]
+    assert bfs_pool.exec.visits > 0      # urgent pool won arbitration
+    assert sssp_pool.exec.visits == 0
+    out = server.serve()
+    assert out[urgent].status == "ok"
+
+
+def test_scheduler_prefer_older_ties():
+    """The serving tie-break: among priority ties pick the smallest stamp;
+    the default contract (first index) is untouched."""
+    sched = PartitionScheduler("priority", 3)
+    prio = np.array([1.0, 1.0, 2.0], dtype=np.float32)
+    stamp = np.array([7, 2, 0], dtype=np.int64)
+    ops = np.array([1, 1, 1])
+    assert sched.select(prio, stamp, ops) == 0                  # device rule
+    assert sched.select(prio, stamp, ops, prefer_older_ties=True) == 1
+    # all-empty still returns None either way
+    inf = np.full(3, np.inf, dtype=np.float32)
+    assert sched.select(inf, stamp, ops, prefer_older_ties=True) is None
+
+
+# -------------------------------------------------------------- autoscale
+
+
+def test_autoscale_capacity_hint_is_memory_clamped():
+    mem = MemoryModel()
+    kw = dict(mem=mem, n_vertices=1024, block_size=64)
+    assert autoscale_capacity(0, 0, **kw) == 1           # idle shrinks
+    assert autoscale_capacity(5, 1, **kw) == 8           # next pow2 >= 6
+    assert autoscale_capacity(100, 0, max_capacity=16, **kw) == 16
+    # a tiny VMEM budget caps the suggestion below raw demand
+    tiny = MemoryModel(vmem_bytes=(2 * 64 * 64 + 2 * 8 * 64) * 4)
+    got = autoscale_capacity(100, 0, mem=tiny, n_vertices=1024,
+                             block_size=64)
+    assert got <= 8 and tiny.fits(64, got, 1024)
+
+
+def test_server_grows_pool_capacity_under_backlog():
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 6, seed=14)
+    server = GraphServer(capacity=1, k_visits=16, max_capacity=8)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    rids = [server.submit(GraphRequest(kind="sssp", source=int(s),
+                                       graph="g")) for s in srcs]
+    out = server.serve()
+    assert all(out[r].status == "ok" for r in rids)
+    # the backlog of 6 should have pulled capacity up to the next pow2
+    assert server._pools[("g", "sssp")].capacity == 8
+
+
+# ------------------------------------------------------------------ misc
+
+
+def test_submit_validation_and_empty_serve():
+    g = grid2d(6, 6, seed=15)
+    server = GraphServer(capacity=2)
+    server.register_graph("g", g, num_queries=2, block_size=16)
+    with pytest.raises(ValueError):
+        server.submit(GraphRequest(kind="dfs", source=0, graph="g"))
+    with pytest.raises(ValueError):
+        server.submit(GraphRequest(kind="sssp", source=0, graph="nope"))
+    with pytest.raises(ValueError):
+        server.submit(GraphRequest(kind="sssp", source=g.n, graph="g"))
+    with pytest.raises(ValueError):
+        server.register_graph("g", g)    # duplicate name
+    assert server.serve() == {}          # nothing submitted: clean no-op
+    assert server.pending == 0
