@@ -1,116 +1,23 @@
 #!/usr/bin/env python
-"""CI doc-consistency check: no dangling DESIGN.md § references or stale
-README repo-map entries.
+"""CI doc-consistency check — thin shim over the fppcheck docs pass.
 
-The code cites the architecture doc as ``DESIGN.md §N.M`` in docstrings,
-and DESIGN.md renumbers sections as the system grows (ISSUE 5 split §4
-into §4.1/§4.2) — so every citation is checked against the headings that
-actually exist:
-
-  (a) every ``DESIGN.md §N[.M]`` reference in the repo's ``*.py`` files,
-      README.md, and CHANGES.md resolves to a real DESIGN.md heading;
-  (b) every internal ``§N[.M]`` cross-reference inside DESIGN.md itself
-      resolves (references to the *paper's* sections are written
-      "paper §N" and are exempt);
-  (c) every path named in README's "Repo map" table exists (relative to
-      the repo root, or to src/repro/ for bare package entries).
-
-Run from anywhere; no third-party dependencies (CI runs it before the
-jax install finishes cooking):
+The actual checks live in ``repro.analysis.docs`` (the registered
+``docs.refs`` pass, DESIGN.md §7); this script keeps the historical entry
+point and exit-code contract so existing CI invocations and docs stay
+valid.  Still stdlib-only — ``repro.analysis`` imports no third-party
+packages, so this runs before the jax install finishes cooking:
 
     python scripts/check_docs.py
 """
 from __future__ import annotations
 
 import pathlib
-import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
 
-#: a section citation: §N, §N.M (used both with and without the
-#: "DESIGN.md " prefix depending on the file being scanned)
-SECTION = r"§(\d+(?:\.\d+)*)"
-#: directories never scanned for citations
-SKIP_DIRS = {".git", "__pycache__", ".github", "results"}
-
-
-def design_headings() -> set[str]:
-    """Section numbers with a real heading in DESIGN.md (## §2, ### §2.1)."""
-    text = (ROOT / "DESIGN.md").read_text()
-    return set(re.findall(rf"^#{{2,}}\s+{SECTION}", text, re.M))
-
-
-def iter_source_files():
-    for path in sorted(ROOT.rglob("*.py")):
-        if not SKIP_DIRS & set(p.name for p in path.parents):
-            yield path
-    for name in ("README.md", "CHANGES.md"):
-        if (ROOT / name).exists():
-            yield ROOT / name
-
-
-def check_design_refs(headings: set[str]) -> list[str]:
-    errors = []
-    # (a) prefixed references anywhere in the tree
-    pat = re.compile(rf"DESIGN\.md\s+{SECTION}")
-    for path in iter_source_files():
-        text = path.read_text(errors="replace")
-        for lineno, line in enumerate(text.splitlines(), 1):
-            for ref in pat.findall(line):
-                if ref not in headings:
-                    errors.append(f"{path.relative_to(ROOT)}:{lineno}: "
-                                  f"dangling reference DESIGN.md §{ref}")
-    # (b) bare internal cross-references inside DESIGN.md; "paper §N"
-    # cites the source paper, not this document (checked over the full
-    # text so a citation wrapped across a line break still counts)
-    text = (ROOT / "DESIGN.md").read_text()
-    for m in re.finditer(SECTION, text):
-        pre = text[max(0, m.start() - 10):m.start()]
-        if re.search(r"[Pp]aper(?:'s)?[\s-]+$", pre):
-            continue
-        if m.group(1) not in headings:
-            lineno = text.count("\n", 0, m.start()) + 1
-            errors.append(f"DESIGN.md:{lineno}: dangling internal "
-                          f"cross-reference §{m.group(1)}")
-    return errors
-
-
-def check_repo_map() -> list[str]:
-    """Every `path` in README's Repo map table must exist on disk."""
-    errors = []
-    text = (ROOT / "README.md").read_text()
-    m = re.search(r"^## Repo map\n(.*?)(?=^## )", text, re.M | re.S)
-    if not m:
-        return ["README.md: no '## Repo map' section found"]
-    for row in m.group(1).splitlines():
-        if not row.startswith("|") or set(row) <= {"|", "-", " "}:
-            continue
-        first_cell = row.split("|")[1]
-        for span in re.findall(r"`([^`]+)`", first_cell):
-            if "/" not in span and "." not in span:
-                continue
-            candidates = (ROOT / span, ROOT / "src" / "repro" / span)
-            if not any(p.exists() for p in candidates):
-                errors.append(f"README.md repo map: `{span}` does not exist")
-    return errors
-
-
-def main() -> int:
-    headings = design_headings()
-    if not headings:
-        print("check_docs: DESIGN.md has no § headings — parser broken?")
-        return 1
-    errors = check_design_refs(headings) + check_repo_map()
-    if errors:
-        print(f"check_docs: {len(errors)} dangling reference(s):")
-        for e in errors:
-            print(f"  {e}")
-        return 1
-    print(f"check_docs: OK ({len(headings)} DESIGN.md sections, "
-          f"all references resolve, repo map clean)")
-    return 0
-
+from repro.analysis import docs  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(docs.main(ROOT))

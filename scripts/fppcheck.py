@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""fppcheck — the one CLI over the static-analysis layer (DESIGN.md §7).
+
+    python scripts/fppcheck.py --all                 # every pass family
+    python scripts/fppcheck.py --ast --docs          # jax-free families
+    python scripts/fppcheck.py --hlo --update-budgets  # refresh baselines
+    python scripts/fppcheck.py --all --report out.json
+
+Families: ast, docs, pallas, jaxpr, hlo.  Exit code 1 on any
+error-severity finding (budget drift, a bare assert, a callback in a
+device loop, ...); allowlisted/warning/info findings never fail.  CI runs
+``--all`` under forced host device counts {1, 8} (the distributed budget
+rows are keyed ``@d{ndev}``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import (FAMILIES, PassContext, Report,  # noqa: E402
+                            run_passes)
+
+#: families that need jax (the rest are stdlib-only)
+JAX_FAMILIES = ("pallas", "jaxpr", "hlo")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    for fam in FAMILIES:
+        ap.add_argument(f"--{fam}", action="store_true",
+                        help=f"run the {fam} pass family "
+                             f"({', '.join(FAMILIES[fam])})")
+    ap.add_argument("--all", action="store_true", help="run every family")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="filter jaxpr/hlo program keys by substring "
+                         "(e.g. 'engine/', 'distributed/sssp')")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="rewrite analysis/budgets.json from measured "
+                         "HLO rows (commit the diff)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="also write the full report as JSON")
+    args = ap.parse_args(argv)
+
+    families = [f for f in FAMILIES if args.all or getattr(args, f)]
+    if not families:
+        ap.error("pick at least one pass family (or --all)")
+
+    ctx = PassContext(root=ROOT, update_budgets=args.update_budgets,
+                      only_programs=args.only)
+    names = [n for fam in families for n in FAMILIES[fam]]
+    report = run_passes(names, ctx)
+
+    report.env = {"argv": sys.argv[1:],
+                  "xla_flags": os.environ.get("XLA_FLAGS", "")}
+    if any(f in JAX_FAMILIES for f in families):
+        import jax
+        report.env["backend"] = jax.default_backend()
+        report.env["device_count"] = jax.device_count()
+
+    print(report.render())
+    if args.report:
+        report.write(args.report)
+        print(f"fppcheck: report written to {args.report}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

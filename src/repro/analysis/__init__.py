@@ -1,0 +1,171 @@
+"""fppcheck — the static-analysis layer (DESIGN.md §7).
+
+ForkGraph's whole thesis is a *static* resource contract: partitions sized
+to the cache, atomic-free intra-partition execution, bounded inter-partition
+work.  This package checks those contracts without running a benchmark, as
+four pass families over four different program representations:
+
+  jaxpr   device-loop hygiene of the traced hot programs (no host callbacks
+          or transfers inside the ``while_loop`` body, no f64/weak-type
+          promotion, int32 ``(hi, lo)`` edge counters, donation-safe state)
+  hlo     per-program op budgets over the *compiled* HLO text, checked
+          against the committed ``analysis/budgets.json`` baseline — an
+          extra HBM round-trip in the megastep fails CI without timing
+          anything
+  pallas  static VMEM footprints of every kernel's BlockSpecs/grid against
+          the §3.1 memory model, tile divisibility, grid coverage, and
+          dispatch-table reachability (dead kernels are allowlisted with a
+          reason, never silent)
+  ast     source lints: bare ``assert`` on user-reachable paths, ``jnp.``
+          work inside host Python loops in ``core/``, and the doc-consistency
+          sweep (``scripts/check_docs.py`` is now a shim over ``docs``)
+
+``scripts/fppcheck.py`` is the one CLI; CI runs it under forced host device
+counts {1, 8} and fails on any error-severity finding (budget drift, a
+reintroduced bare assert, a callback in a device loop, ...).
+
+This module is importable without jax (the registry resolves pass modules
+lazily), so the docs/ast families run before heavyweight deps install.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import pathlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+#: severity ladder: only "error" fails the build.  "allowlisted" is a
+#: warning with an explicit standing excuse (e.g. the dead-kernel list).
+SEVERITIES = ("error", "warning", "allowlisted", "info")
+
+
+def repo_root() -> pathlib.Path:
+    """The repo checkout this package sits in (…/src/repro/analysis)."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One fact a pass established about the codebase."""
+    pass_name: str     # registry key, e.g. "jaxpr.hygiene"
+    code: str          # stable machine tag, e.g. "host-callback-in-loop"
+    severity: str      # one of SEVERITIES
+    location: str      # "path:line" or a program key like "engine/sssp"
+    message: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; "
+                             f"one of {SEVERITIES}")
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return (f"[{self.severity:>11}] {self.pass_name} {self.code} "
+                f"@ {self.location}: {self.message}")
+
+
+@dataclasses.dataclass
+class PassContext:
+    """Everything a pass may need; passes take (ctx) and return findings."""
+    root: pathlib.Path
+    update_budgets: bool = False
+    budgets_path: Optional[pathlib.Path] = None
+    only_programs: Optional[str] = None   # substring filter over program keys
+
+    def __post_init__(self):
+        self.root = pathlib.Path(self.root)
+        if self.budgets_path is None:
+            self.budgets_path = pathlib.Path(__file__).with_name(
+                "budgets.json")
+
+
+@dataclasses.dataclass
+class Report:
+    """The result of one fppcheck invocation."""
+    findings: List[Finding]
+    passes_run: List[str]
+    env: dict = dataclasses.field(default_factory=dict)
+
+    def count(self, severity: str) -> int:
+        return sum(1 for f in self.findings if f.severity == severity)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def as_dict(self) -> dict:
+        return {
+            "passes_run": list(self.passes_run),
+            "env": dict(self.env),
+            "counts": {s: self.count(s) for s in SEVERITIES},
+            "findings": [f.as_dict() for f in self.findings],
+            "ok": self.ok,
+        }
+
+    def write(self, path) -> None:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.as_dict(), indent=2,
+                                   sort_keys=True) + "\n")
+
+    def render(self) -> str:
+        lines = [f"fppcheck: ran {len(self.passes_run)} pass(es): "
+                 f"{', '.join(self.passes_run)}"]
+        for sev in SEVERITIES:
+            for f in self.findings:
+                if f.severity == sev:
+                    lines.append("  " + f.render())
+        counts = ", ".join(f"{self.count(s)} {s}" for s in SEVERITIES
+                           if self.count(s))
+        lines.append(f"fppcheck: {'FAIL' if self.errors else 'OK'}"
+                     f"{' — ' + counts if counts else ' — no findings'}")
+        return "\n".join(lines)
+
+
+#: registry: pass name -> (module, function).  Modules import lazily so the
+#: jax-free families (ast, docs) run without jax installed.
+PASSES: Dict[str, Tuple[str, str]] = {
+    "ast.asserts": ("repro.analysis.ast_passes", "check_asserts"),
+    "ast.host-jnp": ("repro.analysis.ast_passes", "check_host_jnp_loops"),
+    "docs.refs": ("repro.analysis.docs", "run_pass"),
+    "pallas.contracts": ("repro.analysis.pallas_passes", "check_contracts"),
+    "pallas.reachability": ("repro.analysis.pallas_passes",
+                            "check_reachability"),
+    "jaxpr.hygiene": ("repro.analysis.jaxpr_passes", "run_pass"),
+    "hlo.budgets": ("repro.analysis.hlo_passes", "run_pass"),
+}
+
+#: pass families as the CLI exposes them (scripts/fppcheck.py --<family>)
+FAMILIES: Dict[str, Tuple[str, ...]] = {
+    "ast": ("ast.asserts", "ast.host-jnp"),
+    "docs": ("docs.refs",),
+    "pallas": ("pallas.contracts", "pallas.reachability"),
+    "jaxpr": ("jaxpr.hygiene",),
+    "hlo": ("hlo.budgets",),
+}
+
+
+def resolve_pass(name: str) -> Callable[[PassContext], List[Finding]]:
+    mod_name, fn_name = PASSES[name]
+    return getattr(importlib.import_module(mod_name), fn_name)
+
+
+def run_passes(names, ctx: Optional[PassContext] = None) -> Report:
+    """Run the named passes in order and collect one Report."""
+    ctx = ctx or PassContext(root=repo_root())
+    findings: List[Finding] = []
+    ran = []
+    for name in names:
+        if name not in PASSES:
+            raise ValueError(f"unknown pass {name!r}; one of "
+                             f"{sorted(PASSES)}")
+        findings.extend(resolve_pass(name)(ctx))
+        ran.append(name)
+    return Report(findings=findings, passes_run=ran)

@@ -1,0 +1,164 @@
+"""AST lint passes over ``src/repro`` (DESIGN.md §7).
+
+Two lints, both plain ``ast`` walks — no jax import:
+
+  ast.asserts    bare ``assert`` on user-reachable paths.  Asserts vanish
+                 under ``python -O`` and give the caller a context-free
+                 AssertionError; library code raises ValueError/RuntimeError
+                 with a message instead.  Tests (``tests/``, ``scripts/``)
+                 and reference implementations keep their asserts; a
+                 deliberate invariant can stay with an inline
+                 ``# fppcheck: allow-assert`` excuse.
+
+  ast.host-jnp   ``jnp.``/``jax.numpy`` calls inside host Python ``for``/
+                 ``while`` loops in ``core/``.  A jnp call per host
+                 iteration is a dispatch (and often a transfer) per
+                 iteration — the exact pattern the K-visit megastep exists
+                 to remove.  Loops inside nested ``def``/``lambda`` are
+                 skipped (those are traced bodies, where jnp is the point),
+                 as are scalar constructors like ``jnp.int32(0)`` and lines
+                 carrying ``# fppcheck: allow-host-jnp``.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List
+
+from repro.analysis import Finding, PassContext
+
+#: file/dir names whose asserts are exempt wholesale: test code asserts by
+#: design, and kernels' ``ref.py`` oracles are internal to the test suite —
+#: with the one exception (minplus/ref.py shape check) now a ValueError.
+ASSERT_EXEMPT_DIRS = {"tests", "__pycache__"}
+
+ALLOW_ASSERT = "fppcheck: allow-assert"
+ALLOW_HOST_JNP = "fppcheck: allow-host-jnp"
+
+#: scalar constructors / dtype casts — cheap, no device dispatch worth
+#: flagging when they appear in a host loop
+SCALAR_CTORS = {"int32", "int64", "float32", "float64", "bool_", "uint32",
+                "uint64", "asarray", "dtype"}
+
+
+def _py_files(root: pathlib.Path, sub: str = "src/repro"):
+    base = root / sub
+    for path in sorted(base.rglob("*.py")):
+        parts = set(p.name for p in path.relative_to(base).parents)
+        if not parts & ASSERT_EXEMPT_DIRS:
+            yield path
+
+
+def _line_has(source_lines, lineno: int, marker: str) -> bool:
+    if 1 <= lineno <= len(source_lines):
+        return marker in source_lines[lineno - 1]
+    return False
+
+
+def check_asserts(ctx: PassContext) -> List[Finding]:
+    findings = []
+    for path in _py_files(ctx.root):
+        text = path.read_text()
+        lines = text.splitlines()
+        tree = ast.parse(text, filename=str(path))
+        rel = path.relative_to(ctx.root)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assert):
+                continue
+            if _line_has(lines, node.lineno, ALLOW_ASSERT):
+                continue
+            findings.append(Finding(
+                pass_name="ast.asserts", code="bare-assert",
+                severity="error", location=f"{rel}:{node.lineno}",
+                message="bare assert on a library path — raise ValueError/"
+                        "RuntimeError with a message (or annotate "
+                        f"'# {ALLOW_ASSERT}')"))
+    return findings
+
+
+class _HostLoopJnp(ast.NodeVisitor):
+    """Find jnp attribute-calls lexically inside host for/while loops.
+
+    Nested function/lambda bodies are *not* host code at the loop's
+    nesting level — they are typically traced (round_fn closures, vmapped
+    operators), so descent stops there.
+    """
+
+    def __init__(self, jnp_aliases, lines):
+        self.jnp_aliases = jnp_aliases
+        self.lines = lines
+        self.loop_depth = 0
+        self.hits = []   # (lineno, rendered call)
+
+    # -- barriers: a new def/lambda resets "host loop" context ------------
+    def visit_FunctionDef(self, node):
+        saved, self.loop_depth = self.loop_depth, 0
+        self.generic_visit(node)
+        self.loop_depth = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        saved, self.loop_depth = self.loop_depth, 0
+        self.generic_visit(node)
+        self.loop_depth = saved
+
+    # -- loops ------------------------------------------------------------
+    def visit_For(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_AsyncFor = visit_For
+    visit_While = visit_For
+
+    # -- the actual check -------------------------------------------------
+    def visit_Call(self, node):
+        if self.loop_depth > 0:
+            fn = node.func
+            if (isinstance(fn, ast.Attribute)
+                    and isinstance(fn.value, ast.Name)
+                    and fn.value.id in self.jnp_aliases
+                    and fn.attr not in SCALAR_CTORS
+                    and not _line_has(self.lines, node.lineno,
+                                      ALLOW_HOST_JNP)):
+                self.hits.append((node.lineno,
+                                  f"{fn.value.id}.{fn.attr}(...)"))
+        self.generic_visit(node)
+
+
+def _jnp_aliases(tree) -> set:
+    """Names bound to jax.numpy in this module (usually just {'jnp'})."""
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.numpy":
+                    aliases.add(a.asname or "jax.numpy")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax" :
+                for a in node.names:
+                    if a.name == "numpy":
+                        aliases.add(a.asname or "numpy")
+    return aliases
+
+
+def check_host_jnp_loops(ctx: PassContext) -> List[Finding]:
+    findings = []
+    for path in _py_files(ctx.root, "src/repro/core"):
+        text = path.read_text()
+        tree = ast.parse(text, filename=str(path))
+        aliases = _jnp_aliases(tree)
+        if not aliases:
+            continue
+        visitor = _HostLoopJnp(aliases, text.splitlines())
+        visitor.visit(tree)
+        rel = path.relative_to(ctx.root)
+        for lineno, call in visitor.hits:
+            findings.append(Finding(
+                pass_name="ast.host-jnp", code="jnp-in-host-loop",
+                severity="error", location=f"{rel}:{lineno}",
+                message=f"{call} inside a host Python loop — one dispatch "
+                        "per iteration; hoist into the traced program or "
+                        f"annotate '# {ALLOW_HOST_JNP}'"))
+    return findings

@@ -1,0 +1,129 @@
+"""Doc-consistency pass: no dangling DESIGN.md § refs, no stale repo map.
+
+The code cites the architecture doc as ``DESIGN.md §N.M`` in docstrings, and
+DESIGN.md renumbers sections as the system grows — so every citation is
+checked against the headings that actually exist:
+
+  (a) every ``DESIGN.md §N[.M]`` reference in the repo's ``*.py`` files,
+      README.md, and CHANGES.md resolves to a real DESIGN.md heading;
+  (b) every internal ``§N[.M]`` cross-reference inside DESIGN.md itself
+      resolves (references to the *paper's* sections are written
+      "paper §N" and are exempt);
+  (c) every path named in README's "Repo map" table exists (relative to
+      the repo root, or to src/repro/ for bare package entries).
+
+This used to live in ``scripts/check_docs.py``; that script is now a thin
+shim over this module so existing CI invocations keep working, and the same
+checks run as the registered ``docs.refs`` fppcheck pass (DESIGN.md §7).
+Stdlib-only on purpose — CI runs it before the jax install finishes cooking.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+from typing import List, Tuple
+
+from repro.analysis import Finding, PassContext
+
+#: a section citation: §N, §N.M (used both with and without the
+#: "DESIGN.md " prefix depending on the file being scanned)
+SECTION = r"§(\d+(?:\.\d+)*)"
+#: directories never scanned for citations
+SKIP_DIRS = {".git", "__pycache__", ".github", "results"}
+
+
+def design_headings(root: pathlib.Path) -> set:
+    """Section numbers with a real heading in DESIGN.md (## §2, ### §2.1)."""
+    text = (root / "DESIGN.md").read_text()
+    return set(re.findall(rf"^#{{2,}}\s+{SECTION}", text, re.M))
+
+
+def iter_source_files(root: pathlib.Path):
+    for path in sorted(root.rglob("*.py")):
+        if not SKIP_DIRS & set(p.name for p in path.parents):
+            yield path
+    for name in ("README.md", "CHANGES.md"):
+        if (root / name).exists():
+            yield root / name
+
+
+def check_design_refs(root: pathlib.Path, headings: set
+                      ) -> List[Tuple[str, str]]:
+    """Returns (location, message) pairs for every dangling reference."""
+    errors = []
+    # (a) prefixed references anywhere in the tree
+    pat = re.compile(rf"DESIGN\.md\s+{SECTION}")
+    for path in iter_source_files(root):
+        text = path.read_text(errors="replace")
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for ref in pat.findall(line):
+                if ref not in headings:
+                    errors.append((f"{path.relative_to(root)}:{lineno}",
+                                   f"dangling reference DESIGN.md §{ref}"))
+    # (b) bare internal cross-references inside DESIGN.md; "paper §N"
+    # cites the source paper, not this document (checked over the full
+    # text so a citation wrapped across a line break still counts)
+    text = (root / "DESIGN.md").read_text()
+    for m in re.finditer(SECTION, text):
+        pre = text[max(0, m.start() - 10):m.start()]
+        if re.search(r"[Pp]aper(?:'s)?[\s-]+$", pre):
+            continue
+        if m.group(1) not in headings:
+            lineno = text.count("\n", 0, m.start()) + 1
+            errors.append((f"DESIGN.md:{lineno}",
+                           f"dangling internal cross-reference "
+                           f"§{m.group(1)}"))
+    return errors
+
+
+def check_repo_map(root: pathlib.Path) -> List[Tuple[str, str]]:
+    """Every `path` in README's Repo map table must exist on disk."""
+    errors = []
+    text = (root / "README.md").read_text()
+    m = re.search(r"^## Repo map\n(.*?)(?=^## )", text, re.M | re.S)
+    if not m:
+        return [("README.md", "no '## Repo map' section found")]
+    for row in m.group(1).splitlines():
+        if not row.startswith("|") or set(row) <= {"|", "-", " "}:
+            continue
+        first_cell = row.split("|")[1]
+        for span in re.findall(r"`([^`]+)`", first_cell):
+            if "/" not in span and "." not in span:
+                continue
+            candidates = (root / span, root / "src" / "repro" / span)
+            if not any(p.exists() for p in candidates):
+                errors.append(("README.md repo map",
+                               f"`{span}` does not exist"))
+    return errors
+
+
+def run_checks(root: pathlib.Path) -> List[Tuple[str, str]]:
+    """All (location, message) problems; empty list = docs are consistent."""
+    headings = design_headings(root)
+    if not headings:
+        return [("DESIGN.md", "no § headings found — parser broken?")]
+    return check_design_refs(root, headings) + check_repo_map(root)
+
+
+def run_pass(ctx: PassContext) -> List[Finding]:
+    """The registered fppcheck pass (docs.refs)."""
+    return [Finding(pass_name="docs.refs", code="dangling-ref",
+                    severity="error", location=loc, message=msg)
+            for loc, msg in run_checks(ctx.root)]
+
+
+def main(root: pathlib.Path) -> int:
+    """Legacy scripts/check_docs.py CLI behavior (same output contract)."""
+    headings = design_headings(root)
+    if not headings:
+        print("check_docs: DESIGN.md has no § headings — parser broken?")
+        return 1
+    errors = run_checks(root)
+    if errors:
+        print(f"check_docs: {len(errors)} dangling reference(s):")
+        for loc, msg in errors:
+            print(f"  {loc}: {msg}")
+        return 1
+    print(f"check_docs: OK ({len(headings)} DESIGN.md sections, "
+          f"all references resolve, repo map clean)")
+    return 0

@@ -1,0 +1,130 @@
+"""HLO op-budget pass (DESIGN.md §7).
+
+Compiles every program in the canonical inventory and reduces its
+optimized HLO text (``launch/hlo.py: op_census`` + ``collective_stats``)
+to one flat metric row per program:
+
+  ops_total, op_<opcode>        whole-module opcode counts for the
+                                opcodes that track memory traffic and
+                                layout churn (copy, convert, transpose,
+                                fusion, dynamic-slice, ...)
+  while_body_total, wb_<opcode> the same census restricted to while-loop
+                                bodies — the per-iteration cost, where an
+                                extra copy means an extra HBM round-trip
+                                *every* visit
+  collective_bytes[_<kind>]     operand bytes of collectives by kind
+
+Rows are checked against the committed ``analysis/budgets.json``
+baselines as **ceilings**: only ``measured > budget`` fails, so compiler
+noise that shrinks a count never blocks a PR.  Distributed programs are
+keyed ``@d{ndev}`` because XLA specializes on device count.
+
+``--update-budgets`` (PassContext.update_budgets) rewrites the measured
+rows in place — the explicit act a perf PR commits when a budget
+legitimately moves (DESIGN.md §7 workflow).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from repro.analysis import Finding, PassContext
+
+#: opcodes budgeted individually (everything else rides in ops_total)
+INTERESTING_OPS = ("copy", "convert", "transpose", "fusion", "while",
+                   "dynamic-slice", "dynamic-update-slice", "scatter",
+                   "gather", "dot", "custom-call", "all-to-all",
+                   "all-reduce", "all-gather", "reduce-scatter",
+                   "collective-permute")
+
+
+def measure_program(program) -> Dict[str, int]:
+    """Compile one program and reduce its HLO text to a flat metric row."""
+    from repro.launch.hlo import collective_stats, op_census
+
+    hlo = program.fn.lower(*program.args).compile().as_text()
+    census = op_census(hlo)
+    coll = collective_stats(hlo)
+    row = {"ops_total": census.total,
+           "while_body_total": census.while_body_total,
+           "collective_bytes": coll.total_bytes}
+    for op in INTERESTING_OPS:
+        row[f"op_{op}"] = census.counts.get(op, 0)
+        row[f"wb_{op}"] = census.while_body_counts.get(op, 0)
+    for kind, nb in sorted(coll.bytes_by_kind.items()):
+        row[f"collective_bytes_{kind}"] = nb
+    return row
+
+
+def load_budgets(ctx: PassContext) -> Dict[str, Dict[str, int]]:
+    if ctx.budgets_path.exists():
+        return json.loads(ctx.budgets_path.read_text())
+    return {}
+
+
+def check_row(key: str, row: Dict[str, int],
+              baseline: Dict[str, int]) -> List[Finding]:
+    """Compare one measured metric row against its committed ceiling."""
+    findings: List[Finding] = []
+    drift = []
+    for metric, value in row.items():
+        limit = baseline.get(metric)
+        if limit is None:
+            findings.append(Finding(
+                pass_name="hlo.budgets", code="unbudgeted-metric",
+                severity="warning", location=key,
+                message=f"metric {metric} ({value}) has no budget — "
+                        f"refresh the baseline row"))
+        elif value > limit:
+            drift.append(f"{metric}: {value} > {limit}")
+    if drift:
+        findings.append(Finding(
+            pass_name="hlo.budgets", code="budget-exceeded",
+            severity="error", location=key,
+            message="; ".join(drift) + " — the program grew past its "
+                    "committed ceiling (if intentional, regenerate "
+                    "with --update-budgets and commit the diff)"))
+    else:
+        findings.append(Finding(
+            pass_name="hlo.budgets", code="within-budget",
+            severity="info", location=key,
+            message=f"ops_total {row['ops_total']} <= "
+                    f"{baseline.get('ops_total')}, while-body "
+                    f"{row['while_body_total']} <= "
+                    f"{baseline.get('while_body_total')}"))
+    return findings
+
+
+def run_pass(ctx: PassContext) -> List[Finding]:
+    from repro.analysis.programs import build_programs
+
+    budgets = load_budgets(ctx)
+    findings: List[Finding] = []
+    measured_all: Dict[str, Dict[str, int]] = {}
+
+    for program in build_programs(only=ctx.only_programs):
+        row = measure_program(program)
+        measured_all[program.key] = row
+        baseline = budgets.get(program.key)
+        if baseline is None:
+            if not ctx.update_budgets:
+                findings.append(Finding(
+                    pass_name="hlo.budgets", code="no-baseline",
+                    severity="error", location=program.key,
+                    message="program has no committed budget row — run "
+                            "scripts/fppcheck.py --hlo --update-budgets "
+                            "and commit analysis/budgets.json"))
+            continue
+        findings.extend(check_row(program.key, row, baseline))
+
+    if ctx.update_budgets:
+        merged = dict(budgets)
+        merged.update(measured_all)
+        ctx.budgets_path.write_text(
+            json.dumps(merged, indent=2, sort_keys=True) + "\n")
+        findings.append(Finding(
+            pass_name="hlo.budgets", code="budgets-updated",
+            severity="info", location=str(ctx.budgets_path),
+            message=f"rewrote {len(measured_all)} budget row(s); commit "
+                    f"the diff"))
+    return findings

@@ -1,0 +1,196 @@
+"""Pallas kernel contract passes (DESIGN.md §7).
+
+``pallas.contracts`` validates every declared :class:`KernelContract`
+statically — no tracing, no pallas_call:
+
+  * tile divisibility: each full dim divides into whole blocks;
+  * grid coverage: the grid writes each output element exactly once
+    (``num_blocks == grid_size`` per output tile);
+  * VMEM bound: the per-grid-step footprint fits the raw VMEM budget for
+    every kernel, and additionally fits the planner memory model's
+    working set (`MemoryModel.covers`) for *wired* graph kernels — a
+    wired kernel whose tiles outgrow the model would thrash the cache
+    the planner sized.
+
+``pallas.reachability`` cross-checks each contract's ``wired`` claim
+against the actual import graph of ``src/repro`` (AST-level, so a
+refactor that orphans a kernel is caught even if tests still import it
+directly).  Dead kernels are allowlisted *warnings with a reason* —
+``wired=False`` requires a ``note`` naming the plan.  ``core/randomwalk``
+gets an explicit ruling too: it must stay dispatched (via
+``core/queries.run_rw`` / ``fpp.session.random_walks``), not drift dead.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Set
+
+from repro.analysis import Finding, PassContext
+
+
+def _imported_names(tree) -> Set[str]:
+    """All dotted module names a module imports (Import + ImportFrom)."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                names.add(a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            names.add(node.module)
+            for a in node.names:
+                names.add(f"{node.module}.{a.name}")
+    return names
+
+
+def _import_graph(root: pathlib.Path) -> Dict[str, Set[str]]:
+    """relative file path -> set of imported dotted names, over src/repro."""
+    graph = {}
+    base = root / "src" / "repro"
+    for path in sorted(base.rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        graph[str(path.relative_to(root))] = _imported_names(tree)
+    return graph
+
+
+def _importers_of(graph: Dict[str, Set[str]], prefix: str,
+                  own_dir: str) -> List[str]:
+    """Files outside ``own_dir`` importing anything under ``prefix``."""
+    hits = []
+    for rel, names in graph.items():
+        if rel.startswith(own_dir):
+            continue
+        if any(n == prefix or n.startswith(prefix + ".") for n in names):
+            hits.append(rel)
+    return hits
+
+
+def check_contract(c, mem) -> List[Finding]:
+    """Validate one KernelContract against one MemoryModel."""
+    findings = []
+    loc = f"{c.module} ({c.name})"
+    for t in c.tiles:
+        if not t.divisible():
+            findings.append(Finding(
+                pass_name="pallas.contracts", code="tile-divisibility",
+                severity="error", location=loc,
+                message=f"tile {t.name}: block {t.block} does not "
+                        f"divide full shape {t.full}"))
+    for t in c.out_tiles:
+        if t.divisible() and t.num_blocks() != c.grid_size():
+            findings.append(Finding(
+                pass_name="pallas.contracts", code="grid-coverage",
+                severity="error", location=loc,
+                message=f"output {t.name}: grid {c.grid} schedules "
+                        f"{c.grid_size()} programs but the tiling "
+                        f"yields {t.num_blocks()} blocks — each output "
+                        f"element must be written exactly once"))
+    fp = c.footprint_bytes()
+    if fp > mem.vmem_bytes:
+        findings.append(Finding(
+            pass_name="pallas.contracts", code="vmem-overflow",
+            severity="error", location=loc,
+            message=f"per-grid-step footprint {fp} B exceeds the "
+                    f"{mem.vmem_bytes} B VMEM budget"))
+    elif c.wired and c.block_size is not None:
+        if not mem.covers(fp, c.block_size, c.num_queries):
+            findings.append(Finding(
+                pass_name="pallas.contracts", code="model-overflow",
+                severity="error", location=loc,
+                message=f"footprint {fp} B exceeds the planner model's "
+                        f"working set "
+                        f"{mem.working_set(c.block_size, c.num_queries)}"
+                        f" B for (B={c.block_size}, Q={c.num_queries})"
+                        f" — the kernel would thrash the cache the "
+                        f"planner sized"))
+        else:
+            findings.append(Finding(
+                pass_name="pallas.contracts", code="footprint",
+                severity="info", location=loc,
+                message=f"footprint {fp} B within model working set "
+                        f"{mem.working_set(c.block_size, c.num_queries)}"
+                        f" B (B={c.block_size}, Q={c.num_queries})"))
+    return findings
+
+
+def check_contracts(ctx: PassContext) -> List[Finding]:
+    from repro.fpp.planner import MemoryModel
+    from repro.kernels.contract import all_contracts
+
+    mem = MemoryModel()
+    findings: List[Finding] = []
+    for c in all_contracts():
+        findings.extend(check_contract(c, mem))
+    return findings
+
+
+def check_reachability(ctx: PassContext) -> List[Finding]:
+    from repro.kernels.contract import KERNEL_PACKAGES, all_contracts
+
+    graph = _import_graph(ctx.root)
+    findings = []
+
+    wired_claim = {pkg: False for pkg in KERNEL_PACKAGES}
+    notes = {}
+    for c in all_contracts():
+        pkg = c.module.split(".")[2]          # repro.kernels.<pkg>.<mod>
+        wired_claim[pkg] = wired_claim[pkg] or c.wired
+        if not c.wired:
+            notes[pkg] = c.note
+
+    for pkg in KERNEL_PACKAGES:
+        importers = _importers_of(graph, f"repro.kernels.{pkg}",
+                                  own_dir="src/repro/kernels")
+        loc = f"src/repro/kernels/{pkg}"
+        if wired_claim[pkg] and not importers:
+            findings.append(Finding(
+                pass_name="pallas.reachability", code="stale-wired-claim",
+                severity="error", location=loc,
+                message="contract claims wired=True but no module outside "
+                        "kernels/ imports this package — fix the dispatch "
+                        "table or declare the kernel dead with a note"))
+        elif not wired_claim[pkg] and importers:
+            findings.append(Finding(
+                pass_name="pallas.reachability", code="stale-dead-claim",
+                severity="error", location=loc,
+                message=f"contract claims wired=False but "
+                        f"{sorted(importers)} import it — flip the claim"))
+        elif not wired_claim[pkg]:
+            if not notes.get(pkg):
+                findings.append(Finding(
+                    pass_name="pallas.reachability", code="dead-no-reason",
+                    severity="error", location=loc,
+                    message="dead kernel with no ruling — wired=False "
+                            "requires a contract note naming the plan"))
+            else:
+                findings.append(Finding(
+                    pass_name="pallas.reachability", code="dead-kernel",
+                    severity="allowlisted", location=loc,
+                    message=f"unreachable from any dispatch table "
+                            f"(allowlisted: {notes[pkg]})"))
+        else:
+            findings.append(Finding(
+                pass_name="pallas.reachability", code="wired",
+                severity="info", location=loc,
+                message=f"dispatched by {sorted(importers)}"))
+
+    # core/randomwalk ruling: it must stay wired through the query facade
+    rw_importers = _importers_of(graph, "repro.core.randomwalk",
+                                 own_dir="src/repro/core/randomwalk")
+    rw_importers = [r for r in rw_importers
+                    if r != "src/repro/core/randomwalk.py"]
+    if rw_importers:
+        findings.append(Finding(
+            pass_name="pallas.reachability", code="wired",
+            severity="info", location="src/repro/core/randomwalk.py",
+            message=f"dispatched by {sorted(rw_importers)}"))
+    else:
+        findings.append(Finding(
+            pass_name="pallas.reachability", code="dead-module",
+            severity="error", location="src/repro/core/randomwalk.py",
+            message="core/randomwalk lost its dispatch-table entry "
+                    "(core/queries.run_rw, fpp.session.random_walks) — "
+                    "rewire it or add an explicit dead ruling here"))
+    return findings

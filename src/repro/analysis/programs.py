@@ -1,0 +1,148 @@
+"""The canonical hot-program inventory the jaxpr/HLO passes run over.
+
+One small graph (grid2d 16x16, seed 0 — the tier-1 test workhorse), one
+query batch (Q=8), the planner's block size for it (B=64, P=4), and the
+full BACKENDS × KINDS matrix of jitted programs:
+
+  engine/<kind>        FPPEngine's K-visit megastep (core/visit
+                       .make_megastep; the per-dispatch hot program)
+  streaming/<kind>     StreamingExecutor's pump megastep — same skeleton
+                       with the [Q] pending-lane harvest mask folded in
+  distributed/<kind>@d{ndev}
+                       the jit(shard_map(while(superstep))) mesh program
+                       (core/distributed.make_distributed_program), keyed
+                       by device count since XLA specializes on it
+  baselines/<kind>     the synchronous global round programs
+                       (core/baselines.make_minplus_round / make_push_round)
+
+Each :class:`Program` carries its jitted fn plus trace-ready args
+(concrete arrays or ShapeDtypeStructs — both trace and lower), and small
+accessors telling the hygiene pass where the exact-edge counters and the
+donation-candidate state live in the output pytree.
+
+Programs are traced/compiled, never *run* — the sources only pin shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+CANONICAL_ROWS = 16
+CANONICAL_COLS = 16
+CANONICAL_SEED = 0
+CANONICAL_Q = 8
+CANONICAL_K = 8
+
+
+@dataclasses.dataclass
+class Program:
+    key: str                  # "engine/sssp", "distributed/bfs@d8", ...
+    backend: str
+    kind: str
+    fn: Callable              # jitted
+    args: tuple               # concrete arrays or ShapeDtypeStructs
+    # out pytree -> {name: ShapeDtypeStruct} of the exact-edge counters
+    counters: Callable = lambda out: {}
+    # out pytree -> [(name, in_subtree, out_subtree)] donation candidates
+    donation: Callable = lambda args, out: []
+
+
+def _megastep_args(engine, key):
+    import jax.numpy as jnp
+    state = engine.init_state(np.arange(CANONICAL_Q, dtype=np.int64))
+    return (state, jnp.int32(0), jnp.int32(CANONICAL_K), key)
+
+
+def _megastep_counters(out):
+    ms = out[1]
+    return {"eq_hi": ms.eq_hi, "eq_lo": ms.eq_lo}
+
+
+def _megastep_donation(args, out):
+    return [("state", args[0], out[0])]
+
+
+def build_programs(only: Optional[str] = None) -> List[Program]:
+    """The full matrix; ``only`` substring-filters the program keys."""
+    import jax
+
+    from repro.core.baselines import make_minplus_round, make_push_round
+    from repro.core.distributed import make_distributed_program
+    from repro.core.engine import DeviceGraph, FPPEngine
+    from repro.core.yielding import NO_YIELD
+    from repro.fpp.backends import KINDS, default_mesh
+    from repro.fpp.planner import default_yield_config
+    from repro.fpp.session import FPPSession
+    from repro.fpp.streaming import StreamingExecutor
+    from repro.graphs.generators import grid2d
+
+    import jax.numpy as jnp
+
+    g = grid2d(CANONICAL_ROWS, CANONICAL_COLS, seed=CANONICAL_SEED)
+    sess = FPPSession(g)
+    sess.plan(num_queries=CANONICAL_Q)
+    mesh = default_mesh()
+    ndev = int(mesh.shape["model"])
+    key = jax.random.PRNGKey(0)
+    programs: List[Program] = []
+
+    for kind in KINDS:
+        bg, _ = sess.prepared(unit_weights=(kind == "bfs"))
+        yc = default_yield_config(kind, bg)
+        mode = "push" if kind == "ppr" else "minplus"
+
+        # -- engine megastep ------------------------------------------------
+        eng = FPPEngine(bg, mode=mode, num_queries=CANONICAL_Q,
+                        yield_config=yc, k_visits=CANONICAL_K)
+        programs.append(Program(
+            key=f"engine/{kind}", backend="engine", kind=kind,
+            fn=eng._megastep, args=_megastep_args(eng, key),
+            counters=_megastep_counters, donation=_megastep_donation))
+
+        # -- streaming pump megastep (harvest_mask=True) --------------------
+        ex = StreamingExecutor(sess, kind, capacity=CANONICAL_Q,
+                               k_visits=CANONICAL_K)
+        programs.append(Program(
+            key=f"streaming/{kind}", backend="streaming", kind=kind,
+            fn=ex._megastep,
+            args=(ex.state, jnp.int32(0), jnp.int32(CANONICAL_K), ex._key),
+            counters=_megastep_counters, donation=_megastep_donation))
+
+        # -- distributed superstep program ----------------------------------
+        fn, args = make_distributed_program(bg, CANONICAL_Q, mesh, kind=kind,
+                                            yield_config=yc)
+        programs.append(Program(
+            key=f"distributed/{kind}@d{ndev}", backend="distributed",
+            kind=kind, fn=fn, args=args,
+            counters=lambda out: {"eq_hi": out[2], "eq_lo": out[3]},
+            donation=lambda args, out: [("vals", args[5], out[0]),
+                                        ("buf", args[6], out[1])]))
+
+        # -- baselines round ------------------------------------------------
+        dg = DeviceGraph.build(bg, NO_YIELD, CANONICAL_Q)
+        P, B = dg.num_parts, dg.block_size
+        blk_src = jnp.asarray(bg.blk_src.astype(np.int32))
+        blk_dst = jnp.asarray(bg.blk_dst.astype(np.int32))
+        f32 = jnp.float32
+        state_sds = jax.ShapeDtypeStruct((P, CANONICAL_Q, B), f32)
+        if kind == "ppr":
+            rfn = make_push_round(dg, blk_src, blk_dst, alpha=0.15, eps=1e-4)
+            rargs = (state_sds, state_sds)
+            counters = lambda out: {"eq": out[3]}
+            donation = lambda args, out: [("p", args[0], out[0]),
+                                          ("r", args[1], out[1])]
+        else:
+            rfn = make_minplus_round(dg, blk_src, blk_dst)
+            rargs = (state_sds,
+                     jax.ShapeDtypeStruct((P, CANONICAL_Q, B), jnp.bool_))
+            counters = lambda out: {"eq": out[2]}
+            donation = lambda args, out: [("dist", args[0], out[0])]
+        programs.append(Program(
+            key=f"baselines/{kind}", backend="baselines", kind=kind,
+            fn=rfn, args=rargs, counters=counters, donation=donation))
+
+    if only:
+        programs = [p for p in programs if only in p.key]
+    return programs

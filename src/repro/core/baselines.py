@@ -50,15 +50,13 @@ def _block_state(dg: DeviceGraph, sources: np.ndarray) -> jax.Array:
     return dist.at[parts, np.arange(Q), locs].set(0.0)
 
 
-def global_minplus(bg: BlockGraph, sources: np.ndarray,
-                   max_rounds: int | None = None) -> BaselineResult:
-    """Synchronous global Bellman-Ford over all blocks (Ligra-like)."""
-    dg = DeviceGraph.build(bg, NO_YIELD, len(sources))
-    P, B, Q = dg.num_parts, dg.block_size, len(sources)
+def make_minplus_round(dg: DeviceGraph, blk_src: jax.Array,
+                       blk_dst: jax.Array):
+    """The jitted synchronous Bellman-Ford round: (dist, frontier) ->
+    (dist', improved, eq).  Module-level so the fppcheck program
+    inventory (analysis/programs.py) traces exactly the program
+    ``global_minplus`` runs."""
     nblk = dg.blocks.shape[0]
-    max_rounds = max_rounds or (bg.n + 1)
-    blk_src = jnp.asarray(bg.blk_src.astype(np.int32))
-    blk_dst = jnp.asarray(bg.blk_dst.astype(np.int32))
 
     @jax.jit
     def round_fn(dist, frontier):
@@ -74,10 +72,24 @@ def global_minplus(bg: BlockGraph, sources: np.ndarray,
                                  jnp.full_like(dist, INF))
         improved = cand < dist
         dist = jnp.minimum(dist, cand)
-        # per-query edges: frontier rows' degree
+        # per-query edges: frontier rows' degree — int32 on device, the
+        # host accumulator widens to float64 across rounds
         eq = jnp.sum(jnp.where(frontier, dg.deg[:, None, :], 0),
-                     axis=(0, 2)).astype(jnp.float32)
+                     axis=(0, 2), dtype=jnp.int32)
         return dist, improved, eq
+
+    return round_fn
+
+
+def global_minplus(bg: BlockGraph, sources: np.ndarray,
+                   max_rounds: int | None = None) -> BaselineResult:
+    """Synchronous global Bellman-Ford over all blocks (Ligra-like)."""
+    dg = DeviceGraph.build(bg, NO_YIELD, len(sources))
+    P, B, Q = dg.num_parts, dg.block_size, len(sources)
+    max_rounds = max_rounds or (bg.n + 1)
+    blk_src = jnp.asarray(bg.blk_src.astype(np.int32))
+    blk_dst = jnp.asarray(bg.blk_dst.astype(np.int32))
+    round_fn = make_minplus_round(dg, blk_src, blk_dst)
 
     dist = _block_state(dg, sources)
     frontier = jnp.isfinite(dist)
@@ -104,14 +116,12 @@ def global_minplus(bg: BlockGraph, sources: np.ndarray,
                           traffic_shared)
 
 
-def global_push(bg: BlockGraph, sources: np.ndarray, alpha: float = 0.15,
-                eps: float = 1e-4, max_rounds: int = 10_000) -> BaselineResult:
-    """Synchronous global Jacobi push PPR (GraphIt-like PageRankDelta)."""
-    dg = DeviceGraph.build(bg, NO_YIELD, len(sources))
-    P, B, Q = dg.num_parts, dg.block_size, len(sources)
+def make_push_round(dg: DeviceGraph, blk_src: jax.Array,
+                    blk_dst: jax.Array, *, alpha: float, eps: float):
+    """The jitted synchronous Jacobi push round: (p, r) ->
+    (p', r', active, eq).  Module-level for the same reason as
+    :func:`make_minplus_round`."""
     nblk = dg.blocks.shape[0]
-    blk_src = jnp.asarray(bg.blk_src.astype(np.int32))
-    blk_dst = jnp.asarray(bg.blk_dst.astype(np.int32))
     degc = jnp.maximum(dg.deg, 1).astype(jnp.float32)    # [P, B]
     has_edges = dg.deg > 0
 
@@ -130,8 +140,20 @@ def global_push(bg: BlockGraph, sources: np.ndarray, alpha: float = 0.15,
         spread = jax.lax.fori_loop(0, nblk, one_block, jnp.zeros_like(r))
         r = r * (1.0 - af) + spread
         eq = jnp.sum(jnp.where(active, dg.deg[:, None, :], 0),
-                     axis=(0, 2)).astype(jnp.float32)
+                     axis=(0, 2), dtype=jnp.int32)
         return p, r, active, eq
+
+    return round_fn
+
+
+def global_push(bg: BlockGraph, sources: np.ndarray, alpha: float = 0.15,
+                eps: float = 1e-4, max_rounds: int = 10_000) -> BaselineResult:
+    """Synchronous global Jacobi push PPR (GraphIt-like PageRankDelta)."""
+    dg = DeviceGraph.build(bg, NO_YIELD, len(sources))
+    P, B, Q = dg.num_parts, dg.block_size, len(sources)
+    blk_src = jnp.asarray(bg.blk_src.astype(np.int32))
+    blk_dst = jnp.asarray(bg.blk_dst.astype(np.int32))
+    round_fn = make_push_round(dg, blk_src, blk_dst, alpha=alpha, eps=eps)
 
     r = _block_state(dg, sources)
     r = jnp.where(jnp.isfinite(r), 1.0, 0.0)

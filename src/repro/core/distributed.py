@@ -261,21 +261,38 @@ def run_distributed_ppr(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
     return DistributedResult(pvals, steps, edges, residual=rvals)
 
 
-def lower_distributed_sssp(bg: BlockGraph, num_queries: int, mesh: Mesh,
-                           yield_config: Optional[YieldConfig] = None,
-                           query_axes=("data",), part_axis: str = "model",
-                           max_supersteps: int = 1000):
-    """AOT lowering entry used by the multi-pod dry-run (no real data)."""
+def make_distributed_program(bg: BlockGraph, num_queries: int, mesh: Mesh, *,
+                             kind: str = "sssp", alpha: float = 0.15,
+                             eps: float = 1e-4,
+                             yield_config: Optional[YieldConfig] = None,
+                             query_axes=("data",), part_axis: str = "model",
+                             max_supersteps: int = 1000):
+    """The jitted mesh program plus matching abstract arguments.
+
+    Public AOT handle: ``(fn, args)`` where ``args`` are
+    ``ShapeDtypeStruct``s, so callers can ``fn.lower(*args)`` without
+    building real shards — the multi-pod dry-run compiles it, and the
+    fppcheck jaxpr/HLO passes (DESIGN.md §7) trace and budget exactly the
+    program ``run_distributed_*`` executes.  ``kind``: "sssp"/"bfs" use
+    the minplus algebra, "ppr" the push algebra.
+    """
     yc = yield_config or YieldConfig()
-    algebra = _visit.minplus_algebra(yc.window())
-    ndev = mesh.shape[part_axis]
+    if kind == "ppr":
+        algebra = _visit.push_algebra(alpha, eps)
+        max_rounds = yc.max_rounds or 64
+    elif kind in ("sssp", "bfs"):
+        algebra = _visit.minplus_algebra(yc.window())
+        max_rounds = yc.max_rounds or bg.block_size
+    else:
+        raise ValueError(f"unknown kind {kind!r}; one of sssp/bfs/ppr")
+    ndev = int(mesh.shape[part_axis])
     B = bg.block_size
     pl = -(-bg.num_parts // ndev)
     p_pad = pl * ndev
     dmax = bg.nbr_blk.shape[1]
     Q = num_queries
     fn = _make_program(algebra, mesh, pl=pl, dmax=dmax, ndev=ndev,
-                       max_rounds=yc.max_rounds or B,
+                       max_rounds=max_rounds,
                        max_supersteps=max_supersteps,
                        query_axes=tuple(query_axes), part_axis=part_axis)
     f32, i32 = jnp.float32, jnp.int32
@@ -290,4 +307,16 @@ def lower_distributed_sssp(bg: BlockGraph, num_queries: int, mesh: Mesh,
         jax.ShapeDtypeStruct((Q,), i32),
         jax.ShapeDtypeStruct((Q,), i32),
     )
+    return fn, args
+
+
+def lower_distributed_sssp(bg: BlockGraph, num_queries: int, mesh: Mesh,
+                           yield_config: Optional[YieldConfig] = None,
+                           query_axes=("data",), part_axis: str = "model",
+                           max_supersteps: int = 1000):
+    """AOT lowering entry used by the multi-pod dry-run (no real data)."""
+    fn, args = make_distributed_program(
+        bg, num_queries, mesh, kind="sssp", yield_config=yield_config,
+        query_axes=query_axes, part_axis=part_axis,
+        max_supersteps=max_supersteps)
     return fn.lower(*args)

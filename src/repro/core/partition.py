@@ -47,7 +47,10 @@ def bfs_cluster_order(g: CSRGraph, block_size: int) -> np.ndarray:
                 if not visited[v]:
                     visited[v] = True
                     dq.append(v)
-    assert nxt == n
+    if nxt != n:
+        raise RuntimeError(
+            f"BFS order covered {nxt} of {n} vertices — graph traversal "
+            f"missed a component; CSR structure is inconsistent")
     return perm
 
 

@@ -56,6 +56,21 @@ class MemoryModel:
         n_pad = -(-n_vertices // block_size) * block_size
         return 3 * n_pad * num_queries * self.dtype_bytes
 
+    def covers(self, footprint_bytes: int, block_size: int,
+               num_queries: int) -> bool:
+        """True if a kernel's *static* VMEM footprint is within budget.
+
+        The fppcheck Pallas contract pass (DESIGN.md §7) computes each
+        wired kernel's per-grid-step footprint from its BlockSpecs and
+        asks this model — the same one that planned the block size —
+        whether that footprint stays inside the working set budgeted for
+        one ``(block_size, num_queries)`` partition visit.  A kernel
+        whose tiles outgrow the model would thrash exactly the cache the
+        planner sized for.
+        """
+        return (footprint_bytes <= self.working_set(block_size, num_queries)
+                and footprint_bytes <= self.vmem_bytes)
+
     def fits(self, block_size: int, num_queries: int,
              n_vertices: Optional[int] = None) -> bool:
         if self.working_set(block_size, num_queries) > self.vmem_bytes:

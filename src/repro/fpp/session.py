@@ -193,3 +193,24 @@ class FPPSession:
         res = self.run("ppr", seeds, alpha=alpha, eps=eps, **run_kw)
         return ncp_profile(self.graph, res.values,
                            max_size=max_size), res
+
+    def random_walks(self, sources: np.ndarray, length: int = 32, *,
+                     seed: int = 0, block_size: Optional[int] = None,
+                     method: Optional[str] = None):
+        """Buffered random walks (core/randomwalk.py), original ids in/out.
+
+        Walkers are FPP queries under the same plan as everything else:
+        the session hands reordered sources to ``core/queries.run_rw`` and
+        maps the final ``positions`` back through the inverse permutation,
+        so callers never see the partition-major id space.  ``steps`` and
+        ``trajectory_hash`` are id-space-independent and pass through.
+        """
+        import dataclasses as _dc
+
+        from repro.core.queries import run_rw
+        sources = np.asarray(sources)
+        bg, perm = self.prepared(block_size=block_size, method=method)
+        res = run_rw(bg, perm[sources], length, seed=seed)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(len(perm))
+        return _dc.replace(res, positions=inv[res.positions])

@@ -1,0 +1,100 @@
+"""Static kernel contracts: what each Pallas kernel promises about VMEM.
+
+Every kernel package's ``ops.py`` declares a :class:`KernelContract` — the
+grid and BlockSpec tiling of a *canonical instantiation* (the shapes the
+engine's planner actually produces), as plain data.  The fppcheck Pallas
+pass (DESIGN.md §7) validates the contracts without tracing anything:
+
+  * tile divisibility — every full dim divides into whole blocks (the
+    property ``minplus._tile`` enforces at runtime, checked statically);
+  * grid coverage — the grid writes each output element exactly once;
+  * memory-model coverage — the per-grid-step footprint (sum of all
+    in/out tiles) stays within ``fpp.planner.MemoryModel.covers`` for the
+    contract's (block_size, num_queries), for *wired* kernels.  The
+    footprint counts BlockSpec tiles, i.e. the HBM<->VMEM transfers the
+    grid schedules — kernel-internal ``fori_loop`` temporaries are the
+    kernel author's budget, not the planner's.
+
+``wired=False`` declares a kernel not yet reachable from any dispatch
+table; the reachability pass cross-checks that claim against the import
+graph and demands a ``note`` naming the plan for it (ROADMAP fusion item,
+an XLA twin, ...) so dead code is always an *explicit* ruling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Optional, Tuple
+
+#: kernel packages that must publish a CONTRACT in their ops module
+KERNEL_PACKAGES = ("minplus", "frontier", "ppr_push", "flash_attention")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """One operand's tiling: the full array and the per-program block.
+
+    ``block`` entries of ``None`` mirror ``pl.BlockSpec`` squeezed dims
+    (the program sees the dim collapsed away); they tile the full dim in
+    steps of 1.
+    """
+    name: str
+    full: Tuple[int, ...]
+    block: Tuple[Optional[int], ...]
+    dtype_bytes: int = 4
+
+    def block_elems(self) -> int:
+        return math.prod((b or 1) for b in self.block)
+
+    def block_bytes(self) -> int:
+        return self.block_elems() * self.dtype_bytes
+
+    def num_blocks(self) -> int:
+        """Distinct blocks tiling the full array (for coverage checks)."""
+        return math.prod(f // (b or 1) for f, b in zip(self.full, self.block))
+
+    def divisible(self) -> bool:
+        return (len(self.full) == len(self.block)
+                and all(f % (b or 1) == 0
+                        for f, b in zip(self.full, self.block)))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """The canonical instantiation of one Pallas kernel, as static data."""
+    name: str                         # kernel package name, e.g. "minplus"
+    module: str                       # pallas module the grid comes from
+    grid: Tuple[int, ...]
+    in_tiles: Tuple[TileSpec, ...]
+    out_tiles: Tuple[TileSpec, ...]
+    wired: bool                       # reachable from a dispatch table?
+    note: str = ""                    # for unwired kernels: the ruling
+    block_size: Optional[int] = None  # B of the canonical graph instantiation
+    num_queries: Optional[int] = None  # Q of same; None for LM kernels
+
+    @property
+    def tiles(self) -> Tuple[TileSpec, ...]:
+        return self.in_tiles + self.out_tiles
+
+    def grid_size(self) -> int:
+        return math.prod(self.grid)
+
+    def footprint_bytes(self) -> int:
+        """Per-grid-step VMEM bytes the BlockSpecs schedule."""
+        return sum(t.block_bytes() for t in self.tiles)
+
+
+def all_contracts() -> Tuple[KernelContract, ...]:
+    """Collect every kernel package's declared contract(s)."""
+    out = []
+    for pkg in KERNEL_PACKAGES:
+        ops = importlib.import_module(f"repro.kernels.{pkg}.ops")
+        contracts = getattr(ops, "CONTRACTS", None)
+        if contracts is None:
+            raise RuntimeError(
+                f"repro.kernels.{pkg}.ops declares no CONTRACTS — every "
+                f"kernel package must publish its static contract "
+                f"(DESIGN.md §7)")
+        out.extend(contracts)
+    return tuple(out)

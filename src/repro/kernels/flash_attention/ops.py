@@ -6,10 +6,30 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.contract import KernelContract, TileSpec
 from repro.kernels.flash_attention.flash import (DEFAULT_KV_CHUNK,
                                                  DEFAULT_Q_TILE,
                                                  flash_attention_pallas_call)
 from repro.kernels.flash_attention.ref import flash_attention_ref
+
+#: static contract (DESIGN.md §7): canonical bh=8, Sq=Skv=256, hd=64
+#: (a reduced-config prefill).  Not reachable from a dispatch table on
+#: CPU — models/attention.attend is the XLA twin serving the reduced LM
+#:  configs; this kernel is the TPU-native path.  No graph (B, Q), so the
+#: planner-model check does not apply; footprint is bounded by VMEM only.
+CONTRACTS = (
+    KernelContract(
+        name="flash_attention",
+        module="repro.kernels.flash_attention.flash",
+        grid=(8, 2),
+        in_tiles=(TileSpec("q", (8, 256, 64), (None, 128, 64)),
+                  TileSpec("k", (8, 256, 64), (None, 256, 64)),
+                  TileSpec("v", (8, 256, 64), (None, 256, 64))),
+        out_tiles=(TileSpec("o", (8, 256, 64), (None, 128, 64)),),
+        wired=False,
+        note="models/attention.attend is the XLA twin; this kernel is "
+             "the TPU-native path for the same blocked online softmax"),
+)
 
 
 def _on_tpu() -> bool:

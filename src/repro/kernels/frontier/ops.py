@@ -4,8 +4,28 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.contract import KernelContract, TileSpec
 from repro.kernels.frontier.frontier import frontier_pallas_call
 from repro.kernels.frontier.ref import frontier_ref
+
+#: static contract (DESIGN.md §7): canonical B=64, Q=64 instantiation.
+#: Not yet reachable from a dispatch table — the visit loop's XLA frontier
+#: math wins on CPU; this kernel is an input to the ROADMAP fused Pallas
+#: visit kernel (frontier + minplus + scatter in one VMEM residency).
+CONTRACTS = (
+    KernelContract(
+        name="frontier", module="repro.kernels.frontier.frontier",
+        grid=(1,),
+        in_tiles=(TileSpec("buf", (64, 64), (64, 64)),
+                  TileSpec("dist", (64, 64), (64, 64))),
+        out_tiles=(TileSpec("d1", (64, 64), (64, 64)),
+                   TileSpec("srcs", (64, 64), (64, 64)),
+                   TileSpec("prio", (64,), (64,))),
+        wired=False,
+        note="awaiting the ROADMAP fused Pallas visit kernel "
+             "(frontier+minplus+scatter in one VMEM residency)",
+        block_size=64, num_queries=64),
+)
 
 
 def _on_tpu() -> bool:

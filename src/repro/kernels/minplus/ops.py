@@ -10,8 +10,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.contract import KernelContract, TileSpec
 from repro.kernels.minplus import minplus as _k
 from repro.kernels.minplus.ref import masked_matmul_ref, minplus_ref
+
+#: static contracts (DESIGN.md §7): canonical instantiation at the
+#: planner's smallest block B=64 with a full Q=64 query tile (qt = min(
+#: DEFAULT_Q_TILE, Q) = 64, grid collapses to one program).  Both kernels
+#: are wired: core/visit and core/baselines dispatch them per visit.
+CONTRACTS = (
+    KernelContract(
+        name="minplus", module="repro.kernels.minplus.minplus",
+        grid=(1,),
+        in_tiles=(TileSpec("d", (64, 64), (64, 64)),
+                  TileSpec("w", (64, 64), (64, 64))),
+        out_tiles=(TileSpec("out", (64, 64), (64, 64)),),
+        wired=True, block_size=64, num_queries=64),
+    KernelContract(
+        name="masked_matmul", module="repro.kernels.minplus.minplus",
+        grid=(1,),
+        in_tiles=(TileSpec("x", (64, 64), (64, 64)),
+                  TileSpec("w", (64, 64), (64, 64))),
+        out_tiles=(TileSpec("out", (64, 64), (64, 64)),),
+        wired=True, block_size=64, num_queries=64),
+)
 
 
 def _on_tpu() -> bool:

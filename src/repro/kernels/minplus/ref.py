@@ -18,7 +18,10 @@ def minplus_ref(d: jax.Array, w: jax.Array, chunk: int = 128) -> jax.Array:
     Chunked over the contraction dim so peak memory is Q*chunk*B, not Q*B*B.
     """
     q, b = d.shape
-    assert w.shape == (b, b), (d.shape, w.shape)
+    if w.shape != (b, b):
+        raise ValueError(
+            f"weight block must be square [{b}, {b}] to match d "
+            f"{(q, b)}; got {w.shape}")
     chunk = min(chunk, b)
     nchunk = -(-b // chunk)
     pad = nchunk * chunk - b

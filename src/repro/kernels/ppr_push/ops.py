@@ -4,8 +4,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.contract import KernelContract, TileSpec
 from repro.kernels.ppr_push.push import ppr_push_pallas_call
 from repro.kernels.ppr_push.ref import ppr_push_ref
+
+#: static contract (DESIGN.md §7): canonical B=64, Q=64 instantiation.
+#: Not yet reachable from a dispatch table — push-mode PPR runs through
+#: the visit algebra today; this fused round is an input to the ROADMAP
+#: fused Pallas visit kernel.
+CONTRACTS = (
+    KernelContract(
+        name="ppr_push", module="repro.kernels.ppr_push.push",
+        grid=(1,),
+        in_tiles=(TileSpec("p", (64, 64), (64, 64)),
+                  TileSpec("r", (64, 64), (64, 64)),
+                  TileSpec("acc", (64, 64), (64, 64)),
+                  TileSpec("w", (64, 64), (64, 64)),
+                  TileSpec("deg", (1, 64), (1, 64))),
+        out_tiles=(TileSpec("p1", (64, 64), (64, 64)),
+                   TileSpec("r1", (64, 64), (64, 64)),
+                   TileSpec("acc1", (64, 64), (64, 64))),
+        wired=False,
+        note="awaiting the ROADMAP fused Pallas visit kernel "
+             "(push-mode PPR runs through the visit algebra today)",
+        block_size=64, num_queries=64),
+)
 
 
 def _on_tpu() -> bool:

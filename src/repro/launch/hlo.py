@@ -99,6 +99,114 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(dict(bytes_by), dict(count_by), ops)
 
 
+# ---------------------------------------------------------------------------
+# op census: the budget substrate of the fppcheck HLO passes (DESIGN.md §7)
+
+#: computation header:  %region_3.34 (arg: f32[]) -> f32[] {   /  ENTRY %main (
+#: the param list may nest parens (tuple-typed params), so match lazily up
+#: to the -> and require the opening brace
+_COMPUTATION_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+#: one instruction:  %name = <shape> opcode(...)   (shape may be a tuple)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-zA-Z][\w\-]*)\(")
+
+#: computations an instruction calls into
+_CALLEE_RE = re.compile(
+    r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class OpCensus:
+    """Opcode counts over one optimized-HLO module.
+
+    ``counts`` covers every computation; ``while_body_counts`` covers only
+    instructions reachable from a ``while`` op's body computation
+    (transitively through fusions/calls) — the per-iteration cost the
+    budget gates care most about, since text counts outside loops are
+    trip-count-blind but an op *inside* the body runs every iteration.
+    """
+    counts: Dict[str, int]
+    while_body_counts: Dict[str, int]
+    num_computations: int
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def while_body_total(self) -> int:
+        return sum(self.while_body_counts.values())
+
+    def as_dict(self):
+        return {"counts": dict(self.counts),
+                "while_body_counts": dict(self.while_body_counts),
+                "total": self.total,
+                "while_body_total": self.while_body_total}
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _COMPUTATION_RE.match(line)
+        if m and raw and not raw[0].isspace():
+            current = m.group(2)
+            comps[current] = []
+        elif current is not None and " = " in line:
+            comps[current].append(line)
+    return comps
+
+
+def _callees(line: str) -> List[str]:
+    out = _CALLEE_RE.findall(line)
+    mb = _BRANCHES_RE.search(line)
+    if mb:
+        out.extend(n.strip().lstrip("%") for n in mb.group(1).split(",")
+                   if n.strip())
+    return out
+
+
+def op_census(hlo_text: str) -> OpCensus:
+    comps = _split_computations(hlo_text)
+    counts: collections.Counter = collections.Counter()
+    body_roots: List[str] = []
+    for lines in comps.values():
+        for line in lines:
+            m = _INSTR_RE.search(line)
+            if not m:
+                continue
+            op = m.group(1)
+            counts[op] += 1
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                if mb:
+                    body_roots.append(mb.group(1))
+    # transitive closure of computations reachable from while bodies
+    reach: set = set()
+    stack = [b for b in body_roots if b in comps]
+    while stack:
+        name = stack.pop()
+        if name in reach:
+            continue
+        reach.add(name)
+        for line in comps.get(name, ()):
+            for callee in _callees(line):
+                if callee in comps and callee not in reach:
+                    stack.append(callee)
+    body_counts: collections.Counter = collections.Counter()
+    for name in reach:
+        for line in comps[name]:
+            m = _INSTR_RE.search(line)
+            if m:
+                body_counts[m.group(1)] += 1
+    return OpCensus(dict(counts), dict(body_counts), len(comps))
+
+
 def cost_summary(compiled) -> dict:
     ca = compiled.cost_analysis()
     m = compiled.memory_analysis()

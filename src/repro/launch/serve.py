@@ -93,7 +93,10 @@ def serve_graph(args):
     out = server.serve_forever(arrivals())
     dt = time.perf_counter() - t0
     ok = [r for r in out.values() if r.status == "ok"]
-    assert len(out) == len(sources), "server failed to answer every request"
+    if len(out) != len(sources):
+        raise RuntimeError(
+            f"server answered {len(out)} of {len(sources)} requests — "
+            f"every submitted request must get a terminal response")
     lat = np.array([r.stats["latency_s"] for r in ok]) * 1e3
     print(f"[serve] graph={args.graph} |V|={g.n} kinds={'/'.join(kinds)} "
           f"tenants={args.tenants}: {len(ok)}/{len(out)} ok in "

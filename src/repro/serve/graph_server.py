@@ -379,7 +379,11 @@ class GraphServer:
                 self._reject(t, now)
                 continue
             qid = ex.submit([t.req.source])[0]
-            assert ex.queue_depth == 0, "admission must be immediate"
+            if ex.queue_depth != 0:
+                raise RuntimeError(
+                    f"admission must be immediate: lane pool reported a "
+                    f"free lane but submit left queue_depth="
+                    f"{ex.queue_depth}")
             pool.qid_rid[qid] = rid
             t.admit_t = now
             t.admit_round = self.rounds
