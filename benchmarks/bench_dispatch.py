@@ -8,6 +8,12 @@ the megastep pays one per K visits.  This module measures both — visits/s
 and host-syncs-per-run for the host loop and for megastep K in {1, 8, 64},
 in both visit-algebra modes — and asserts the O(visits/K) sync bound.
 
+The fused-megastep rows (ISSUE 7) ride the same sweep at K in {8, 64}:
+the visit body runs as one Pallas kernel (``fused=True``, dense for both
+kinds plus the sparse-frontier mode for sssp), doing identical work —
+the visit-count assert pins that — so the row deltas isolate the kernel-
+residency effect from the algorithm.
+
 Besides the usual results/bench/bench_dispatch.json row dump, the rows are
 mirrored into the ``bench_dispatch`` section of the top-level
 ``BENCH_engine.json`` (benchmarks/common.mirror_engine_rows) so the
@@ -79,6 +85,21 @@ def run(quick: bool = True):
             # (priority policy is deterministic on both paths)
             assert res.stats.visits == base_visits, (kind, K)
             rows.append(_row(kind, "megastep", K, res, secs))
+
+        # --- fused visit kernel: same megastep, body in one pallas_call ---
+        variants = [("fused", {})]
+        if mode == "minplus":
+            variants.append(("fused-sparse", {"frontier_mode": "sparse"}))
+        for K in (8, 64):
+            for label, fkw in variants:
+                eng = FPPEngine(bg, k_visits=K, fused=True, **fkw, **kw)
+                eng.run(srcs)                           # warm the jit cache
+                res, secs = timed(eng.run, srcs, repeats=2)
+                assert res.stats.host_syncs <= \
+                    -(-res.stats.visits // K) + 1, (kind, label, K)
+                # bit-parity with the XLA megastep implies identical work
+                assert res.stats.visits == base_visits, (kind, label, K)
+                rows.append(_row(kind, label, K, res, secs))
 
     mirror_engine_rows("bench_dispatch", rows)
     return rows

@@ -79,7 +79,9 @@ def check_contract(c, mem) -> List[Finding]:
                 message=f"tile {t.name}: block {t.block} does not "
                         f"divide full shape {t.full}"))
     for t in c.out_tiles:
-        if t.divisible() and t.num_blocks() != c.grid_size():
+        if not t.divisible():
+            continue
+        if t.update == "once" and t.num_blocks() != c.grid_size():
             findings.append(Finding(
                 pass_name="pallas.contracts", code="grid-coverage",
                 severity="error", location=loc,
@@ -87,6 +89,16 @@ def check_contract(c, mem) -> List[Finding]:
                         f"{c.grid_size()} programs but the tiling "
                         f"yields {t.num_blocks()} blocks — each output "
                         f"element must be written exactly once"))
+        elif t.update == "accum" and t.num_blocks() != 1:
+            findings.append(Finding(
+                pass_name="pallas.contracts", code="grid-coverage",
+                severity="error", location=loc,
+                message=f"output {t.name}: update='accum' promises one "
+                        f"shared block but the tiling yields "
+                        f"{t.num_blocks()} — accumulation across programs "
+                        f"requires a single aliased block"))
+        # "rmw": scalar-prefetch scatter — coverage is the index map's
+        # job (checked dynamically by the parity harness), not the grid's
     fp = c.footprint_bytes()
     if fp > mem.vmem_bytes:
         findings.append(Finding(
@@ -95,23 +107,34 @@ def check_contract(c, mem) -> List[Finding]:
             message=f"per-grid-step footprint {fp} B exceeds the "
                     f"{mem.vmem_bytes} B VMEM budget"))
     elif c.wired and c.block_size is not None:
-        if not mem.covers(fp, c.block_size, c.num_queries):
+        if c.fused_model:
+            # fused-visit contracts: the whole-visit residency budget.
+            # dmax and P are implied by the declared tiling — the grid is
+            # (1 + dmax,) and the state rows are P + 1 (trash row).
+            dmax = c.grid_size() - 1
+            ok = mem.fused_covers(fp, c.block_size, c.num_queries,
+                                  c.num_planes, dmax)
+            ws = mem.fused_working_set(c.block_size, c.num_queries,
+                                       c.num_planes, dmax)
+            model = (f"fused working set {ws} B (B={c.block_size}, "
+                     f"Q={c.num_queries}, np={c.num_planes}, dmax={dmax})")
+        else:
+            ok = mem.covers(fp, c.block_size, c.num_queries)
+            ws = mem.working_set(c.block_size, c.num_queries)
+            model = (f"model working set {ws} B (B={c.block_size}, "
+                     f"Q={c.num_queries})")
+        if not ok:
             findings.append(Finding(
                 pass_name="pallas.contracts", code="model-overflow",
                 severity="error", location=loc,
-                message=f"footprint {fp} B exceeds the planner model's "
-                        f"working set "
-                        f"{mem.working_set(c.block_size, c.num_queries)}"
-                        f" B for (B={c.block_size}, Q={c.num_queries})"
+                message=f"footprint {fp} B exceeds the planner's {model}"
                         f" — the kernel would thrash the cache the "
                         f"planner sized"))
         else:
             findings.append(Finding(
                 pass_name="pallas.contracts", code="footprint",
                 severity="info", location=loc,
-                message=f"footprint {fp} B within model working set "
-                        f"{mem.working_set(c.block_size, c.num_queries)}"
-                        f" B (B={c.block_size}, Q={c.num_queries})"))
+                message=f"footprint {fp} B within {model}"))
     return findings
 
 

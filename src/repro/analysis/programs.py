@@ -6,6 +6,10 @@ full BACKENDS × KINDS matrix of jitted programs:
 
   engine/<kind>        FPPEngine's K-visit megastep (core/visit
                        .make_megastep; the per-dispatch hot program)
+  engine-fused/<kind>  the same megastep with fused=True — every visit
+                       body is one pallas_call (kernels/fused_visit), so
+                       the XLA program shrinks to the scheduling loop
+                       around an opaque kernel; budgeted separately
   streaming/<kind>     StreamingExecutor's pump megastep — same skeleton
                        with the [Q] pending-lane harvest mask folded in
   distributed/<kind>@d{ndev}
@@ -99,6 +103,14 @@ def build_programs(only: Optional[str] = None) -> List[Program]:
         programs.append(Program(
             key=f"engine/{kind}", backend="engine", kind=kind,
             fn=eng._megastep, args=_megastep_args(eng, key),
+            counters=_megastep_counters, donation=_megastep_donation))
+
+        # -- engine fused megastep (visit bodies inside one pallas_call) ----
+        feng = FPPEngine(bg, mode=mode, num_queries=CANONICAL_Q,
+                         yield_config=yc, k_visits=CANONICAL_K, fused=True)
+        programs.append(Program(
+            key=f"engine-fused/{kind}", backend="engine", kind=kind,
+            fn=feng._megastep, args=_megastep_args(feng, key),
             counters=_megastep_counters, donation=_megastep_donation))
 
         # -- streaming pump megastep (harvest_mask=True) --------------------

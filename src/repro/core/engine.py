@@ -147,7 +147,8 @@ class FPPEngine:
                  yield_config: YieldConfig = YieldConfig(),
                  schedule: str = "priority", num_queries: int = 1,
                  alpha: float = 0.15, eps: float = 1e-4, seed: int = 0,
-                 use_pallas: bool = False, k_visits: int = 64):
+                 use_pallas: bool = False, k_visits: int = 64,
+                 fused: bool = False, frontier_mode: str = "dense"):
         if mode not in MODES:
             raise ValueError(f"unknown engine mode {mode!r}; one of {MODES}")
         if k_visits < 1:
@@ -159,23 +160,32 @@ class FPPEngine:
         self.alpha, self.eps = alpha, eps
         self.seed = seed
         self.k_visits = int(k_visits)
+        self.fused = bool(fused)
+        self.frontier_mode = frontier_mode
         self.dg = DeviceGraph.build(bg, yield_config, num_queries)
         self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
         max_rounds = yield_config.max_rounds or (
             bg.block_size if mode == "minplus" else 64)
         self.max_rounds = max_rounds
+        # fused visits run the whole body inside one pallas_call, so the
+        # algebra must keep its XLA relax/spread — a pallas_call nested in
+        # a Pallas kernel body would not lower
         if mode == "minplus":
-            relax = minplus_ops.minplus_pallas if use_pallas else None
+            relax = (minplus_ops.minplus_pallas
+                     if use_pallas and not fused else None)
             self.algebra: VisitAlgebra = minplus_algebra(
                 yield_config.window(), relax=relax)
         else:
-            spread = minplus_ops.masked_matmul_pallas if use_pallas else None
+            spread = (minplus_ops.masked_matmul_pallas
+                      if use_pallas and not fused else None)
             self.algebra = push_algebra(alpha, eps, spread=spread)
         self._visit = _visit.make_visit(self.dg, self.algebra, max_rounds)
-        # the hot loop: K visits per host dispatch, scheduler on device
+        # the hot loop: K visits per host dispatch, scheduler on device;
+        # fused=True swaps the visit body for the fused Pallas kernel
         self._megastep = _visit.make_megastep(
             self.dg, self.algebra, max_rounds, policy=schedule,
-            K=self.k_visits)
+            K=self.k_visits, fused=self.fused,
+            frontier_mode=self.frontier_mode)
         # modeled HBM traffic per visit: diagonal block + touched out-blocks +
         # two state tiles — the cache-miss analogue used by fig10.
         B = bg.block_size

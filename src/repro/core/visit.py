@@ -92,10 +92,17 @@ class VisitAlgebra:
     prio_of: Callable                # (buf_row, planes_row, deg_row)
     #                                  -> (f32 priority, i32 op count)
     finish: Callable                 # (carry, deg_row) -> (planes_row', keep)
+    #: the scalar hyperparameters the operators closed over, as static data —
+    #: the fused Pallas visit kernel rebuilds the inner-round math from these
+    #: (kernel bodies can't call back into the closure-captured XLA ops).
+    params: Tuple[Tuple[str, float], ...] = ()
 
     @property
     def num_planes(self) -> int:
         return len(self.plane_init)
+
+    def param(self, name: str) -> float:
+        return dict(self.params)[name]
 
 
 def minplus_algebra(window: float, relax: Optional[Callable] = None
@@ -144,7 +151,8 @@ def minplus_algebra(window: float, relax: Optional[Callable] = None
         emit_mask=lambda carry: carry.emit,
         contrib=relax,
         scatter=lambda buf, idx, cands: buf.at[idx].min(cands),
-        pending=pending, prio_of=prio_of, finish=finish)
+        pending=pending, prio_of=prio_of, finish=finish,
+        params=(("window", float(window)),))
 
 
 def push_algebra(alpha: float, eps: float,
@@ -198,7 +206,8 @@ def push_algebra(alpha: float, eps: float,
         emit_mask=lambda carry: carry.acc > 0,
         contrib=spread,
         scatter=lambda buf, idx, cands: buf.at[idx].add(cands),
-        pending=pending, prio_of=prio_of, finish=finish)
+        pending=pending, prio_of=prio_of, finish=finish,
+        params=(("alpha", float(alpha)), ("eps", float(eps))))
 
 
 # ---------------------------------------------------------------------------
@@ -394,7 +403,8 @@ class MegastepStats(NamedTuple):
 
 def make_megastep(dg, algebra: VisitAlgebra, max_rounds: int,
                   policy: str = "priority", K: int = 64,
-                  harvest_mask: bool = False) -> Callable:
+                  harvest_mask: bool = False, fused: bool = False,
+                  frontier_mode: str = "dense") -> Callable:
     """Device-resident scheduling loop: up to K visits per host dispatch.
 
     Wraps the visit body in a ``lax.while_loop`` whose scheduler decision is
@@ -418,6 +428,17 @@ def make_megastep(dg, algebra: VisitAlgebra, max_rounds: int,
     streaming executor's harvest rides the same dispatch.  Plain engine
     runs never read it, so they skip the [P, Q, B] reduction (the field is
     an empty placeholder).
+
+    ``fused=True`` swaps the visit body for the fused Pallas kernel
+    (``kernels/fused_visit``): the resident partition's planes, buffer
+    row, and scheduler metadata stay in VMEM for the whole visit, with
+    ``kernels/frontier`` (consolidation) and ``kernels/ppr_push`` (push
+    rounds) as the in-kernel tile ops.  Bit-identical to the XLA body for
+    minplus and deterministic push (see ``kernels/fused_visit/fused.py``
+    for the parity argument; ``tests/test_fused_visit.py`` pins it).
+    ``frontier_mode="sparse"`` (minplus only) makes the in-kernel relax
+    skip all-inf source chunks — identical bits, less work on the thin
+    late-round frontiers (DESIGN.md §2.4).
     """
     from repro.core.scheduler import POLICIES
     if policy not in POLICIES:
@@ -425,8 +446,47 @@ def make_megastep(dg, algebra: VisitAlgebra, max_rounds: int,
                          f"one of {POLICIES}")
     if K < 1:
         raise ValueError(f"megastep chunk size K must be >= 1, got {K}")
-    visit = _make_visit_body(dg, algebra, max_rounds)
     P = dg.num_parts
+    if fused:
+        # the dispatch-table wiring of the three visit kernels (the
+        # pallas.reachability pass keys off these imports)
+        from repro.kernels.frontier.ops import frontier_tile
+        from repro.kernels.fused_visit.fused import (META_OPS, META_PRIO,
+                                                     META_STAMP)
+        from repro.kernels.fused_visit.ops import make_fused_visit
+        from repro.kernels.ppr_push.ops import push_tile
+        fv = make_fused_visit(dg, algebra, max_rounds,
+                              frontier=frontier_tile, push=push_tile,
+                              frontier_mode=frontier_mode)
+
+        # the while_loop carries the kernel's packed layout for the whole
+        # K-visit chunk: pack once on entry, unpack once on exit, and read
+        # the scheduler metadata straight out of the packed planes.
+        def visit(pk, p, counter):
+            pk, rounds, eq = fv.visit(pk, p, counter)
+            return pk, (rounds, eq)
+
+        def enter(state: VisitState):
+            return fv.pack(state.planes, state.buf, state.prio,
+                           state.ops_count, state.stamp)
+
+        def leave(pk) -> VisitState:
+            return VisitState(*fv.unpack(pk))
+
+        def meta(pk):
+            prio = jax.lax.bitcast_convert_type(pk.meta[:P, META_PRIO],
+                                                jnp.float32)
+            return prio, pk.meta[:P, META_STAMP], pk.meta[:P, META_OPS]
+    else:
+        if frontier_mode != "dense":
+            raise ValueError(
+                "frontier_mode is a fused-kernel switch; the XLA megastep "
+                "always runs the dense frontier math")
+        visit = _make_visit_body(dg, algebra, max_rounds)
+        enter = leave = lambda st: st
+
+        def meta(st: VisitState):
+            return st.prio, st.stamp, st.ops_count
 
     @jax.jit
     def megastep(state: VisitState, counter: jax.Array, limit: jax.Array,
@@ -436,7 +496,7 @@ def make_megastep(dg, algebra: VisitAlgebra, max_rounds: int,
         def cond(c):
             st, k = c[0], c[1]
             return jnp.logical_and(k < limit_k,
-                                   jnp.any(jnp.isfinite(st.prio)))
+                                   jnp.any(jnp.isfinite(meta(st)[0])))
 
         def body(c):
             st, k, rounds, hi, lo, counts, order, key = c
@@ -444,7 +504,8 @@ def make_megastep(dg, algebra: VisitAlgebra, max_rounds: int,
                 key, sub = jax.random.split(key)  # policy consumes entropy
             else:
                 sub = key
-            p = device_select(policy, st.prio, st.stamp, st.ops_count, sub)
+            prio, stamp, ops_count = meta(st)
+            p = device_select(policy, prio, stamp, ops_count, sub)
             st, (r, eq) = visit(st, p, counter + k)
             lo = lo + eq
             spill = lo >> EDGE_SHIFT
@@ -455,11 +516,12 @@ def make_megastep(dg, algebra: VisitAlgebra, max_rounds: int,
             return st, k + 1, rounds + r, hi, lo, counts, order, key
 
         Q = state.buf.shape[1]
-        init = (state, jnp.int32(0), jnp.int32(0),
+        init = (enter(state), jnp.int32(0), jnp.int32(0),
                 jnp.zeros(Q, jnp.int32), jnp.zeros(Q, jnp.int32),
                 jnp.zeros(P, jnp.int32), jnp.full((K,), -1, jnp.int32), key)
         st, k, rounds, hi, lo, counts, order, key = jax.lax.while_loop(
             cond, body, init)
+        st = leave(st)
         lane_pending = (jnp.any(
             algebra.pending(st.buf[:P], st.planes, dg.deg), axis=(0, 2))
             if harvest_mask else jnp.zeros((0,), dtype=bool))

@@ -59,12 +59,26 @@ def run_query(backend: str, kind: str, bg: BlockGraph, sources: np.ndarray,
               yield_config: Optional[YieldConfig] = None,
               alpha: float = 0.15, eps: float = 1e-4,
               use_pallas: bool = False, mesh=None,
-              max_visits: Optional[int] = None) -> BackendResult:
-    """Run one query batch (sources in reordered ids) on one backend."""
+              max_visits: Optional[int] = None,
+              fused: bool = False,
+              frontier_mode: str = "dense") -> BackendResult:
+    """Run one query batch (sources in reordered ids) on one backend.
+
+    ``fused=True`` (engine backend only) swaps each visit body for the
+    fused Pallas kernel (kernels/fused_visit): the whole visit — apply,
+    relax rounds, emission, scheduler refresh — runs inside one
+    pallas_call, bit-identical to the XLA megastep for the deterministic
+    algebras.  ``frontier_mode="sparse"`` selects the chunk-skipping
+    relaxation for late sparse frontiers (minplus kinds only).
+    """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     if kind not in KINDS:
         raise ValueError(f"unknown query kind {kind!r}; one of {KINDS}")
+    if fused and backend != "engine":
+        raise ValueError(
+            f"fused=True is an engine-backend flag; backend={backend!r} "
+            f"runs its own visit bodies")
     sources = np.asarray(sources)
 
     if backend == "engine":
@@ -72,7 +86,8 @@ def run_query(backend: str, kind: str, bg: BlockGraph, sources: np.ndarray,
         eng = FPPEngine(bg, mode=mode, num_queries=len(sources),
                         yield_config=yield_config or YieldConfig(),
                         schedule=schedule, alpha=alpha, eps=eps,
-                        use_pallas=use_pallas)
+                        use_pallas=use_pallas, fused=fused,
+                        frontier_mode=frontier_mode)
         res = eng.run(sources, max_visits=max_visits)
         return _normalize(res.values, res.residual, res.edges_processed, {
             "visits": res.stats.visits, "rounds": res.stats.rounds,

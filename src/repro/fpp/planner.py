@@ -28,6 +28,12 @@ from repro.core.yielding import YieldConfig, default_delta
 #: block-size candidates, smallest to largest (TPU lane-friendly powers of 2)
 CANDIDATE_BLOCK_SIZES = (64, 128, 256, 512, 1024, 2048, 4096)
 
+#: neighbor-slot budget assumed when sizing a *fused* plan before the graph
+#: is partitioned (dmax is a property of the partitioning, not the plan);
+#: real dmax beyond this only grows the parking scratch linearly, so the
+#: budget is a planning guard, not a correctness bound
+FUSED_DMAX_BUDGET = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class MemoryModel:
@@ -50,6 +56,29 @@ class MemoryModel:
         return (mult * block_size * block_size * self.dtype_bytes
                 + 2 * num_queries * block_size * self.dtype_bytes)
 
+    def fused_working_set(self, block_size: int, num_queries: int,
+                          num_planes: int, dmax: int) -> int:
+        """VMEM bytes one *fused* visit holds resident (DESIGN.md §2.4).
+
+        The fused kernel keeps every state channel (``num_planes`` value
+        planes + the buffer) for the visited partition in VMEM across the
+        whole visit, both the in and the aliased out block, plus the
+        partition's pre-gathered adjacency row (diagonal + ``dmax``
+        boundary blocks, each [B+1, B] with the nnz row folded in), the
+        degree row, the request vector, and the emission parking scratch
+        (two [Q, B] planes and a degree row per slot, slot 0 being the
+        resident row).  This is deliberately larger than ``working_set``:
+        residency across rounds is the fusion's point, so the planner
+        must budget the whole visit, not one relaxation.
+        """
+        b, q, d = block_size, num_queries, self.dtype_bytes
+        chans = num_planes + 1
+        slots = 1 + dmax
+        state = 2 * chans * q * b * d            # in + aliased out block
+        adj = slots * (b + 1) * b * d            # w_vis row, nnz folded in
+        scratch = slots * (2 * q * b + b) * d    # cand/plane/deg parking
+        return state + adj + scratch + b * d + (1 + q) * d
+
     def state_bytes(self, n_vertices: int, num_queries: int,
                     block_size: int) -> int:
         """HBM-resident state planes (dist + buf + one spare), padded."""
@@ -71,9 +100,23 @@ class MemoryModel:
         return (footprint_bytes <= self.working_set(block_size, num_queries)
                 and footprint_bytes <= self.vmem_bytes)
 
+    def fused_covers(self, footprint_bytes: int, block_size: int,
+                     num_queries: int, num_planes: int, dmax: int) -> bool:
+        """``covers`` for fused-visit kernels (``fused_model=True``
+        contracts): the footprint is judged against the whole-visit
+        residency budget instead of the single-relaxation working set."""
+        return (footprint_bytes <= self.fused_working_set(
+                    block_size, num_queries, num_planes, dmax)
+                and footprint_bytes <= self.vmem_bytes)
+
     def fits(self, block_size: int, num_queries: int,
-             n_vertices: Optional[int] = None) -> bool:
+             n_vertices: Optional[int] = None, *,
+             fused: bool = False, num_planes: int = 2,
+             dmax: int = FUSED_DMAX_BUDGET) -> bool:
         if self.working_set(block_size, num_queries) > self.vmem_bytes:
+            return False
+        if fused and self.fused_working_set(
+                block_size, num_queries, num_planes, dmax) > self.vmem_bytes:
             return False
         if n_vertices is not None and self.state_bytes(
                 n_vertices, num_queries, block_size) > self.hbm_bytes:
@@ -93,8 +136,13 @@ class Plan:
     yield_config: Optional[YieldConfig] = None   # None => per-kind default
     tuned: bool = False
     tuning_rows: tuple = ()
+    fused: bool = False         # visit bodies run the fused Pallas kernel
 
     def working_set_bytes(self) -> int:
+        if self.fused:
+            return self.mem.fused_working_set(
+                self.block_size, self.num_queries, num_planes=2,
+                dmax=FUSED_DMAX_BUDGET)
         return self.mem.working_set(self.block_size, self.num_queries)
 
 
@@ -110,7 +158,7 @@ def default_method(g: CSRGraph) -> str:
 
 def model_block_size(g: CSRGraph, num_queries: int, mem: MemoryModel,
                      candidates: Sequence[int] = CANDIDATE_BLOCK_SIZES,
-                     min_parts: int = 8) -> int:
+                     min_parts: int = 8, fused: bool = False) -> int:
     """Largest candidate whose visit working set fits the memory model.
 
     Also keeps at least ``min_parts`` partitions alive (clamped to what the
@@ -123,7 +171,7 @@ def model_block_size(g: CSRGraph, num_queries: int, mem: MemoryModel,
     for b in candidates:
         if -(-g.n // b) < max(2, min(min_parts, g.n // candidates[0])):
             break
-        if mem.fits(b, num_queries, g.n):
+        if mem.fits(b, num_queries, g.n, fused=fused):
             best = b
     if best is None:
         raise ValueError(
@@ -226,18 +274,19 @@ def make_plan(g: CSRGraph, num_queries: int, *,
               method: Optional[str] = None,
               schedule: str = "priority",
               backend: str = "engine",
-              yield_config: Optional[YieldConfig] = None) -> Plan:
+              yield_config: Optional[YieldConfig] = None,
+              fused: bool = False) -> Plan:
     """Resolve a plan without measuring (the model-only path).
 
     ``FPPSession.plan(tune=True)`` upgrades the block size by measurement.
     """
     mem = mem or MemoryModel()
     if block_size is None:
-        block_size = model_block_size(g, num_queries, mem)
+        block_size = model_block_size(g, num_queries, mem, fused=fused)
     method = method or default_method(g)
     return Plan(block_size=int(block_size), method=method, schedule=schedule,
                 backend=backend, num_queries=int(num_queries), mem=mem,
-                yield_config=yield_config)
+                yield_config=yield_config, fused=bool(fused))
 
 
 def default_yield_config(kind: str, bg) -> YieldConfig:

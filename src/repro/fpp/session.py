@@ -67,6 +67,7 @@ class FPPSession:
              schedule: str = "priority",
              backend: str = "engine",
              yield_config: Optional[YieldConfig] = None,
+             fused: bool = False,
              tune: bool = False,
              tune_sources: Optional[np.ndarray] = None,
              tune_kind: str = "sssp") -> "FPPSession":
@@ -80,7 +81,7 @@ class FPPSession:
         p = _planner.make_plan(self.graph, num_queries, mem=self.mem,
                                block_size=block_size, method=method,
                                schedule=schedule, backend=backend,
-                               yield_config=yield_config)
+                               yield_config=yield_config, fused=fused)
         self._plan = p
         if tune and block_size is None:
             if tune_sources is None:
@@ -129,19 +130,33 @@ class FPPSession:
             method: Optional[str] = None,
             alpha: float = 0.15, eps: float = 1e-4,
             use_pallas: bool = False, mesh=None,
-            max_visits: Optional[int] = None) -> SessionResult:
-        """Execute one query batch.  Sources and values use original ids."""
+            max_visits: Optional[int] = None,
+            fused: Optional[bool] = None,
+            frontier_mode: str = "dense") -> SessionResult:
+        """Execute one query batch.  Sources and values use original ids.
+
+        ``fused`` defaults to the plan's setting (``plan(fused=True)``);
+        pass it explicitly to override per run.  ``frontier_mode="sparse"``
+        selects the fused kernel's chunk-skipping late-frontier relaxation
+        (minplus kinds only).
+        """
         sources = np.asarray(sources)
         p = self.current_plan
         bg, perm = self.prepared(block_size=block_size, method=method,
                                  unit_weights=(kind == "bfs"))
         yc = (yield_config if yield_config is not None else
               (p.yield_config or _planner.default_yield_config(kind, bg)))
+        bk = backend or p.backend
+        if fused is None:
+            # the plan's default applies only where it can: other backends
+            # run their own visit bodies (explicit fused=True still raises)
+            fused = p.fused and bk == "engine"
         out = _backends.run_query(
-            backend or p.backend, kind, bg, perm[sources],
+            bk, kind, bg, perm[sources],
             schedule=schedule or p.schedule, yield_config=yc,
             alpha=alpha, eps=eps, use_pallas=use_pallas, mesh=mesh,
-            max_visits=max_visits)
+            max_visits=max_visits,
+            fused=bool(fused), frontier_mode=frontier_mode)
         values = out.values[:, perm]          # back to original vertex ids
         residual = None if out.residual is None else out.residual[:, perm]
         return SessionResult(kind=kind, backend=backend or p.backend,

@@ -28,7 +28,8 @@ import math
 from typing import Optional, Tuple
 
 #: kernel packages that must publish a CONTRACT in their ops module
-KERNEL_PACKAGES = ("minplus", "frontier", "ppr_push", "flash_attention")
+KERNEL_PACKAGES = ("minplus", "frontier", "ppr_push", "fused_visit",
+                   "flash_attention")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +39,24 @@ class TileSpec:
     ``block`` entries of ``None`` mirror ``pl.BlockSpec`` squeezed dims
     (the program sees the dim collapsed away); they tile the full dim in
     steps of 1.
+
+    ``update`` declares the write discipline of an *output* tile, which
+    decides the coverage rule the contract pass applies:
+
+      ``"once"``  every element written by exactly one program — the grid
+                  must tile the full array (``num_blocks == grid_size``);
+      ``"rmw"``   scalar-prefetch scatter: programs read-modify-write
+                  aliased rows, possibly revisiting or skipping blocks —
+                  coverage is the index map's job, not the tiling's;
+      ``"accum"`` every program accumulates into the same single block
+                  (``num_blocks == 1``, e.g. the fused visit's edge
+                  counters).
     """
     name: str
     full: Tuple[int, ...]
     block: Tuple[Optional[int], ...]
     dtype_bytes: int = 4
+    update: str = "once"
 
     def block_elems(self) -> int:
         return math.prod((b or 1) for b in self.block)
@@ -72,6 +86,11 @@ class KernelContract:
     note: str = ""                    # for unwired kernels: the ruling
     block_size: Optional[int] = None  # B of the canonical graph instantiation
     num_queries: Optional[int] = None  # Q of same; None for LM kernels
+    #: fused-visit kernels hold np state planes + the scatter fan-out in
+    #: VMEM at once; the contract pass then checks the footprint against
+    #: ``MemoryModel.fused_working_set`` instead of ``working_set``.
+    fused_model: bool = False
+    num_planes: Optional[int] = None  # np of the fused instantiation
 
     @property
     def tiles(self) -> Tuple[TileSpec, ...]:

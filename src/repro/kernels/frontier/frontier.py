@@ -17,6 +17,7 @@ Grid over query tiles; outputs (d1, srcs, per-tile prio row).
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,16 +27,35 @@ DEFAULT_Q_TILE = 128
 INF = jnp.inf
 
 
-def _frontier_kernel(buf_ref, dist_ref, o_d_ref, o_src_ref, o_prio_ref, *,
-                     delta: float):
-    buf = buf_ref[...]                  # [QT, B]
-    dist = dist_ref[...]
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def frontier_tile(buf: jax.Array, dist: jax.Array, *, delta: float,
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                             jax.Array, jax.Array]:
+    """Δ-window frontier math over one resident [QT, B] tile, kernel-safe.
+
+    Returns ``(d1, srcs, alpha, pending, active)`` with ``alpha`` kept
+    [QT, 1] so the fused visit kernel (DESIGN.md §2.4) can re-derive the
+    active set each inner round.  Expression-for-expression identical to
+    the XLA ``minplus_algebra.begin`` math in ``core/visit.py`` — the
+    basis for the fused path's bit-parity with the megastep oracle.
+    """
     pending = jnp.isfinite(buf) & (buf <= dist)
     d1 = jnp.minimum(dist, jnp.where(pending, buf, INF))
     alpha = jnp.min(jnp.where(pending, d1, INF), axis=1, keepdims=True)
     active = pending & (d1 <= alpha + delta)
+    srcs = jnp.where(active, d1, INF)
+    return d1, srcs, alpha, pending, active
+
+
+def _frontier_kernel(buf_ref, dist_ref, o_d_ref, o_src_ref, o_prio_ref, *,
+                     delta: float):
+    d1, srcs, alpha, _, _ = frontier_tile(buf_ref[...], dist_ref[...],
+                                          delta=delta)
     o_d_ref[...] = d1
-    o_src_ref[...] = jnp.where(active, d1, INF)
+    o_src_ref[...] = srcs
     o_prio_ref[...] = jnp.min(alpha, axis=1)        # [QT]
 
 
@@ -43,8 +63,13 @@ def _frontier_kernel(buf_ref, dist_ref, o_d_ref, o_src_ref, o_prio_ref, *,
                                              "interpret"))
 def frontier_pallas_call(buf, dist, *, delta: float,
                          q_tile: int = DEFAULT_Q_TILE,
-                         interpret: bool = True):
-    """buf, dist: [Q, B] -> (d1 [Q, B], srcs [Q, B], prio_rows [Q])."""
+                         interpret: Optional[bool] = None):
+    """buf, dist: [Q, B] -> (d1 [Q, B], srcs [Q, B], prio_rows [Q]).
+
+    ``interpret=None`` follows the ``_on_tpu()`` autodetect the ``ops.py``
+    wrapper uses, so a direct call can't silently run interpreted on TPU."""
+    if interpret is None:
+        interpret = not _on_tpu()
     q, b = buf.shape
     qt = min(q_tile, q) if q % min(q_tile, q) == 0 else q
     grid = (q // qt,)

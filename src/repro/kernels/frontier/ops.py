@@ -5,27 +5,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.contract import KernelContract, TileSpec
-from repro.kernels.frontier.frontier import frontier_pallas_call
+from repro.kernels.frontier.frontier import (frontier_pallas_call,
+                                             frontier_tile)
 from repro.kernels.frontier.ref import frontier_ref
 
-#: static contract (DESIGN.md §7): canonical B=64, Q=64 instantiation.
-#: Not yet reachable from a dispatch table — the visit loop's XLA frontier
-#: math wins on CPU; this kernel is an input to the ROADMAP fused Pallas
-#: visit kernel (frontier + minplus + scatter in one VMEM residency).
+#: static contract (DESIGN.md §7): canonical B=64 instantiation, tiled
+#: q_tile=32 so the per-step footprint stays inside the planner model's
+#: working set.  Wired: ``frontier_tile`` is the round-0 consolidation of
+#: the fused visit kernel (core/visit.make_megastep(fused=True)), and the
+#: standalone pallas_call remains callable directly.
 CONTRACTS = (
     KernelContract(
         name="frontier", module="repro.kernels.frontier.frontier",
-        grid=(1,),
-        in_tiles=(TileSpec("buf", (64, 64), (64, 64)),
-                  TileSpec("dist", (64, 64), (64, 64))),
-        out_tiles=(TileSpec("d1", (64, 64), (64, 64)),
-                   TileSpec("srcs", (64, 64), (64, 64)),
-                   TileSpec("prio", (64,), (64,))),
-        wired=False,
-        note="awaiting the ROADMAP fused Pallas visit kernel "
-             "(frontier+minplus+scatter in one VMEM residency)",
+        grid=(2,),
+        in_tiles=(TileSpec("buf", (64, 64), (32, 64)),
+                  TileSpec("dist", (64, 64), (32, 64))),
+        out_tiles=(TileSpec("d1", (64, 64), (32, 64)),
+                   TileSpec("srcs", (64, 64), (32, 64)),
+                   TileSpec("prio", (64,), (32,))),
+        wired=True,
         block_size=64, num_queries=64),
 )
+
+__all__ = ["CONTRACTS", "frontier", "frontier_pallas", "frontier_tile"]
 
 
 def _on_tpu() -> bool:

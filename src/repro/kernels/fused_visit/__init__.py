@@ -1,0 +1,1 @@
+"""Fused Pallas visit kernel: the whole Algorithm-2 visit in one VMEM residency."""

@@ -1,0 +1,475 @@
+"""One Pallas kernel per partition visit: the fused Algorithm-2 body.
+
+The XLA megastep (``core/visit._make_visit_body``) runs one visit as a
+chain of separate ops — frontier consolidation, the relax ``while_loop``,
+a vmapped neighbor ``contrib``, a segment-combine scatter, and the
+metadata refresh — so the resident partition's ``[Q, B]`` state planes
+round-trip HBM between every stage.  This kernel fuses the whole visit
+into a single ``pallas_call`` (the paper's "process the partition to
+completion while LLC-resident", PAPER.md §4, mapped to VMEM —
+DESIGN.md §2.4):
+
+  grid step 0        load the resident partition's packed state block
+                     plus its whole adjacency row (diagonal + boundary
+                     blocks), consolidate via ``frontier_tile``
+                     (minplus) or the ``r += buf`` push begin, relax to
+                     convergence / yield in an in-kernel
+                     ``lax.while_loop`` built on ``minplus_tile`` /
+                     ``push_tile``, then compute ALL neighbor
+                     contributions and the full (visit + emission) edge
+                     count in one batched shot — contributions park in
+                     a VMEM scratch that persists across grid steps.
+  grid steps 1..dmax one neighbor partition each: segment-combine the
+                     parked contribution into the neighbor's buffer
+                     channel (a read-modify-write through the aliased
+                     output) and park the combined row for the refresh.
+  grid step dmax     additionally refreshes every touched partition's
+                     scheduler metadata in one batched scatter into the
+                     (single-block) metadata plane.
+
+The batching is the perf: emission work and the scheduler refresh are
+O(a few ops) *total* instead of O(30 ops) per neighbor step — at bench
+sizes the serialized per-step op dispatch dominates, exactly the
+fork-processing overhead the paper's buffering amortizes.
+
+Scalar-prefetched index vectors (``PrefetchScalarGridSpec``) steer each
+grid step's state BlockSpec at the visited partition's rows, so only
+the rows the visit actually touches move between HBM and VMEM.  Invalid
+neighbor slots (the ``-1`` padding of ``dg.nbr_part``) are pointed at
+the trash row ``P``, mirroring the XLA path's ``mode="drop"`` scatters
+(every invalid slot writes the identical trash values, so duplicate
+trash writes stay deterministic).
+
+State is *packed* for the kernel (:meth:`FusedVisit.pack`):
+
+  * the value planes and the buffer row ride as channels of one
+    ``[P+1, C, Q, B]`` array (one fetch + one write-back per step
+    instead of 2C + 2 of them);
+  * all four metadata lanes pack into one int32 ``[P+1, 4]`` plane
+    (priority and edge budget ride bit-cast — exact, bit-preserving),
+    scheduled as a single block so the last grid step can refresh every
+    touched row at once;
+  * the per-partition adjacency row is pre-gathered as
+    ``[P, 1+dmax, B+1, B]`` with the per-row edge counts folded in as
+    row B of each block (exact in f32 below 2^24) — one resident
+    operand instead of per-step block + nnz fetches;
+  * the visit's round counter rides in lane 0 of the ``[1+Q]``
+    edge-counter output.
+
+``make_megastep`` keeps the packed form across a whole K-visit chunk
+and unpacks once per dispatch.
+
+Bit-parity with the XLA megastep oracle is by construction, not by
+accident (pinned in ``tests/test_fused_visit.py``):
+
+  * the inner-round math is expression-identical (``frontier_tile`` /
+    ``push_tile`` vs ``minplus_algebra.begin`` / ``push_algebra.step``),
+    and the relax contraction is an exact ``min`` (chunking reassociates
+    it losslessly) resp. the very same ``algebra.contrib`` callable,
+    vmapped over neighbor blocks exactly as the XLA emission vmaps it;
+  * the emission mask is recovered from the relax result —
+    ``isfinite(payload)`` ≡ the minplus emit set (an emitted row's value
+    is always finite), ``payload > 0`` ≡ the push ``acc > 0`` mask —
+    and the emission edge count is the XLA expression verbatim;
+  * each neighbor row is written by exactly one grid step
+    (``BlockGraph.from_csr`` guarantees unique, diagonal-free neighbor
+    lists — validated here at build time), so per-row read-modify-write
+    equals the XLA segment-combine scatter, and the batched metadata
+    refresh observes the combined rows just as the XLA gather-refresh
+    runs after the full scatter;
+  * edge counters accumulate in int32, and integer addition is
+    order-independent.
+
+``frontier_mode="sparse"`` (minplus only) switches the relax/emission
+contractions to ``minplus_tile(skip_inactive=True)``: late-round
+frontiers leave most source columns at +inf, and a chunk of +inf sources
+contributes only +inf to an exact min — skipped work, identical bits.
+The skip predicate depends only on the (unbatched) payload, so it
+survives the emission vmap as a genuine branch.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.minplus.minplus import minplus_tile
+
+INF = jnp.inf
+#: mirrors core.visit._BIG_STAMP (kernels/ must not import core/)
+_BIG_STAMP = np.iinfo(np.int32).max - 1
+SPARSE_U_CHUNK = 8
+
+#: lanes of the packed int32 metadata plane
+META_PRIO, META_BUDGET, META_OPS, META_STAMP = range(4)
+
+
+def _f2i(x):
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _i2f(x):
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+class PackedState(NamedTuple):
+    """Kernel-side layout of ``core.visit.VisitState`` (+ static budget).
+
+    ``state[p, k]`` for ``k < num_planes`` is value plane k of partition
+    p; channel ``num_planes`` is the buffered-ops row (row P = trash).
+    ``meta[:, META_*]`` carries (priority, edge budget, op count, stamp)
+    as int32 lanes; priority and budget are bit-cast f32.
+    """
+    state: jax.Array  # [P+1, C, Q, B] f32
+    meta: jax.Array   # [P+1, 4] i32
+
+
+class FusedVisit(NamedTuple):
+    """The fused visit + the pack/unpack bridges to ``VisitState`` arrays.
+
+    ``visit(packed, p, counter) -> (packed', rounds, eq)`` with ``eq`` the
+    exact int32 per-query edge count of this visit.
+    """
+    pack: Callable
+    visit: Callable
+    unpack: Callable
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _validate_neighbor_lists(dg) -> None:
+    """The RMW emission requires each neighbor row be visited exactly once.
+
+    ``BlockGraph.from_csr`` builds ``nbr_part`` from unique off-diagonal
+    (src, dst) partition pairs, so this holds by construction; a graph
+    built some other way must satisfy it too or fall back to the XLA
+    megastep (whose segment-combine scatter tolerates duplicates).
+    """
+    nbr = np.asarray(dg.nbr_part)
+    P = dg.num_parts
+    if (nbr == np.arange(P)[:, None]).any():
+        raise ValueError(
+            "fused visit: nbr_part contains self-edges — the resident "
+            "partition's row is written at grid step 0; use the XLA "
+            "megastep for graphs with diagonal neighbor entries")
+    s = np.sort(nbr, axis=1)
+    if ((s[:, 1:] == s[:, :-1]) & (s[:, 1:] >= 0)).any():
+        raise ValueError(
+            "fused visit: nbr_part contains duplicate neighbor entries — "
+            "the per-row read-modify-write would double-apply them; use "
+            "the XLA megastep (its scatter folds duplicates)")
+
+
+def make_fused_visit(dg, algebra, max_rounds: int, *,
+                     frontier: Callable, push: Callable,
+                     frontier_mode: str = "dense",
+                     u_chunk: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> FusedVisit:
+    """Build the fused visit for one device graph + algebra.
+
+    ``frontier`` / ``push`` are the kernel-safe tile ops
+    (``kernels.frontier.ops.frontier_tile``,
+    ``kernels.ppr_push.ops.push_tile``) — passed in by
+    ``core/visit.make_megastep`` so the dispatch wiring lives in the
+    dispatch table, not in a kernels-internal import.
+
+    ``u_chunk`` chunks the in-kernel minplus contraction; it defaults to
+    one full-width chunk for the dense frontier (fewest ops, same bits)
+    and to ``SPARSE_U_CHUNK`` for the sparse mode (the skip granularity).
+    """
+    name = algebra.name
+    if name not in ("minplus", "push"):
+        raise ValueError(f"fused visit: unknown algebra {name!r}")
+    if frontier_mode not in ("dense", "sparse"):
+        raise ValueError(f"unknown frontier_mode {frontier_mode!r}; "
+                         f"one of ('dense', 'sparse')")
+    if frontier_mode == "sparse" and name != "minplus":
+        raise ValueError(
+            "sparse frontier mode skips all-inf source chunks of an exact "
+            "min — only the minplus algebra has that identity; push-mode "
+            "PPR runs dense")
+    _validate_neighbor_lists(dg)
+    if interpret is None:
+        interpret = not _on_tpu()
+    sparse = frontier_mode == "sparse"
+    np_ = algebra.num_planes
+    C = np_ + 1
+    P = dg.num_parts
+    B = dg.block_size
+    dmax = dg.nbr_part.shape[1]
+    if u_chunk is None:
+        u_chunk = SPARSE_U_CHUNK if sparse else B
+    window = algebra.param("window") if name == "minplus" else 0.0
+    alpha = algebra.param("alpha") if name == "push" else 0.0
+    eps = algebra.param("eps") if name == "push" else 0.0
+    combine = algebra.combine
+    contrib = algebra.contrib
+    prio_of = algebra.prio_of
+    #: the plane the metadata refresh reads (minplus: dist; push: r —
+    #: emission leaves both unchanged, so parking them per step is exact)
+    prio_plane = 0 if name == "minplus" else 1
+    budget_pad = jnp.concatenate(
+        [dg.edge_budget, jnp.zeros((1,), jnp.float32)]).astype(jnp.float32)
+    #: per-partition adjacency row [P, 1+dmax, B+1, B]: slot 0 the diagonal
+    #: block, slots 1.. the boundary blocks (invalid slots zeroed), with the
+    #: per-row edge counts folded in as row B (exact in f32 below 2^24)
+    w_aug = jnp.concatenate(
+        [dg.blocks, dg.row_nnz[:, None, :].astype(jnp.float32)], axis=1)
+    nbr_blk = np.asarray(dg.nbr_blk)
+    slot_valid = np.asarray(dg.nbr_part) >= 0
+    gather = np.concatenate(
+        [np.asarray(dg.diag_blk)[:, None],
+         np.where(slot_valid, nbr_blk, 0)], axis=1)          # [P, 1+dmax]
+    w_vis = (w_aug[jnp.asarray(gather)]
+             * jnp.asarray(np.concatenate(
+                 [np.ones((P, 1)), slot_valid], axis=1),
+                 jnp.float32)[:, :, None, None])
+    deg_pad = jnp.concatenate(
+        [dg.deg, jnp.zeros((1, B), dg.deg.dtype)])
+    sdx = 1 + dmax  # scratch slot 0 = the resident row, 1.. = neighbors
+
+    def kernel(rowb_ref, vld_ref, cnt_ref,
+               state_ref, meta_ref, w_ref, deg_ref,
+               o_state_ref, o_meta_ref, o_req_ref,
+               cand_scr, plane_scr, deg_scr):
+        i = pl.program_id(0)
+        cnt = cnt_ref[0]
+        deg_row = deg_ref[0]
+
+        @pl.when(i == 0)
+        def _visit():
+            w_all = w_ref[0]          # [1+dmax, B+1, B], the adjacency row
+            w_blk = w_all[0, :B]
+            nnz_row = w_all[0, B].astype(jnp.int32)
+            p_own = rowb_ref[0]
+            budget = _i2f(o_meta_ref[p_own, META_BUDGET])
+            buf_row = state_ref[0, np_]
+            eq0 = jnp.zeros((buf_row.shape[0],), jnp.int32)
+            if name == "minplus":
+                d0 = state_ref[0, 0]
+                d1, _, alpha0, pending0, _ = frontier(buf_row, d0,
+                                                      delta=window)
+
+                def act_of(d, pending, eq):
+                    return (pending & (d <= alpha0 + window)
+                            & (eq.astype(jnp.float32) < budget)[:, None])
+
+                def cond(c):
+                    d, pending, emit, eq, rounds = c
+                    return jnp.logical_and(
+                        rounds < max_rounds,
+                        jnp.any(act_of(d, pending, eq)))
+
+                def body(c):
+                    d, pending, emit, eq, rounds = c
+                    act = act_of(d, pending, eq)
+                    eq = eq + jnp.sum(jnp.where(act, nnz_row[None, :], 0),
+                                      axis=1, dtype=jnp.int32)
+                    srcs = jnp.where(act, d, INF)
+                    nd = minplus_tile(srcs, w_blk, u_chunk=u_chunk,
+                                      skip_inactive=sparse)
+                    improved = nd < d
+                    return (jnp.minimum(d, nd),
+                            (pending & ~act) | improved,
+                            emit | act, eq, rounds + 1)
+
+                d, pending, emit, eq, rounds = jax.lax.while_loop(
+                    cond, body, (d1, pending0, jnp.zeros_like(pending0),
+                                 eq0, jnp.int32(0)))
+                payload = jnp.where(emit, d, INF)
+                keep = jnp.where(pending, d, INF)
+                new_planes = (d,)
+                emask = emit
+                identity = INF
+            else:
+                p0, r0 = state_ref[0, 0], state_ref[0, 1]
+                degf = deg_row.astype(jnp.float32)
+                degc = jnp.maximum(degf, 1.0)
+                has_edges = degf > 0
+
+                def act_of(r, eq):
+                    return ((r >= eps * degc) & has_edges
+                            & (eq.astype(jnp.float32) < budget)[:, None])
+
+                def cond(c):
+                    pv, rv, av, eq, rounds = c
+                    return jnp.logical_and(rounds < max_rounds,
+                                           jnp.any(act_of(rv, eq)))
+
+                def body(c):
+                    pv, rv, av, eq, rounds = c
+                    lane = (eq.astype(jnp.float32) < budget)[:, None]
+                    pv, rv, av, act = push(pv, rv, av, w_blk, degf,
+                                           alpha=alpha, eps=eps,
+                                           lane_mask=lane, spread=contrib)
+                    eq = eq + jnp.sum(jnp.where(act, nnz_row[None, :], 0),
+                                      axis=1, dtype=jnp.int32)
+                    return pv, rv, av, eq, rounds + 1
+
+                pv, rv, av, eq, rounds = jax.lax.while_loop(
+                    cond, body, (p0, r0 + buf_row, jnp.zeros_like(r0),
+                                 eq0, jnp.int32(0)))
+                payload = av
+                keep = jnp.zeros_like(rv)
+                new_planes = (pv, rv)
+                emask = av > 0
+                identity = 0.0
+
+            # ---- batched emission prep: every neighbor contribution and
+            # the full emission edge count in one shot (the XLA megastep's
+            # vmapped emission, run inside the kernel) ----
+            if dmax > 0:
+                valid = vld_ref[1:] > 0
+                w_nb = w_all[1:, :B]
+                nnz_sl = jnp.where(valid[:, None],
+                                   w_all[1:, B].astype(jnp.int32), 0)
+                if name == "minplus":
+                    cands = jax.vmap(
+                        lambda w: minplus_tile(payload, w, u_chunk=u_chunk,
+                                               skip_inactive=sparse))(w_nb)
+                else:
+                    cands = jax.vmap(lambda w: contrib(payload, w))(w_nb)
+                cand_scr[0] = keep
+                plane_scr[0] = new_planes[prio_plane]
+                deg_scr[0] = deg_row
+                cand_scr[1:] = jnp.where(valid[:, None, None], cands,
+                                         identity)
+                eq = eq + jnp.sum(
+                    jnp.where(emask[None], nnz_sl[:, None, :], 0),
+                    axis=(0, 2), dtype=jnp.int32)
+            else:
+                # no neighbors: no refresh step rides behind this one, so
+                # the visited row's metadata is updated here
+                own_prio, own_ops = prio_of(keep, new_planes, deg_row)
+                m = o_meta_ref[...]
+                m = m.at[p_own].set(jnp.stack(
+                    [_f2i(own_prio), m[p_own, META_BUDGET], own_ops,
+                     jnp.where(jnp.isfinite(own_prio), cnt,
+                               jnp.int32(_BIG_STAMP))]))
+                o_meta_ref[...] = m
+
+            for k in range(np_):
+                o_state_ref[0, k] = new_planes[k]
+            o_state_ref[0, np_] = keep
+            o_req_ref[...] = jnp.concatenate([rounds[None], eq])
+
+        if dmax > 0:
+            @pl.when(i > 0)
+            def _emit():
+                # RMW through the aliased output: the out-block is fetched
+                # from the *current* output array each grid step, so it
+                # holds the neighbor's visit-start row (never written
+                # earlier — neighbor lists are unique and diagonal-free).
+                new_buf = combine(o_state_ref[0, np_], cand_scr[i])
+                o_state_ref[0, np_] = new_buf
+                cand_scr[i] = new_buf
+                plane_scr[i] = state_ref[0, prio_plane]
+                deg_scr[i] = deg_row
+
+            @pl.when(i == dmax)
+            def _refresh():
+                # batched scheduler refresh over the visited row (slot 0)
+                # and every touched neighbor — runs after the last combine,
+                # so it observes the combined rows exactly like the XLA
+                # gather-after-scatter refresh
+                idx = rowb_ref[...]
+                bufs = cand_scr[...]
+                pln = plane_scr[...]
+                degs = deg_scr[...]
+                if name == "minplus":
+                    newprio, newops = jax.vmap(
+                        lambda b, d, g: prio_of(b, (d,), g))(bufs, pln, degs)
+                else:  # push prio_of only reads the residual plane
+                    newprio, newops = jax.vmap(
+                        lambda b, r, g: prio_of(b, (r, r), g))(bufs, pln,
+                                                               degs)
+                m = o_meta_ref[...]
+                fin = jnp.isfinite(newprio)
+                was_empty = ~jnp.isfinite(_i2f(m[idx, META_PRIO]))
+                # slot 0 (the visited row) stamps unconditionally; neighbor
+                # rows keep their stamp unless the buffer was empty before
+                own = jnp.arange(1 + dmax) == 0
+                stamp = jnp.where(
+                    own, jnp.where(fin, cnt, jnp.int32(_BIG_STAMP)),
+                    jnp.where(was_empty & fin, cnt, m[idx, META_STAMP]))
+                rows = jnp.stack([_f2i(newprio), m[idx, META_BUDGET],
+                                  newops, stamp], axis=1)
+                o_meta_ref[...] = m.at[idx].set(rows)
+
+    def pack(planes: Tuple[jax.Array, ...], buf: jax.Array,
+             prio: jax.Array, ops_count: jax.Array,
+             stamp: jax.Array) -> PackedState:
+        zrow = jnp.zeros((1,) + buf.shape[1:], buf.dtype)
+        state = jnp.stack(
+            [jnp.concatenate([x, zrow]) for x in planes] + [buf], axis=1)
+        meta = jnp.stack(
+            [_f2i(jnp.concatenate(
+                [prio.astype(jnp.float32),
+                 jnp.full((1,), jnp.inf, jnp.float32)])),
+             _f2i(budget_pad),
+             jnp.concatenate([ops_count.astype(jnp.int32),
+                              jnp.zeros((1,), jnp.int32)]),
+             jnp.concatenate([stamp.astype(jnp.int32),
+                              jnp.full((1,), _BIG_STAMP, jnp.int32)])],
+            axis=1)
+        return PackedState(state, meta)
+
+    def unpack(pk: PackedState):
+        planes = tuple(pk.state[:P, k] for k in range(np_))
+        buf = pk.state[:, np_]
+        return (planes, buf, _i2f(pk.meta[:P, META_PRIO]),
+                pk.meta[:P, META_OPS], pk.meta[:P, META_STAMP])
+
+    @jax.jit
+    def visit(pk: PackedState, p, counter):
+        Q = pk.state.shape[2]
+        p = jnp.asarray(p, jnp.int32)
+        parts = dg.nbr_part[p]
+        valid = parts >= 0
+        rowb = jnp.concatenate(
+            [p[None], jnp.where(valid, parts, P)]).astype(jnp.int32)
+        vld = jnp.concatenate(
+            [jnp.ones((1,), jnp.int32), valid.astype(jnp.int32)])
+        cnt = jnp.asarray(counter, jnp.int32)[None]
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(1 + dmax,),
+            in_specs=[
+                pl.BlockSpec((1, C, Q, B),
+                             lambda i, rb, v, c: (rb[i], 0, 0, 0)),
+                pl.BlockSpec((P + 1, 4), lambda i, rb, v, c: (0, 0)),
+                pl.BlockSpec((1, 1 + dmax, B + 1, B),
+                             lambda i, rb, v, c: (rb[0], 0, 0, 0)),
+                pl.BlockSpec((1, B), lambda i, rb, v, c: (rb[i], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, C, Q, B),
+                             lambda i, rb, v, c: (rb[i], 0, 0, 0)),
+                pl.BlockSpec((P + 1, 4), lambda i, rb, v, c: (0, 0)),
+                pl.BlockSpec((1 + Q,), lambda i, rb, v, c: (0,)),
+            ],
+            scratch_shapes=[pltpu.VMEM((sdx, Q, B), jnp.float32),
+                            pltpu.VMEM((sdx, Q, B), jnp.float32),
+                            pltpu.VMEM((sdx, B), deg_pad.dtype)],
+        )
+        state, meta, req = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct(pk.state.shape, pk.state.dtype),
+                jax.ShapeDtypeStruct(pk.meta.shape, pk.meta.dtype),
+                jax.ShapeDtypeStruct((1 + Q,), jnp.int32),
+            ],
+            input_output_aliases={3: 0, 4: 1},
+            interpret=interpret,
+        )(rowb, vld, cnt, pk.state, pk.meta, w_vis, deg_pad)
+        return PackedState(state, meta), req[0], req[1:]
+
+    return FusedVisit(pack=pack, visit=visit, unpack=unpack)

@@ -1,0 +1,74 @@
+"""Dispatch + static contracts for the fused Pallas visit kernel.
+
+``core/visit.make_megastep(fused=True)`` imports :func:`make_fused_visit`
+from here and hands it the ``frontier_tile`` / ``push_tile`` inner ops —
+the dispatch table stays in ``core/``, the VMEM choreography stays here.
+
+Two canonical contracts are declared, one per algebra, on the tier-1
+canonical graph instantiation (grid2d 16x16, B = 64 -> P = 4 partitions,
+dmax = 2 neighbor slots, Q = 64 query lanes).  The kernel runs over the
+*packed* state layout (``fused.PackedState``):
+
+  * ``state`` [P+1, C, Q, B] f32 — the C = num_planes+1 value planes plus
+    the buffered-ops row as channels of one array (row P = trash), so a
+    grid step schedules ONE state fetch + ONE write-back instead of 2C+2
+    of them — the packing is the perf, not a convenience.  The output is
+    aliased onto the input and read-modify-written at scalar-prefetched
+    row indices (``update="rmw"``: the index map owns coverage);
+  * ``meta``  [P+1, 4] int32 — the full scheduler table (priority and
+    edge budget bitcast f32<->i32, op count, stamp) as ONE whole-array
+    block, refreshed in a single batched scatter on the last grid step
+    (``update="accum"``: one block, not a tiling);
+  * ``w``     [P, 1+dmax, B+1, B] — the visited partition's pre-gathered
+    adjacency row: the diagonal block plus its boundary blocks, with the
+    per-row edge counts folded in as row B (exact in f32 below 2^24), so
+    emission needs no second nnz operand;
+  * ``req``   [1+Q] int32 — the visit's round counter (lane 0) and the
+    exact per-query edge counters (``update="accum"``).
+
+The footprint is checked against ``MemoryModel.fused_working_set``
+(``fused_model=True``): a fused visit holds every state channel *and*
+the per-slot emission parking scratch (two [Q, B] planes + a degree row
+per slot, ``pltpu.VMEM``) resident at once, which is the point.  The
+scratch rides on top of the BlockSpec footprint; ``fused_working_set``
+budgets it explicitly.
+"""
+from __future__ import annotations
+
+from repro.kernels.contract import KernelContract, TileSpec
+from repro.kernels.fused_visit.fused import make_fused_visit
+
+_META = dict(full=(5, 4), block=(5, 4))
+
+CONTRACTS = (
+    KernelContract(
+        name="fused_visit_minplus",
+        module="repro.kernels.fused_visit.fused",
+        grid=(3,),                       # 1 resident visit + dmax=2 emits
+        in_tiles=(TileSpec("state", (5, 2, 64, 64), (1, 2, 64, 64)),
+                  TileSpec("meta", **_META),
+                  TileSpec("w", (4, 3, 65, 64), (1, 3, 65, 64)),
+                  TileSpec("deg", (5, 64), (1, 64))),
+        out_tiles=(TileSpec("state1", (5, 2, 64, 64), (1, 2, 64, 64),
+                            update="rmw"),
+                   TileSpec("meta1", **_META, update="accum"),
+                   TileSpec("req", (65,), (65,), update="accum")),
+        wired=True, block_size=64, num_queries=64,
+        fused_model=True, num_planes=1),
+    KernelContract(
+        name="fused_visit_push",
+        module="repro.kernels.fused_visit.fused",
+        grid=(3,),
+        in_tiles=(TileSpec("state", (5, 3, 64, 64), (1, 3, 64, 64)),
+                  TileSpec("meta", **_META),
+                  TileSpec("w", (4, 3, 65, 64), (1, 3, 65, 64)),
+                  TileSpec("deg", (5, 64), (1, 64))),
+        out_tiles=(TileSpec("state1", (5, 3, 64, 64), (1, 3, 64, 64),
+                            update="rmw"),
+                   TileSpec("meta1", **_META, update="accum"),
+                   TileSpec("req", (65,), (65,), update="accum")),
+        wired=True, block_size=64, num_queries=64,
+        fused_model=True, num_planes=2),
+)
+
+__all__ = ["CONTRACTS", "make_fused_visit"]

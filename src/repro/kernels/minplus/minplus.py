@@ -17,6 +17,7 @@ a fori_loop so the [QT, UC, B] broadcast temp stays small.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,20 +27,54 @@ DEFAULT_Q_TILE = 128
 DEFAULT_U_CHUNK = 8
 
 
-def _minplus_kernel(d_ref, w_ref, o_ref, *, u_chunk: int):
-    d = d_ref[...]                      # [QT, B]
-    w = w_ref[...]                      # [B, B]
-    qt, b = d.shape
-    n_chunks = b // u_chunk
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
 
-    def body(i, acc):
-        du = jax.lax.dynamic_slice(d, (0, i * u_chunk), (qt, u_chunk))
-        wu = jax.lax.dynamic_slice(w, (i * u_chunk, 0), (u_chunk, b))
+
+def minplus_tile(d: jax.Array, w: jax.Array, *,
+                 u_chunk: int = DEFAULT_U_CHUNK,
+                 skip_inactive: bool = False) -> jax.Array:
+    """One tropical relaxation over a resident [QT, B] tile, kernel-safe.
+
+    The contraction dim is chunked with a ``fori_loop`` so the broadcast
+    temp stays [QT, UC, B].  Chunking only reassociates an exact ``min``
+    (every candidate is the same f32 sum ``d[q, u] + w[u, v]``), so the
+    result is bitwise equal to ``ref.minplus_ref`` regardless of chunk
+    size — the property the fused-visit parity harness pins.
+
+    ``skip_inactive=True`` guards each chunk with a ``lax.cond`` on
+    ``any(isfinite(du))``: a chunk whose source columns are all +inf can
+    only contribute +inf candidates, so skipping it is bit-identical while
+    a late sparse frontier skips most of the compute (the fused visit's
+    sparse-frontier mode, DESIGN.md §2.4).
+    """
+    qt, b = d.shape
+    uc = u_chunk if b % u_chunk == 0 else b
+    if uc == b and not skip_inactive:
+        # single-chunk fast path: min(+inf, cand) == cand bitwise (weights
+        # are finite or +inf, so no NaN candidates), skip the loop scaffold
+        return jnp.min(d[:, :, None] + w[None, :, :], axis=1)
+
+    def chunk(i, acc):
+        du = jax.lax.dynamic_slice(d, (0, i * uc), (qt, uc))
+        wu = jax.lax.dynamic_slice(w, (i * uc, 0), (uc, b))
         cand = jnp.min(du[:, :, None] + wu[None, :, :], axis=1)
         return jnp.minimum(acc, cand)
 
+    if skip_inactive:
+        def body(i, acc):
+            du = jax.lax.dynamic_slice(d, (0, i * uc), (qt, uc))
+            return jax.lax.cond(jnp.any(jnp.isfinite(du)),
+                                lambda a: chunk(i, a), lambda a: a, acc)
+    else:
+        body = chunk
+
     acc0 = jnp.full((qt, b), jnp.inf, dtype=d.dtype)
-    o_ref[...] = jax.lax.fori_loop(0, n_chunks, body, acc0)
+    return jax.lax.fori_loop(0, b // uc, body, acc0)
+
+
+def _minplus_kernel(d_ref, w_ref, o_ref, *, u_chunk: int):
+    o_ref[...] = minplus_tile(d_ref[...], w_ref[...], u_chunk=u_chunk)
 
 
 def _masked_matmul_kernel(x_ref, w_ref, o_ref):
@@ -70,9 +105,15 @@ def _tile(q: int, q_tile: int) -> int:
 def minplus_pallas_call(d: jax.Array, w: jax.Array,
                         q_tile: int = DEFAULT_Q_TILE,
                         u_chunk: int = DEFAULT_U_CHUNK,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: Optional[bool] = None) -> jax.Array:
     """d: [Q, B], w: [B, B] -> [Q, B].  Q must divide by the chosen tile
-    (ops.py pads); B must divide by u_chunk (blocks are powers of two)."""
+    (ops.py pads); B must divide by u_chunk (blocks are powers of two).
+
+    ``interpret=None`` follows the same ``_on_tpu()`` autodetect the
+    ``ops.py`` wrappers use, so a direct call can't silently run
+    interpreted on TPU."""
+    if interpret is None:
+        interpret = not _on_tpu()
     q, b = d.shape
     qt = _tile(q, q_tile)
     uc = u_chunk if b % u_chunk == 0 else b
@@ -93,7 +134,9 @@ def minplus_pallas_call(d: jax.Array, w: jax.Array,
 @functools.partial(jax.jit, static_argnames=("q_tile", "interpret"))
 def masked_matmul_pallas_call(x: jax.Array, w: jax.Array,
                               q_tile: int = DEFAULT_Q_TILE,
-                              interpret: bool = True) -> jax.Array:
+                              interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
     q, b = x.shape
     qt = _tile(q, q_tile)
     grid = (q // qt,)

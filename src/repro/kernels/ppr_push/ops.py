@@ -5,30 +5,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.contract import KernelContract, TileSpec
-from repro.kernels.ppr_push.push import ppr_push_pallas_call
+from repro.kernels.ppr_push.push import ppr_push_pallas_call, push_tile
 from repro.kernels.ppr_push.ref import ppr_push_ref
 
-#: static contract (DESIGN.md §7): canonical B=64, Q=64 instantiation.
-#: Not yet reachable from a dispatch table — push-mode PPR runs through
-#: the visit algebra today; this fused round is an input to the ROADMAP
-#: fused Pallas visit kernel.
+#: static contract (DESIGN.md §7): canonical B=64 instantiation, tiled
+#: q_tile=16 so the per-step footprint (three state planes in and out
+#: plus the weight block) stays inside the planner model's working set.
+#: Wired: ``push_tile`` is the inner-round body of the fused visit kernel
+#: (core/visit.make_megastep(fused=True)) for push-mode PPR, and the
+#: standalone pallas_call remains callable directly.
 CONTRACTS = (
     KernelContract(
         name="ppr_push", module="repro.kernels.ppr_push.push",
-        grid=(1,),
-        in_tiles=(TileSpec("p", (64, 64), (64, 64)),
-                  TileSpec("r", (64, 64), (64, 64)),
-                  TileSpec("acc", (64, 64), (64, 64)),
+        grid=(4,),
+        in_tiles=(TileSpec("p", (64, 64), (16, 64)),
+                  TileSpec("r", (64, 64), (16, 64)),
+                  TileSpec("acc", (64, 64), (16, 64)),
                   TileSpec("w", (64, 64), (64, 64)),
                   TileSpec("deg", (1, 64), (1, 64))),
-        out_tiles=(TileSpec("p1", (64, 64), (64, 64)),
-                   TileSpec("r1", (64, 64), (64, 64)),
-                   TileSpec("acc1", (64, 64), (64, 64))),
-        wired=False,
-        note="awaiting the ROADMAP fused Pallas visit kernel "
-             "(push-mode PPR runs through the visit algebra today)",
+        out_tiles=(TileSpec("p1", (64, 64), (16, 64)),
+                   TileSpec("r1", (64, 64), (16, 64)),
+                   TileSpec("acc1", (64, 64), (16, 64))),
+        wired=True,
         block_size=64, num_queries=64),
 )
+
+__all__ = ["CONTRACTS", "ppr_push", "ppr_push_pallas", "push_tile"]
 
 
 def _on_tpu() -> bool:

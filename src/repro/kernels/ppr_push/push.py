@@ -15,6 +15,7 @@ spread matmul runs on the MXU via the finite-mask of the weight block.
 from __future__ import annotations
 
 import functools
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,30 +24,67 @@ from jax.experimental import pallas as pl
 DEFAULT_Q_TILE = 128
 
 
-def _push_kernel(p_ref, r_ref, acc_ref, w_ref, deg_ref, o_p, o_r, o_acc,
-                 *, alpha: float, eps: float):
-    p = p_ref[...]                       # [QT, B]
-    r = r_ref[...]
-    acc = acc_ref[...]
-    deg = deg_ref[...]                   # [1, B]
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def push_tile(p: jax.Array, r: jax.Array, acc: jax.Array, w: jax.Array,
+              deg: jax.Array, *, alpha: float, eps: float,
+              lane_mask: Optional[jax.Array] = None,
+              spread: Optional[Callable] = None,
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One PPR push round over a resident tile, kernel-safe.
+
+    ``p, r, acc``: [QT, B]; ``w``: [B, B] (+inf = absent); ``deg``: [B] or
+    broadcastable float row.  Returns ``(p1, r1, acc1, active)``.
+
+    ``lane_mask`` (bool, broadcastable to [QT, B]) further gates the
+    active set — the fused visit kernel (DESIGN.md §2.4) passes the
+    per-query edge-budget lane there.  ``spread`` replaces the default
+    masked matmul (``push @ finite(w)``): the fused path passes the
+    algebra's ``contrib`` so both paths run the identical f32 contraction
+    and stay bit-identical to the XLA megastep.
+    """
+    deg = jnp.asarray(deg, r.dtype)
     degc = jnp.maximum(deg, 1.0)
     has_edges = deg > 0
     active = (r >= eps * degc) & has_edges
+    if lane_mask is not None:
+        active = active & lane_mask
     af = active.astype(r.dtype)
-    o_p[...] = p + alpha * r * af
+    p1 = p + alpha * r * af
     push = (1.0 - alpha) * r * af / degc
-    mask = jnp.isfinite(w_ref[...]).astype(r.dtype)
-    spread = jnp.dot(push, mask, preferred_element_type=r.dtype)
-    o_r[...] = r * (1.0 - af) + spread
-    o_acc[...] = acc + push
+    if spread is None:
+        mask = jnp.isfinite(w).astype(r.dtype)
+        sp = jnp.dot(push, mask, preferred_element_type=r.dtype)
+    else:
+        sp = spread(push, w)
+    r1 = r * (1.0 - af) + sp
+    acc1 = acc + push
+    return p1, r1, acc1, active
+
+
+def _push_kernel(p_ref, r_ref, acc_ref, w_ref, deg_ref, o_p, o_r, o_acc,
+                 *, alpha: float, eps: float):
+    p1, r1, acc1, _ = push_tile(p_ref[...], r_ref[...], acc_ref[...],
+                                w_ref[...], deg_ref[...],
+                                alpha=alpha, eps=eps)
+    o_p[...] = p1
+    o_r[...] = r1
+    o_acc[...] = acc1
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "eps", "q_tile",
                                              "interpret"))
 def ppr_push_pallas_call(p, r, acc, w, deg, *, alpha: float, eps: float,
                          q_tile: int = DEFAULT_Q_TILE,
-                         interpret: bool = True):
-    """p, r, acc: [Q, B]; w: [B, B] (+inf absent); deg: [1, B] float."""
+                         interpret: Optional[bool] = None):
+    """p, r, acc: [Q, B]; w: [B, B] (+inf absent); deg: [1, B] float.
+
+    ``interpret=None`` follows the ``_on_tpu()`` autodetect the ``ops.py``
+    wrapper uses, so a direct call can't silently run interpreted on TPU."""
+    if interpret is None:
+        interpret = not _on_tpu()
     q, b = p.shape
     qt = min(q_tile, q) if q % min(q_tile, q) == 0 else q
     grid = (q // qt,)

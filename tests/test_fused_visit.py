@@ -1,0 +1,237 @@
+"""Kernel-resident visit (ISSUE 7): the differential kernel-parity harness.
+
+What these tests pin (DESIGN.md §2.4):
+  * the fused Pallas visit (``FPPEngine(fused=True)``) == the XLA megastep
+    == the legacy per-visit host loop, bit for bit, for minplus (weighted
+    sssp AND unit-weight bfs) under every deterministic policy — value
+    planes, exact (hi, lo) edge counters, visit order, visit count;
+  * push (ppr): bit-identical to the XLA megastep under the deterministic
+    policies AND under ``random`` (both draw the same on-device threefry
+    stream, so the visit sequences coincide); eps-parity against the
+    sequential ACL push oracle always;
+  * sparse-frontier mode == dense mode bitwise — skipping all-+inf source
+    chunks is a work optimization, never a numeric one;
+  * all of it runs in Pallas interpret mode on CPU, and identically under
+    a forced 8-device host platform (subprocess, as in test_distributed —
+    the flag must be set before jax initializes).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import oracles  # noqa: E402
+from repro.core.engine import FPPEngine  # noqa: E402
+from repro.core.graph import CSRGraph  # noqa: E402
+from repro.core.partition import partition  # noqa: E402
+from repro.core.scheduler import POLICIES  # noqa: E402
+from repro.core.yielding import YieldConfig  # noqa: E402
+from repro.graphs.generators import grid2d, rmat  # noqa: E402
+
+DET_POLICIES = tuple(p for p in POLICIES if p != "random")
+
+
+def _norm(x):
+    return np.nan_to_num(np.asarray(x), posinf=1e30)
+
+
+def _minplus_setup(unit_weights=False):
+    g = grid2d(12, 12, seed=0)
+    if unit_weights:
+        g = CSRGraph(indptr=g.indptr, indices=g.indices,
+                     weights=np.ones_like(g.weights), n=g.n, m=g.m)
+    bg, perm = partition(g, 32, method="bfs")
+    return g, bg, perm, perm[np.array([0, 70, 143])]
+
+
+def _push_setup():
+    g = rmat(8, 6, seed=5)
+    bg, perm = partition(g, 64, method="bfs")
+    deg = g.out_degree()
+    srcs_o = np.random.default_rng(0).choice(np.flatnonzero(deg > 0), 3,
+                                             replace=False)
+    return g, bg, perm, srcs_o, perm[srcs_o]
+
+
+def _assert_identical(a, b, values_only=False):
+    """Full-result bit parity: planes, exact counters, order, stats."""
+    np.testing.assert_array_equal(_norm(a.values), _norm(b.values))
+    if a.residual is not None or b.residual is not None:
+        np.testing.assert_array_equal(np.asarray(a.residual),
+                                      np.asarray(b.residual))
+    if values_only:
+        return
+    np.testing.assert_array_equal(a.edges_processed, b.edges_processed)
+    assert a.visit_order == b.visit_order
+    assert a.stats.visits == b.stats.visits
+    assert a.stats.rounds == b.stats.rounds
+
+
+# --------------------------------------------------------- minplus family
+
+@pytest.mark.parametrize("policy", DET_POLICIES)
+@pytest.mark.parametrize("K", [1, 8, 64])
+def test_fused_minplus_bit_identical(policy, K):
+    """fused == megastep == host loop for weighted SSSP: the exact-min
+    reassociation argument (fused.py docstring) means every path candidate
+    is the same f32 sum, so even the kernel's different round/emission
+    order must reproduce the oracle down to the bit."""
+    _, bg, _, srcs = _minplus_setup()
+    kw = dict(mode="minplus", num_queries=len(srcs), schedule=policy,
+              k_visits=K, yield_config=YieldConfig(delta=2.0))
+    eng = FPPEngine(bg, **kw)
+    fus = FPPEngine(bg, fused=True, **kw)
+    host = eng.run(srcs, host_loop=True, record_order=True)
+    mega = eng.run(srcs, record_order=True)
+    got = fus.run(srcs, record_order=True)
+    _assert_identical(got, mega)
+    _assert_identical(got, host)
+    # the counters are integral and exact (the (hi, lo) int32 carry)
+    assert (got.edges_processed == np.round(got.edges_processed)).all()
+    assert (got.edges_processed > 0).all()
+
+
+def test_fused_bfs_unit_weights_and_oracle():
+    """BFS = minplus over unit weights with the level-synchronous Δ=1
+    window; fused must match the host loop bitwise and the BFS levels
+    exactly (small integers are exact in f32)."""
+    g, bg, perm, srcs = _minplus_setup(unit_weights=True)
+    kw = dict(mode="minplus", num_queries=len(srcs),
+              yield_config=YieldConfig(delta=1.0))
+    eng = FPPEngine(bg, **kw)
+    fus = FPPEngine(bg, fused=True, **kw)
+    host = eng.run(srcs, host_loop=True, record_order=True)
+    got = fus.run(srcs, record_order=True)
+    _assert_identical(got, host)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    for qi, s in enumerate(srcs):
+        want, _ = oracles.dijkstra(g, int(inv[s]))
+        np.testing.assert_array_equal(_norm(got.values[qi][perm]),
+                                      _norm(want))
+
+
+@pytest.mark.parametrize("unit_weights", [False, True])
+def test_fused_sparse_frontier_agrees_with_dense(unit_weights):
+    """Chunk-skipping on all-+inf source chunks is bit-invisible: the
+    sparse mode must replay the dense mode's planes, counters, and visit
+    order exactly (min over a skipped chunk's +inf candidates is the
+    identity)."""
+    _, bg, _, srcs = _minplus_setup(unit_weights=unit_weights)
+    delta = 1.0 if unit_weights else 2.0
+    kw = dict(mode="minplus", num_queries=len(srcs), fused=True,
+              yield_config=YieldConfig(delta=delta))
+    dense = FPPEngine(bg, frontier_mode="dense", **kw)
+    sparse = FPPEngine(bg, frontier_mode="sparse", **kw)
+    _assert_identical(sparse.run(srcs, record_order=True),
+                      dense.run(srcs, record_order=True))
+
+
+def test_fused_sparse_rejects_push():
+    _, bg, _, _, srcs = _push_setup()
+    with pytest.raises(ValueError, match="sparse"):
+        FPPEngine(bg, mode="push", num_queries=len(srcs), fused=True,
+                  frontier_mode="sparse")
+
+
+# ------------------------------------------------------------ push family
+
+@pytest.mark.parametrize("policy", DET_POLICIES)
+def test_fused_push_bit_identical_and_oracle(policy):
+    """Deterministic push: the fused kernel replays the exact visit
+    sequence, so the float arithmetic is the same arithmetic — planes and
+    residuals bit-identical to megastep AND host loop; the sequential ACL
+    oracle bounds the answer within eps as always."""
+    g, bg, perm, srcs_o, srcs = _push_setup()
+    eps = 1e-4
+    deg = np.maximum(g.out_degree(), 1)
+    kw = dict(mode="push", num_queries=len(srcs), schedule=policy, eps=eps)
+    eng = FPPEngine(bg, **kw)
+    fus = FPPEngine(bg, fused=True, **kw)
+    host = eng.run(srcs, host_loop=True, record_order=True)
+    mega = eng.run(srcs, record_order=True)
+    got = fus.run(srcs, record_order=True)
+    _assert_identical(got, mega)
+    _assert_identical(got, host)
+    for qi, s in enumerate(srcs_o):
+        want_p, _, _ = oracles.ppr_push(g, int(s), eps=eps)
+        err = np.abs(got.values[qi][perm] - want_p) / deg
+        assert err.max() <= 2 * eps, (policy, qi)
+        mass = got.values[qi].sum() + got.residual[qi].sum()
+        assert abs(mass - 1.0) < 5e-3, (policy, qi)
+
+
+def test_fused_push_random_policy():
+    """Under ``random`` the fused and XLA megasteps split the same seeded
+    threefry key per visit, so they take identical visit sequences and
+    stay bit-identical to each other; the host loop draws from a different
+    (host-side) stream, so parity there is the eps guarantee, not bits."""
+    g, bg, perm, srcs_o, srcs = _push_setup()
+    eps = 1e-4
+    deg = np.maximum(g.out_degree(), 1)
+    kw = dict(mode="push", num_queries=len(srcs), schedule="random",
+              eps=eps, seed=11)
+    mega = FPPEngine(bg, **kw).run(srcs, record_order=True)
+    got = FPPEngine(bg, fused=True, **kw).run(srcs, record_order=True)
+    _assert_identical(got, mega)
+    for qi, s in enumerate(srcs_o):
+        want_p, _, _ = oracles.ppr_push(g, int(s), eps=eps)
+        err = np.abs(got.values[qi][perm] - want_p) / deg
+        assert err.max() <= 2 * eps, qi
+
+
+# ------------------------------------------------- device-count agnosticism
+
+_DEVCOUNT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.core.engine import FPPEngine
+    from repro.core.partition import partition
+    from repro.core.yielding import YieldConfig
+    from repro.graphs.generators import grid2d, rmat
+
+    def norm(x):
+        return np.nan_to_num(np.asarray(x), posinf=1e30)
+
+    g = grid2d(12, 12, seed=0)
+    bg, perm = partition(g, 32, method="bfs")
+    srcs = perm[np.array([0, 70, 143])]
+    kw = dict(mode="minplus", num_queries=3,
+              yield_config=YieldConfig(delta=2.0))
+    host = FPPEngine(bg, **kw).run(srcs, host_loop=True, record_order=True)
+    got = FPPEngine(bg, fused=True, **kw).run(srcs, record_order=True)
+    np.testing.assert_array_equal(norm(got.values), norm(host.values))
+    np.testing.assert_array_equal(got.edges_processed, host.edges_processed)
+    assert got.visit_order == host.visit_order
+
+    g2 = rmat(8, 6, seed=5)
+    bg2, perm2 = partition(g2, 64, method="bfs")
+    srcs2 = perm2[np.array([0, 10, 33])]
+    kw2 = dict(mode="push", num_queries=3, eps=1e-4)
+    h2 = FPPEngine(bg2, **kw2).run(srcs2, record_order=True)
+    g2r = FPPEngine(bg2, fused=True, **kw2).run(srcs2, record_order=True)
+    np.testing.assert_array_equal(g2r.values, h2.values)
+    np.testing.assert_array_equal(g2r.residual, h2.residual)
+    assert g2r.visit_order == h2.visit_order
+    print("FUSED_8DEV_OK")
+""")
+
+
+@pytest.mark.slow
+def test_fused_parity_under_8_host_devices():
+    """The fused kernel is single-device code; a multi-device host platform
+    (the distributed tests' environment) must not perturb its bits.  The
+    in-process suite above covers device count 1."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _DEVCOUNT_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "FUSED_8DEV_OK" in out.stdout

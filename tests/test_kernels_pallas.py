@@ -73,6 +73,76 @@ def test_ppr_push_sweep(Q, B, alpha, eps):
                                    atol=1e-6)
 
 
+@pytest.mark.parametrize("Q,B", [(3, 16), (8, 32), (64, 64)])
+@pytest.mark.parametrize("u_chunk", [4, 8, 16])
+def test_minplus_tile_skip_inactive_bitwise(Q, B, u_chunk):
+    """The fused visit's in-kernel relax: chunked, chunk-skipping, and
+    single-chunk paths of ``minplus_tile`` all agree with the ref down to
+    the bit — skipping an all-+inf source chunk contributes only +inf
+    candidates, and chunking only reassociates an exact min."""
+    from repro.kernels.minplus.minplus import minplus_tile
+    from repro.kernels.minplus.ref import minplus_ref
+    d = jnp.asarray(np.where(RNG.random((Q, B)) < 0.7, np.inf,
+                             RNG.random((Q, B)) * 9), jnp.float32)
+    w = jnp.asarray(np.where(RNG.random((B, B)) < 0.8, np.inf,
+                             RNG.random((B, B)) * 5), jnp.float32)
+    want = np.nan_to_num(np.asarray(minplus_ref(d, w)), posinf=1e30)
+    for kw in ({"u_chunk": u_chunk}, {"u_chunk": u_chunk,
+                                      "skip_inactive": True},
+               {"u_chunk": B}, {"u_chunk": B, "skip_inactive": True}):
+        got = np.nan_to_num(np.asarray(minplus_tile(d, w, **kw)),
+                            posinf=1e30)
+        np.testing.assert_array_equal(got, want, err_msg=str(kw))
+
+
+@pytest.mark.parametrize("Q,B", [(3, 16), (64, 64)])
+@pytest.mark.parametrize("delta", [0.5, 2.0, np.inf])
+def test_frontier_tile_matches_ref(Q, B, delta):
+    """The fused visit's consolidation op: tile == ref on every output,
+    including the extra [QT, 1] alpha row the kernel path keeps."""
+    from repro.kernels.frontier.frontier import frontier_tile
+    from repro.kernels.frontier.ref import frontier_ref
+    buf = jnp.asarray(np.where(RNG.random((Q, B)) < 0.6, np.inf,
+                               RNG.random((Q, B)) * 9), jnp.float32)
+    dist = jnp.asarray(np.where(RNG.random((Q, B)) < 0.5, np.inf,
+                                RNG.random((Q, B)) * 9), jnp.float32)
+    d1, srcs, alpha, pending, active = frontier_tile(buf, dist,
+                                                     delta=float(delta))
+    assert alpha.shape == (Q, 1)
+    want = frontier_ref(buf, dist, delta=float(delta))
+    for g, w in zip((d1, srcs), want[:2]):
+        np.testing.assert_array_equal(
+            np.nan_to_num(np.asarray(g), posinf=1e30),
+            np.nan_to_num(np.asarray(w), posinf=1e30))
+
+
+@pytest.mark.parametrize("Q,B", [(3, 16), (16, 64)])
+def test_push_tile_lane_mask(Q, B):
+    """The fused visit's per-query edge-budget gate: an all-true lane mask
+    is bitwise the unmasked op; an all-false mask freezes the tile (no
+    pushes, p/r/acc unchanged, empty active set)."""
+    from repro.kernels.ppr_push.push import push_tile
+    p = jnp.asarray(RNG.random((Q, B)), jnp.float32) * 0.05
+    r = jnp.asarray(RNG.random((Q, B)), jnp.float32) * 0.02
+    acc = jnp.asarray(RNG.random((Q, B)), jnp.float32) * 0.01
+    w = jnp.asarray(np.where(RNG.random((B, B)) < 0.85, np.inf,
+                             RNG.random((B, B))), jnp.float32)
+    deg = jnp.asarray(np.isfinite(np.asarray(w)).sum(1), jnp.float32)
+    kw = dict(alpha=0.15, eps=1e-4)
+    base = push_tile(p, r, acc, w, deg, **kw)
+    ones = push_tile(p, r, acc, w, deg,
+                     lane_mask=jnp.ones((Q, B), bool), **kw)
+    for g, want in zip(ones, base):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(want))
+    p1, r1, acc1, active = push_tile(p, r, acc, w, deg,
+                                     lane_mask=jnp.zeros((Q, B), bool),
+                                     **kw)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r))
+    np.testing.assert_array_equal(np.asarray(acc1), np.asarray(acc))
+    assert not np.asarray(active).any()
+
+
 def test_flash_attention_used_as_model_attention():
     """The kernel slots into the model attention contract (same output as
     models/attention.attend)."""

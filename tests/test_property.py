@@ -120,6 +120,121 @@ def test_quantize_bounds(xs):
     assert err <= float(s) * 0.5 + 1e-6
 
 
+_FUSED = {}
+
+
+def _fused_fixture(mode):
+    """One engine + fused-visit closure per mode, shared across examples so
+    hypothesis varies data, not compilations (shapes stay fixed)."""
+    if mode not in _FUSED:
+        from repro.core.engine import FPPEngine
+        from repro.graphs.generators import grid2d, rmat
+        from repro.kernels.frontier.ops import frontier_tile
+        from repro.kernels.fused_visit.ops import make_fused_visit
+        from repro.kernels.ppr_push.ops import push_tile
+        g = grid2d(10, 10, seed=1) if mode == "minplus" else rmat(7, 5,
+                                                                  seed=3)
+        bg, perm = prepare(g, 32)
+        eng = FPPEngine(bg, mode=mode, num_queries=3, fused=True,
+                        k_visits=8, eps=1e-3)
+        fv = make_fused_visit(eng.dg, eng.algebra, eng.max_rounds,
+                              frontier=frontier_tile, push=push_tile)
+        _FUSED[mode] = (g, perm, eng, fv)
+    return _FUSED[mode]
+
+
+@given(st.sampled_from(["minplus", "push"]), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_fused_visit_idempotent_on_converged_partitions(mode, seed):
+    """Visiting a converged (+inf priority) partition never changes the
+    value plane, processes zero edges and zero rounds, and keeps the
+    priority empty; and the visit is a bitwise fixed point from the second
+    application on.  The first application may only *consolidate* inert
+    buffered state — minplus garbage-collects dominated ops (finite buf
+    entries above the current distances), push folds sub-threshold
+    residual mass from the buffer into r (the ACL terminal condition),
+    conserving total mass — neither is visible to the values, the
+    priority, or the edge counters.  Convergence is reached by running the
+    fused engine itself, so the metadata handed to the kernel is exactly
+    what a real run leaves."""
+    g, perm, eng, fv = _fused_fixture(mode)
+    rng = np.random.default_rng(seed)
+    deg = g.out_degree()
+    srcs = rng.choice(np.flatnonzero(deg > 0), 3, replace=False)
+    state = eng.init_state(perm[srcs])
+    key = jax.random.PRNGKey(0)
+    counter, limit = 0, eng.k_visits
+    for _ in range(10_000):
+        state, ms = eng._megastep(state, jnp.int32(counter),
+                                  jnp.int32(limit), key)
+        v = int(ms.visits)
+        counter += v
+        if v < limit:
+            break
+    assert not np.isfinite(np.asarray(state.prio)).any()  # converged
+    pk = fv.pack(state.planes, state.buf, state.prio, state.ops_count,
+                 state.stamp)
+    for p in range(eng.dg.num_parts):
+        pk1, rounds, eq = fv.visit(pk, jnp.int32(p), jnp.int32(counter))
+        assert int(rounds) == 0
+        assert int(np.asarray(eq).sum()) == 0
+        planes1, buf1, prio1, _, _ = fv.unpack(pk1)
+        assert not np.isfinite(np.asarray(prio1)).any()
+        np.testing.assert_array_equal(np.asarray(state.planes[0]),
+                                      np.asarray(planes1[0]))
+        if mode == "minplus":
+            for a, b in zip(state.planes, planes1):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            P = eng.dg.num_parts
+            mass0 = sum(np.asarray(x, np.float64).sum()
+                        for x in (*state.planes, state.buf[:P]))
+            mass1 = sum(np.asarray(x, np.float64).sum()
+                        for x in (*planes1, buf1[:P]))
+            np.testing.assert_allclose(mass1, mass0, atol=1e-5)
+        # second application: a bitwise fixed point of the whole packed
+        # state, scheduler metadata included
+        pk2, rounds2, eq2 = fv.visit(pk1, jnp.int32(p), jnp.int32(counter))
+        assert int(rounds2) == 0
+        assert int(np.asarray(eq2).sum()) == 0
+        np.testing.assert_array_equal(np.asarray(pk1.state),
+                                      np.asarray(pk2.state))
+        np.testing.assert_array_equal(np.asarray(pk1.meta),
+                                      np.asarray(pk2.meta))
+
+
+@given(st.integers(1, 200), st.sampled_from([8, 16, 64]),
+       st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_pad_q_identity_padding_is_invisible(q, q_tile, seed):
+    """``_pad_q`` pads the query axis with the mode identity so the kernel
+    can demand exact tile divisibility; at ANY Q — divisible or not — the
+    padded rows must be inert: min-plus bitwise equal to the unpadded ref
+    (+inf sources contribute only +inf candidates), the masked matmul
+    row-independent (zero rows spread nothing)."""
+    from repro.kernels.minplus.ops import (masked_matmul_pallas,
+                                           minplus_pallas)
+    from repro.kernels.minplus.ref import masked_matmul_ref
+    rng = np.random.default_rng(seed)
+    b = 32
+    d = jnp.asarray(np.where(rng.random((q, b)) < 0.4, np.inf,
+                             rng.uniform(0, 9, (q, b))), jnp.float32)
+    w = jnp.asarray(np.where(rng.random((b, b)) < 0.7, np.inf,
+                             rng.uniform(0, 5, (b, b))), jnp.float32)
+    got = minplus_pallas(d, w, q_tile=q_tile)
+    want = minplus_ref(d, w)
+    assert got.shape == (q, b)
+    np.testing.assert_array_equal(
+        np.nan_to_num(np.asarray(got), posinf=1e30),
+        np.nan_to_num(np.asarray(want), posinf=1e30))
+    x = jnp.asarray(rng.uniform(0, 1, (q, b)), jnp.float32)
+    got_mm = masked_matmul_pallas(x, w, q_tile=q_tile)
+    assert got_mm.shape == (q, b)
+    np.testing.assert_allclose(np.asarray(got_mm),
+                               np.asarray(masked_matmul_ref(x, w)),
+                               atol=1e-6)
+
+
 @given(random_graph())
 @settings(**SETTINGS)
 def test_schedule_policies_agree_on_results(g):
