@@ -24,7 +24,7 @@ MODULES = [
     "fig15_scaling",      # Fig 15: query-count scaling
     "fig16_partition_size",  # Fig 16: partition-size sweep
     "bench_dispatch",     # ISSUE 4: host-loop vs K-visit megastep dispatch
-    "bench_serve",        # ISSUE 5: GraphServer offered-load latency sweep
+    "bench_serve",        # ISSUE 8: open-loop SLO sweep (continuous batching)
 ]
 
 

@@ -4,6 +4,8 @@ The serving twin of examples/quickstart.py (DESIGN.md §4.2): two tenants —
 one hot, one light — submit a mixed stream of SSSP and PPR requests against
 two registered graphs, and the server multiplexes them onto per-(graph,
 kind) lane pools with weighted-fair admission at megastep chunk boundaries.
+Shown both ways: the continuous engine (start / submit / result / shutdown,
+the production path) and the synchronous pump (serve(), the scripting path).
 
     PYTHONPATH=src python examples/serve_graph.py
 """
@@ -38,6 +40,7 @@ def main():
 
     out = server.serve()                 # synchronous pump until drained
     ok = [r for r in out.values() if r.status == "ok"]
+    assert len(ok) == len(out)
     print(f"served {len(ok)}/{len(out)} requests in {server.rounds} rounds")
     for tenant in ("hot", "light"):
         rs = [r for r in ok if r.tenant == tenant]
@@ -52,6 +55,22 @@ def main():
     print(f"  e.g. rid={r.rid} kind={r.kind} graph={r.graph}: "
           f"visits={r.stats['visits']} edges={r.stats['edges']:.0f} "
           f"host_syncs={r.stats['host_syncs']}")
+
+    # --- the continuous engine: same server, background lanes -----------
+    # submit() returns immediately from any thread; result() blocks until
+    # the delivery lane hands the response over.  Twin in-flight requests
+    # coalesce onto one lane (the second response carries coalesced=True).
+    server.start()
+    s = int(road_src[0])
+    r1 = server.submit(GraphRequest(kind="sssp", source=s, graph="road",
+                                    tenant="hot"))
+    r2 = server.submit(GraphRequest(kind="sssp", source=s, graph="road",
+                                    tenant="light"))
+    a, b = server.result(r1, timeout=60), server.result(r2, timeout=60)
+    np.testing.assert_array_equal(a.values, b.values)
+    print(f"continuous: rid={b.rid} coalesced={bool(b.stats.get('coalesced'))}"
+          f" latency={b.stats['latency_s'] * 1e3:.1f} ms")
+    server.shutdown()
 
 
 if __name__ == "__main__":

@@ -12,6 +12,12 @@ full BACKENDS × KINDS matrix of jitted programs:
                        around an opaque kernel; budgeted separately
   streaming/<kind>     StreamingExecutor's pump megastep — same skeleton
                        with the [Q] pending-lane harvest mask folded in
+  engine-serve/<kind>  the serving pools' warm-cache megastep
+                       (serve/compile_cache.py AOT-compiles exactly this
+                       program): pow2-bucketed capacity, visit body picked
+                       per kind from the committed dispatch yardsticks
+                       (planner.auto_fused) — fused for minplus, XLA
+                       megastep for ppr
   distributed/<kind>@d{ndev}
                        the jit(shard_map(while(superstep))) mesh program
                        (core/distributed.make_distributed_program), keyed
@@ -120,6 +126,26 @@ def build_programs(only: Optional[str] = None) -> List[Program]:
             key=f"streaming/{kind}", backend="streaming", kind=kind,
             fn=ex._megastep,
             args=(ex.state, jnp.int32(0), jnp.int32(CANONICAL_K), ex._key),
+            counters=_megastep_counters, donation=_megastep_donation))
+
+        # -- serving warm-cache megastep (GraphServer lane pools) -----------
+        from repro.core import visit as _visit
+        from repro.fpp.planner import auto_fused, pow2_bucket
+        from repro.fpp.streaming import (build_stream_engine,
+                                         build_stream_megastep)
+        cap = pow2_bucket(CANONICAL_Q)
+        seng = build_stream_engine(
+            sess, kind, cap, schedule=sess.current_plan.schedule,
+            k_visits=CANONICAL_K,
+            fused=auto_fused(kind, CANONICAL_K,
+                             dmax=bg.nbr_part.shape[1]))[0]
+        sstate = _visit.init_engine_state(
+            seng.algebra, seng.dg, np.empty(0, dtype=np.int64),
+            num_queries=cap)
+        programs.append(Program(
+            key=f"engine-serve/{kind}", backend="engine", kind=kind,
+            fn=build_stream_megastep(seng, sess.current_plan.schedule),
+            args=(sstate, jnp.int32(0), jnp.int32(CANONICAL_K), key),
             counters=_megastep_counters, donation=_megastep_donation))
 
         # -- distributed superstep program ----------------------------------

@@ -34,6 +34,77 @@ CANDIDATE_BLOCK_SIZES = (64, 128, 256, 512, 1024, 2048, 4096)
 #: budget is a planning guard, not a correctness bound
 FUSED_DMAX_BUDGET = 8
 
+#: committed dispatch yardsticks (visits/s) from BENCH_engine.json's
+#: ``bench_dispatch`` section — the measured trajectory a perf PR commits.
+#: Keyed (kind, dispatch, K).  ``auto_fused`` reads these to pick the visit
+#: body per kind instead of a blanket ``fused=`` flag: the fused Pallas
+#: visit wins for the minplus family (sssp K=64: 6809 vs 6185 visits/s)
+#: but *loses* for push (ppr K=64: 2500 vs 3540 — the in-kernel push
+#: round's lane-mask traffic outweighs the residency win on small
+#: partitions; the regression is recorded in BENCH_engine.json's
+#: ``bench_notes`` and stands until a fused-push PR beats the yardstick).
+DISPATCH_YARDSTICKS = {
+    ("sssp", "megastep", 8): 4597.4,
+    ("sssp", "megastep", 64): 6185.4,
+    ("sssp", "fused", 8): 5407.5,
+    ("sssp", "fused", 64): 6809.3,
+    ("ppr", "megastep", 8): 3088.4,
+    ("ppr", "megastep", 64): 3539.8,
+    ("ppr", "fused", 8): 2535.4,
+    ("ppr", "fused", 64): 2500.3,
+}
+
+#: bfs runs the same minplus megastep/fused kernels as sssp (unit weights
+#: only change the block values), so it shares sssp's yardstick row
+_YARDSTICK_KIND = {"bfs": "sssp"}
+
+
+def auto_fused(kind: str, k_visits: int = 64,
+               dmax: Optional[int] = None) -> bool:
+    """Pick the visit body for ``kind`` from the committed yardsticks.
+
+    True iff the fused Pallas visit measured faster than the XLA megastep
+    at the nearest committed chunk size.  Unknown kinds (no committed rows
+    either way) conservatively stay on the XLA megastep — a new kind must
+    land a ``bench_dispatch`` row before auto-select will fuse it.
+
+    ``dmax`` (the partitioning's neighbor-slot count, ``bg.nbr_part
+    .shape[1]``) guards the auto-select against block graphs denser than
+    the :data:`FUSED_DMAX_BUDGET` the yardsticks were measured under: the
+    fused kernel's pre-gathered ``[P, 1+dmax, B+1, B]`` adjacency and its
+    ``(1+dmax,)`` grid both grow linearly in dmax, so past the budget the
+    residency win inverts and auto-select stays on the XLA megastep.  An
+    *explicit* ``fused=True`` is never overridden — callers who measured
+    their own graph keep their choice.
+    """
+    if dmax is not None and int(dmax) > FUSED_DMAX_BUDGET:
+        return False
+    yk = _YARDSTICK_KIND.get(kind, kind)
+    ks = sorted({k for (kk, _, k) in DISPATCH_YARDSTICKS if kk == yk})
+    if not ks:
+        return False
+    k = min(ks, key=lambda c: abs(c - int(k_visits)))
+    fused = DISPATCH_YARDSTICKS.get((yk, "fused", k))
+    plain = DISPATCH_YARDSTICKS.get((yk, "megastep", k))
+    return fused is not None and plain is not None and fused > plain
+
+
+def pow2_bucket(demand: int, min_capacity: int = 1,
+                max_capacity: int = 1024) -> int:
+    """Snap a lane-count demand to its power-of-two bucket.
+
+    Every capacity the serving layer ever instantiates comes through here
+    (initial pool size, autoscale hints), so the set of compiled megastep
+    shapes stays logarithmic in demand and a resize lands on a warm
+    executable in the serving compile cache (keyed by this bucket) instead
+    of a retrace (DESIGN.md §4.2).
+    """
+    demand = max(int(demand), int(min_capacity), 1)
+    cap = 1
+    while cap < demand:
+        cap *= 2
+    return max(int(min_capacity), min(int(max_capacity), cap))
+
 
 @dataclasses.dataclass(frozen=True)
 class MemoryModel:
@@ -136,7 +207,17 @@ class Plan:
     yield_config: Optional[YieldConfig] = None   # None => per-kind default
     tuned: bool = False
     tuning_rows: tuple = ()
-    fused: bool = False         # visit bodies run the fused Pallas kernel
+    #: visit-body dispatch: False = XLA megastep, True = fused Pallas
+    #: kernel, "auto" = per-kind from the committed yardsticks
+    #: (:func:`auto_fused`) at execution time
+    fused: object = False
+
+    def resolve_fused(self, kind: str, k_visits: int = 64,
+                      dmax: Optional[int] = None) -> bool:
+        """The concrete visit body for one kind under this plan."""
+        if self.fused == "auto":
+            return auto_fused(kind, k_visits, dmax=dmax)
+        return bool(self.fused)
 
     def working_set_bytes(self) -> int:
         if self.fused:
@@ -258,11 +339,8 @@ def autoscale_capacity(queue_depth: int, active: int, *,
     suggestion only when the pool is idle, so resizing never moves an
     in-flight lane.
     """
-    demand = max(int(queue_depth) + int(active), int(min_capacity))
-    cap = 1
-    while cap < demand:
-        cap *= 2
-    cap = max(min_capacity, min(int(max_capacity), cap))
+    cap = pow2_bucket(int(queue_depth) + int(active),
+                      min_capacity=min_capacity, max_capacity=max_capacity)
     while cap > min_capacity and not mem.fits(block_size, cap, n_vertices):
         cap //= 2
     return int(cap)
@@ -275,18 +353,25 @@ def make_plan(g: CSRGraph, num_queries: int, *,
               schedule: str = "priority",
               backend: str = "engine",
               yield_config: Optional[YieldConfig] = None,
-              fused: bool = False) -> Plan:
+              fused: object = False) -> Plan:
     """Resolve a plan without measuring (the model-only path).
 
     ``FPPSession.plan(tune=True)`` upgrades the block size by measurement.
+    ``fused="auto"`` defers the visit-body choice to the per-kind
+    yardsticks (:func:`auto_fused`); block sizing then budgets the fused
+    working set, the conservative bound, since some kinds may fuse.
     """
     mem = mem or MemoryModel()
+    if fused not in (True, False, "auto"):
+        raise ValueError(f"fused must be True, False, or 'auto', "
+                         f"got {fused!r}")
     if block_size is None:
-        block_size = model_block_size(g, num_queries, mem, fused=fused)
+        block_size = model_block_size(g, num_queries, mem, fused=bool(fused))
     method = method or default_method(g)
     return Plan(block_size=int(block_size), method=method, schedule=schedule,
                 backend=backend, num_queries=int(num_queries), mem=mem,
-                yield_config=yield_config, fused=bool(fused))
+                yield_config=yield_config,
+                fused=(fused if fused == "auto" else bool(fused)))
 
 
 def default_yield_config(kind: str, bg) -> YieldConfig:

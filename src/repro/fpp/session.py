@@ -25,6 +25,7 @@ experiment, not a rewrite.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -58,6 +59,9 @@ class FPPSession:
         self._plan: Optional[Plan] = None
         # (block_size, method, unit_weights) -> (BlockGraph, perm)
         self._prepared: Dict[tuple, Tuple[BlockGraph, np.ndarray]] = {}
+        # the serving compile cache warms megasteps on background threads
+        # (serve/compile_cache.py); partitioning must not race itself
+        self._prepare_lock = threading.Lock()
 
     # ------------------------------------------------------------------ plan
 
@@ -67,7 +71,7 @@ class FPPSession:
              schedule: str = "priority",
              backend: str = "engine",
              yield_config: Optional[YieldConfig] = None,
-             fused: bool = False,
+             fused: object = False,
              tune: bool = False,
              tune_sources: Optional[np.ndarray] = None,
              tune_kind: str = "sssp") -> "FPPSession":
@@ -77,6 +81,11 @@ class FPPSession:
         sample (``tune_sources``, default: first min(8, Q) vertices with
         out-edges) and keeps the one with the least modeled traffic —
         feeding benchmarks/fig16's sweep back into the system.
+
+        ``fused`` may be True/False (a blanket visit-body choice) or
+        ``"auto"``: each run/stream then picks the body per kind from the
+        committed dispatch yardsticks (``planner.auto_fused`` — fused
+        wins for minplus kinds, the XLA megastep for ppr).
         """
         p = _planner.make_plan(self.graph, num_queries, mem=self.mem,
                                block_size=block_size, method=method,
@@ -112,13 +121,15 @@ class FPPSession:
         bs = int(block_size or p.block_size)
         meth = method or p.method
         key = (bs, meth, bool(unit_weights))
-        if key not in self._prepared:
-            g = self.graph
-            if unit_weights:
-                g = CSRGraph(indptr=g.indptr, indices=g.indices,
-                             weights=np.ones_like(g.weights), n=g.n, m=g.m)
-            self._prepared[key] = partition(g, bs, method=meth)
-        return self._prepared[key]
+        with self._prepare_lock:
+            if key not in self._prepared:
+                g = self.graph
+                if unit_weights:
+                    g = CSRGraph(indptr=g.indptr, indices=g.indices,
+                                 weights=np.ones_like(g.weights),
+                                 n=g.n, m=g.m)
+                self._prepared[key] = partition(g, bs, method=meth)
+            return self._prepared[key]
 
     # ------------------------------------------------------------------ run
 
@@ -149,8 +160,12 @@ class FPPSession:
         bk = backend or p.backend
         if fused is None:
             # the plan's default applies only where it can: other backends
-            # run their own visit bodies (explicit fused=True still raises)
-            fused = p.fused and bk == "engine"
+            # run their own visit bodies (explicit fused=True still raises).
+            # plan(fused="auto") resolves per kind from committed yardsticks,
+            # falling back to the XLA megastep when this partitioning is
+            # denser than the fused-kernel dmax budget.
+            fused = bk == "engine" and p.resolve_fused(
+                kind, dmax=bg.nbr_part.shape[1])
         out = _backends.run_query(
             bk, kind, bg, perm[sources],
             schedule=schedule or p.schedule, yield_config=yc,
@@ -170,7 +185,8 @@ class FPPSession:
                schedule: Optional[str] = None,
                yield_config: Optional[YieldConfig] = None,
                alpha: float = 0.15, eps: float = 1e-4,
-               harvest_every: int = 1, k_visits: int = 64):
+               harvest_every: int = 1, k_visits: int = 64,
+               fused: Optional[bool] = None, megastep=None):
         """A streaming executor: submit query batches as they arrive
         (fpp/streaming.py); answers match the one-shot run of the union.
         ``k_visits`` sets the device-resident chunk size — admission and
@@ -178,13 +194,21 @@ class FPPSession:
         the lane-recycling latency knob: lower K = fresher harvests, more
         host syncs.  ``harvest_every`` only affects the legacy per-visit
         ``step()`` cadence; the default ``pump()``/``run()`` path harvests
-        once per chunk regardless."""
+        once per chunk regardless.  ``fused`` defaults to the plan's
+        (per-kind under ``fused="auto"``); ``megastep`` injects a warm
+        pre-compiled executable (serve/compile_cache.py) so the executor
+        never traces."""
         from repro.fpp.streaming import StreamingExecutor
+        if fused is None:
+            bg, _ = self.prepared(unit_weights=(kind == "bfs"))
+            fused = self.current_plan.resolve_fused(
+                kind, k_visits, dmax=bg.nbr_part.shape[1])
         return StreamingExecutor(
             self, kind=kind, capacity=capacity,
             schedule=schedule or self.current_plan.schedule,
             yield_config=yield_config, alpha=alpha, eps=eps,
-            harvest_every=harvest_every, k_visits=k_visits)
+            harvest_every=harvest_every, k_visits=k_visits,
+            fused=bool(fused), megastep=megastep)
 
     # --------------------------------------------------- paper applications
 

@@ -29,12 +29,20 @@ admission only adds ops a one-shot run would have started with, a staggered
 streaming run returns bit-identical minplus answers to the one-shot run of
 the union, and push answers within the same eps tolerance the one-shot run
 carries — ``tests/test_fpp_session.py`` pins both properties.
+
+Concurrency contract (DESIGN.md §4.2): every public entry point —
+``submit``, ``step``, ``pump``, ``run``, ``take_finished`` — serializes on
+one executor lock, and ``pump`` holds it for whole chunks, so a submitter
+on another thread joins exactly at a megastep chunk boundary: the only
+point where touching lanes was ever legal.  Thread safety here is the same
+rule as exactness, enforced by a lock instead of an argument.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +53,45 @@ from repro.core.engine import FPPEngine
 from repro.core.scheduler import PartitionScheduler
 from repro.core.yielding import YieldConfig
 from repro.fpp import planner as _planner
+
+
+def build_stream_engine(session, kind: str, capacity: int, *,
+                        schedule: str = "priority",
+                        yield_config: Optional[YieldConfig] = None,
+                        alpha: float = 0.15, eps: float = 1e-4,
+                        seed: int = 0, k_visits: int = 64,
+                        fused: bool = False) -> Tuple[FPPEngine, object,
+                                                      np.ndarray]:
+    """(engine, bg, perm) exactly as a :class:`StreamingExecutor` for the
+    same arguments would build them.
+
+    The one construction path shared by the executor and the serving
+    compile cache (``serve/compile_cache.py``): a megastep AOT-compiled
+    from this engine is interchangeable with the one the executor would
+    trace itself, because the graph staging (``session.prepared`` is
+    cached per session), yield config, algebra parameters, and chunk size
+    all come from here.
+    """
+    bg, perm = session.prepared(unit_weights=(kind == "bfs"))
+    yc = (yield_config if yield_config is not None
+          else _planner.default_yield_config(kind, bg))
+    mode = "push" if kind == "ppr" else "minplus"
+    engine = FPPEngine(bg, mode=mode, num_queries=int(capacity),
+                       yield_config=yc, schedule=schedule, alpha=alpha,
+                       eps=eps, seed=seed, k_visits=int(k_visits),
+                       fused=bool(fused))
+    return engine, bg, perm
+
+
+def build_stream_megastep(engine: FPPEngine, schedule: str) -> Callable:
+    """The streaming pump's megastep for ``engine``: the §2.3 K-visit chunk
+    with the [Q] pending-lane harvest mask folded into the same dispatch
+    (``harvest_mask=True``) — what ``pump`` runs and what the serving
+    compile cache warms ahead of time."""
+    return _visit.make_megastep(
+        engine.dg, engine.algebra, engine.max_rounds, policy=schedule,
+        K=engine.k_visits, harvest_mask=True, fused=engine.fused,
+        frontier_mode=engine.frontier_mode)
 
 
 @dataclasses.dataclass
@@ -94,7 +141,8 @@ class StreamingExecutor:
                  yield_config: Optional[YieldConfig] = None,
                  alpha: float = 0.15, eps: float = 1e-4,
                  harvest_every: int = 1, seed: int = 0,
-                 k_visits: int = 64):
+                 k_visits: int = 64, fused: bool = False,
+                 megastep: Optional[Callable] = None):
         if kind not in ("sssp", "bfs", "ppr"):
             raise ValueError(f"streaming supports sssp/bfs/ppr, got {kind!r}")
         self.session = session
@@ -104,21 +152,25 @@ class StreamingExecutor:
         # per-visit cadence of the legacy step() path; pump()/run() harvest
         # at megastep chunk boundaries instead
         self.harvest_every = max(1, int(harvest_every))
-        bg, perm = session.prepared(unit_weights=(kind == "bfs"))
+        self.engine, bg, perm = build_stream_engine(
+            session, kind, self.capacity, schedule=schedule,
+            yield_config=yield_config, alpha=alpha, eps=eps, seed=seed,
+            k_visits=k_visits, fused=fused)
         self.bg, self.perm = bg, perm
-        yc = (yield_config if yield_config is not None
-              else _planner.default_yield_config(kind, bg))
-        self.mode = "push" if kind == "ppr" else "minplus"
-        self.engine = FPPEngine(bg, mode=self.mode, num_queries=self.capacity,
-                                yield_config=yc, schedule=schedule,
-                                alpha=alpha, eps=eps, seed=seed,
-                                k_visits=k_visits)
+        self.mode = self.engine.mode
         # own megastep with the pending-lane harvest mask folded into the
-        # chunk dispatch (the engine's plain-run megastep skips it)
-        self._megastep = _visit.make_megastep(
-            self.engine.dg, self.engine.algebra, self.engine.max_rounds,
-            policy=schedule, K=self.engine.k_visits, harvest_mask=True)
+        # chunk dispatch (the engine's plain-run megastep skips it).  A
+        # caller may inject a warm one (``megastep=``) — the serving
+        # compile cache hands over programs AOT-compiled from an engine
+        # built by the same :func:`build_stream_engine` call, so the
+        # injected executable is the one this executor would have traced.
+        self._megastep = (megastep if megastep is not None
+                          else build_stream_megastep(self.engine, schedule))
         self.algebra = self.engine.algebra
+        # serializes submit/step/pump/run/take_finished: a foreign-thread
+        # submit lands exactly at a chunk boundary (module docstring)
+        self._lock = threading.RLock()
+        self.finished: collections.deque = collections.deque()
         self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
         self.state = self._empty_state()
         self.queue: collections.deque = collections.deque()
@@ -147,17 +199,22 @@ class StreamingExecutor:
             np.empty(0, dtype=np.int64), num_queries=self.capacity)
 
     def submit(self, sources: np.ndarray) -> List[int]:
-        """Enqueue a batch of sources (original ids); returns their qids."""
-        qids = []
-        for s in np.atleast_1d(np.asarray(sources)):
-            q = StreamQuery(qid=self._next_qid, source=int(s),
-                            submitted_visit=self.visits)
-            self._next_qid += 1
-            self.queries[q.qid] = q
-            self.queue.append(q.qid)
-            qids.append(q.qid)
-        self._admit()
-        return qids
+        """Enqueue a batch of sources (original ids); returns their qids.
+
+        Thread-safe: a submit racing a ``pump`` on another thread blocks
+        until the in-flight chunk's boundary and is admitted there —
+        indistinguishable from having arrived between chunks."""
+        with self._lock:
+            qids = []
+            for s in np.atleast_1d(np.asarray(sources)):
+                q = StreamQuery(qid=self._next_qid, source=int(s),
+                                submitted_visit=self.visits)
+                self._next_qid += 1
+                self.queries[q.qid] = q
+                self.queue.append(q.qid)
+                qids.append(q.qid)
+            self._admit()
+            return qids
 
     # ----------------------------------------------------------- admission
 
@@ -228,6 +285,7 @@ class StreamingExecutor:
             q.finished_visit = self.visits
             q.finished_sync = self.host_syncs
             q.done = True
+            self.finished.append(q.qid)
             self.slot_qid[slot] = -1
             self._reset_slot(int(slot))
             self.free_slots.append(int(slot))
@@ -244,9 +302,24 @@ class StreamingExecutor:
         signal; GraphServer's autoscaling hint reads it)."""
         return len(self.queue)
 
+    def take_finished(self) -> List[int]:
+        """Drain the finished-lane queue: qids harvested since the last
+        call, in completion order.  The serving delivery lane consumes
+        this instead of scanning every query for ``done`` — and because
+        ``_harvest`` appends under the executor lock while delivery pops
+        here, a response is never observed half-built."""
+        with self._lock:
+            out = list(self.finished)
+            self.finished.clear()
+            return out
+
     def step(self) -> bool:
         """One partition visit (admit before, harvest after).  False when
         nothing is pending anywhere — all admitted queries are complete."""
+        with self._lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> bool:
         self._admit()
         st = self.state
         p = self.scheduler.select(np.asarray(st.prio), np.asarray(st.stamp),
@@ -295,18 +368,24 @@ class StreamingExecutor:
     def pump(self, max_visits: int) -> int:
         """Advance up to ``max_visits`` visits in device-resident chunks of
         up to the engine's K; admission and harvest happen at the chunk
-        boundaries (DESIGN.md §3.3).  Returns visits executed."""
+        boundaries (DESIGN.md §3.3).  Returns visits executed.
+
+        Holds the executor lock per chunk, releasing it at every chunk
+        boundary — exactly where foreign-thread submits are allowed in."""
         start = self.visits
-        while self.visits - start < max_visits:
-            self._admit()
-            did = self._chunk(max_visits - (self.visits - start))
-            self._harvest(pending=self._lane_pending)
-            if did == 0 or self._drained:
-                # nothing left pending on device: every unfinished lane was
-                # just harvested; refill from the queue or stop
-                self._admit()
-                if not self.queue and self.active == 0:
+        while True:
+            with self._lock:
+                if self.visits - start >= max_visits:
                     break
+                self._admit()
+                did = self._chunk(max_visits - (self.visits - start))
+                self._harvest(pending=self._lane_pending)
+                if did == 0 or self._drained:
+                    # nothing left pending on device: every unfinished lane
+                    # was just harvested; refill from the queue or stop
+                    self._admit()
+                    if not self.queue and self.active == 0:
+                        break
         return self.visits - start
 
     def run(self, max_visits: Optional[int] = None) -> Dict[int, np.ndarray]:
@@ -315,8 +394,10 @@ class StreamingExecutor:
         while (self.queue or self.active) and self.visits < budget:
             if self.pump(budget - self.visits) == 0:
                 break
-        self._harvest()
-        return {qid: q.values for qid, q in self.queries.items() if q.done}
+        with self._lock:
+            self._harvest()
+            return {qid: q.values
+                    for qid, q in self.queries.items() if q.done}
 
     def result(self, qid: int) -> StreamQuery:
         return self.queries[qid]

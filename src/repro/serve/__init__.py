@@ -2,8 +2,11 @@
 
 ``engine.py`` (§4.1) serves LM decode via continuous batching;
 ``graph_server.py`` (§4.2) serves mixed graph-query traffic over the
-streaming megastep.
+streaming megastep with concurrent admission/pump/delivery lanes
+(``dispatch.py``) and warm AOT-compiled megasteps (``compile_cache.py``).
 """
+from repro.serve.compile_cache import (MegastepCache,  # noqa
+                                       build_warm_megastep, warm_key)
 from repro.serve.engine import (ContinuousBatcher, Request,  # noqa
                                 make_decode_step, make_prefill_step)
 from repro.serve.graph_server import (GraphRequest, GraphResponse,  # noqa

@@ -1,0 +1,159 @@
+"""Warm megastep executables for the serving layer (DESIGN.md §4.2).
+
+A streaming executor's first ``pump`` pays a trace+compile stall — tens of
+milliseconds to seconds, charged to whichever request had the bad luck of
+arriving first after a pool was created or resized.  Under continuous
+batching that stall happens *inside* the dispatch lane, so every tenant on
+the pool eats it.  This module moves the cost to ``register_graph`` time:
+
+  * :func:`build_warm_megastep` AOT-lowers and compiles the exact megastep
+    a :class:`~repro.fpp.streaming.StreamingExecutor` would trace for the
+    same parameters — both sides build through
+    ``streaming.build_stream_engine`` / ``build_stream_megastep``, so the
+    compiled program and the would-have-been-traced one are the same
+    function of the same baked graph constants (``session.prepared`` caches
+    one (BlockGraph, perm) per session, so "same graph" is by identity,
+    not just by value).
+  * :class:`MegastepCache` memoizes those executables under
+    ``(graph, kind, K, capacity, fused, alpha, eps, schedule, seed)``.
+    Capacity is the raw lane count — the *server* snaps demand to pow2
+    buckets (``planner.pow2_bucket``) before asking, which keeps the set
+    of distinct compiled shapes logarithmic in load instead of linear.
+
+Anything that changes the traced program must be in the key: ``alpha`` and
+``eps`` are closed over by the push algebra, ``schedule`` picks the
+on-device partition policy, ``fused`` swaps the visit body, ``seed`` feeds
+the engine's scheduler PRNG stream.  Yield-config overrides are deliberately
+*not* keyed — the serving layer never passes one (it always uses the
+planner default for (kind, graph)); hand-rolled executors with custom yield
+configs should not share this cache.
+
+Compiles run outside the cache lock (a per-key in-flight event dedupes
+concurrent warmers), so a background warm thread never blocks admission.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import visit as _visit
+from repro.fpp.streaming import build_stream_engine, build_stream_megastep
+
+
+def warm_key(graph: str, kind: str, k_visits: int, capacity: int, *,
+             fused: bool = False, alpha: float = 0.15, eps: float = 1e-4,
+             schedule: str = "priority", seed: int = 0) -> tuple:
+    """The cache key: every parameter that reaches the traced program."""
+    return (str(graph), str(kind), int(k_visits), int(capacity),
+            bool(fused), float(alpha), float(eps), str(schedule), int(seed))
+
+
+def build_warm_megastep(session, kind: str, capacity: int, *,
+                        schedule: str = "priority", alpha: float = 0.15,
+                        eps: float = 1e-4, seed: int = 0, k_visits: int = 64,
+                        fused: bool = False):
+    """AOT-compile the streaming megastep for these parameters.
+
+    Returns a ``jax.stages.Compiled`` with the executor's calling
+    convention ``(state, counter, limit, key) -> (state', MegastepStats)``
+    — ``counter``/``limit`` are int32 scalars and ``key`` a PRNG key, so
+    one executable serves every chunk the executor will ever dispatch at
+    this capacity.  Injected via ``StreamingExecutor(megastep=...)`` (or
+    ``session.stream(megastep=...)``) it replaces the trace the executor
+    would otherwise do on first pump.
+    """
+    engine, _bg, _perm = build_stream_engine(
+        session, kind, int(capacity), schedule=schedule, alpha=alpha,
+        eps=eps, seed=seed, k_visits=k_visits, fused=fused)
+    megastep = build_stream_megastep(engine, schedule)
+    state = _visit.init_engine_state(
+        engine.algebra, engine.dg, np.empty(0, dtype=np.int64),
+        num_queries=int(capacity))
+    return megastep.lower(state, jnp.int32(0),
+                          jnp.int32(engine.k_visits),
+                          jax.random.PRNGKey(seed)).compile()
+
+
+class MegastepCache:
+    """Thread-safe memo of warm megastep executables.
+
+    ``get_or_build`` is the one entry point: a hit returns instantly, a
+    miss compiles *outside* the lock while other keys stay available, and
+    two threads racing on the same key compile once (the loser waits on
+    the winner's in-flight event).  ``warm_async`` wraps it in a daemon
+    thread for register-time prewarming that must not block registration.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache: Dict[tuple, object] = {}
+        self._inflight: Dict[tuple, threading.Event] = {}
+        self.hits = 0
+        self.misses = 0
+        self.compile_s = 0.0      # total seconds spent compiling
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._cache)
+
+    def peek(self, key: tuple):
+        """The executable if already warm, else None; never compiles."""
+        with self._lock:
+            return self._cache.get(key)
+
+    def get_or_build(self, session, graph: str, kind: str, capacity: int, *,
+                     k_visits: int = 64, fused: bool = False,
+                     alpha: float = 0.15, eps: float = 1e-4,
+                     schedule: str = "priority", seed: int = 0):
+        key = warm_key(graph, kind, k_visits, capacity, fused=fused,
+                       alpha=alpha, eps=eps, schedule=schedule, seed=seed)
+        while True:
+            with self._lock:
+                if key in self._cache:
+                    self.hits += 1
+                    return self._cache[key]
+                ev = self._inflight.get(key)
+                if ev is None:
+                    self._inflight[key] = ev = threading.Event()
+                    self.misses += 1
+                    building = True
+                else:
+                    building = False
+            if not building:
+                ev.wait()
+                continue        # winner published (or failed) — re-check
+            try:
+                t0 = time.perf_counter()
+                exe = build_warm_megastep(
+                    session, kind, capacity, schedule=schedule, alpha=alpha,
+                    eps=eps, seed=seed, k_visits=k_visits, fused=fused)
+                with self._lock:
+                    self._cache[key] = exe
+                    self.compile_s += time.perf_counter() - t0
+                return exe
+            finally:
+                with self._lock:
+                    self._inflight.pop(key, None)
+                ev.set()
+
+    def warm_async(self, session, graph: str, kind: str, capacity: int,
+                   **params) -> threading.Thread:
+        """Fire-and-forget prewarm; returns the (daemon) thread for tests
+        that want to join it."""
+        t = threading.Thread(
+            target=self.get_or_build,
+            args=(session, graph, kind, capacity), kwargs=params,
+            name=f"warm-{graph}-{kind}-{capacity}", daemon=True)
+        t.start()
+        return t
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"size": len(self._cache), "hits": self.hits,
+                    "misses": self.misses,
+                    "compile_s": round(self.compile_s, 3)}

@@ -9,46 +9,61 @@ multiple registered graphs, multiple tenants — and multiplexes them onto
 per-(graph, kind) **lane pools**, each backed by the §3.3
 ``StreamingExecutor`` and its device-resident K-visit megastep (§2.3).
 
-The serving loop is three decisions per round, all at megastep chunk
-boundaries (the only points where admission/harvest are ever legal — the
-§3.3 exactness argument):
+Serving runs as a **continuous-batching engine** with three concurrent
+lanes (serve/dispatch.py):
 
-  * **pool arbitration** — which (graph, kind) pool gets the next chunk of
-    device time.  Pools are "partitions" to ``core/scheduler.py``'s
-    :class:`PartitionScheduler`: pool priority is the best queued/in-flight
-    request priority, so request priorities plumb through the same policy
-    set that orders partition visits (``prefer_older_ties`` breaks
-    equal-priority ties toward the longest-waiting pool);
-  * **weighted-fair admission** — which tenant's request takes each free
-    lane.  Start-time fair queueing over per-tenant virtual time: admitting
-    one request from tenant *t* advances ``vtime[t] += 1/weight[t]``, and
-    the lowest vtime among tenants with queued work goes first, so a hot
-    tenant at 10x offered load gets at most its weight share of lanes and
-    cannot starve the rest (tests/test_graph_server.py pins the bound);
-  * **deadline policing** — a request whose deadline lapses while queued is
-    *rejected* with an explicit ``status="expired"`` response (never
-    silently dropped); it is checked before every admission.
+  * **admission** — ``submit`` is thread-safe and never touches a device:
+    it books the request, coalesces duplicates, and parks it in the
+    pool's backlog (weighted-fair start-time queueing over per-tenant
+    virtual time: admitting one request from tenant *t* advances
+    ``vtime[t] += 1/weight[t]``, so a hot tenant at 10x offered load gets
+    at most its weight share of lanes);
+  * **pumping** — one dispatch thread per pool drives
+    ``StreamingExecutor.pump``, refilling free lanes from the backlog at
+    every megastep chunk boundary — the only points where admission and
+    harvest are ever legal (the §3.3 exactness argument, now enforced by
+    the executor lock instead of by single-threadedness);
+  * **delivery** — a dedicated thread turns finished lanes into
+    :class:`GraphResponse`\\ s and wakes ``result(rid, timeout=...)``
+    callers, so building/fanning out answers never stalls the next chunk.
 
-Completed lanes come back as :class:`GraphResponse` with exact per-request
-stats (in-flight visits, integral edge work, host syncs billed to the
-request, queue wait in seconds and in scheduling rounds).  Between chunks
-an idle pool may be resized by the pluggable autoscaling hint (default:
-``fpp/planner.autoscale_capacity``, the §3.1 memory model applied to queue
-depth), so ``capacity`` tracks load without ever moving an in-flight lane.
+Compiles never sit on the serving path: a :class:`MegastepCache`
+(serve/compile_cache.py) AOT-compiles megasteps keyed by
+``(graph, kind, K, capacity, ...)`` — warmed at ``register_graph`` time
+(``prewarm=``) and on every pool resize — and pool capacities snap to
+pow2 buckets (``planner.pow2_bucket``) so autoscaling revisits a
+logarithmic set of executables instead of retracing per demand level.
 
-    server = GraphServer(capacity=8)
+Identical in-flight requests — same ``(graph, kind, source, alpha,
+eps)`` — coalesce onto one lane at admission time and fan the answer out
+on delivery, with the lane's visit/edge/host-sync work billed to *every*
+requester (``dedup=False`` to disable).  Deadline-expired queued requests
+are rejected with an explicit ``status="expired"`` response, never
+silently dropped; an expired coalescing primary promotes its oldest
+live follower onto the backlog.
+
+    server = GraphServer(capacity=8, prewarm=("sssp",))
     server.register_graph("road", road_csr)
+    server.start()                            # spin up the three lanes
     rid = server.submit(GraphRequest(kind="sssp", source=7, graph="road"))
-    server.serve()                       # synchronous pump until drained
-    resp = server.poll(rid)              # values + per-request stats
+    resp = server.result(rid, timeout=30)     # block for the answer
+    server.shutdown()
+
+The synchronous path is still here and unchanged in semantics —
+``serve()`` pumps rounds inline with explicit ``PartitionScheduler`` pool
+arbitration (request priorities feed it; ``prefer_older_ties`` rotates
+equal-priority pools) and is the parity oracle the concurrent lanes are
+tested against.  ``serve_forever(arrivals)`` now feeds the arrival stream
+to the running lanes and blocks until drained.
 
 ``launch/serve.py --workload graph`` and ``benchmarks/bench_serve.py``
-drive the same pump with synthetic arrival processes.
+drive the same front end with synthetic (open-loop) arrival processes.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import threading
 import time
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
@@ -57,6 +72,7 @@ import numpy as np
 from repro.core.scheduler import PartitionScheduler
 from repro.fpp import planner as _planner
 from repro.fpp.session import FPPSession
+from repro.serve.compile_cache import MegastepCache, warm_key
 
 SERVABLE_KINDS = ("sssp", "bfs", "ppr")
 
@@ -70,10 +86,11 @@ class GraphRequest:
     """One graph query as a tenant submits it (original vertex ids).
 
     ``priority`` follows the engine's convention: lower is more urgent
-    (it feeds pool arbitration directly, see module docstring).
-    ``deadline_s`` is a time-to-live from submission: a request still
-    *queued* when it lapses is rejected with ``status="expired"``; once
-    admitted to a lane it always runs to completion.
+    (it orders admission within a pool and feeds the synchronous path's
+    pool arbitration).  ``deadline_s`` is a time-to-live from submission:
+    a request still *queued* when it lapses is rejected with
+    ``status="expired"``; once admitted to a lane it always runs to
+    completion.  A coalesced follower shares its primary's fate.
     """
     kind: str
     source: int
@@ -93,7 +110,9 @@ class GraphResponse:
     ``host_syncs`` (device->host round trips billed to the request's
     in-flight window), ``queue_wait_s``/``queue_wait_rounds`` (time and
     scheduling rounds spent waiting for a lane), ``latency_s`` (submit to
-    response).
+    response).  A coalesced follower carries ``coalesced: True`` plus the
+    *same* visit/edge/host-sync bill as the lane it rode (per-request
+    attribution, not divided); its primary carries ``fanout: n``.
     """
     rid: int
     tenant: str
@@ -121,20 +140,27 @@ class _LanePool:
     """One (graph, kind) lane pool: a StreamingExecutor plus its backlog."""
 
     def __init__(self, graph: str, kind: str, session: FPPSession,
-                 capacity: int, k_visits: int, alpha: float, eps: float):
+                 capacity: int, k_visits: int, alpha: float, eps: float,
+                 *, fused: bool = False, megastep=None,
+                 lock: Optional[threading.RLock] = None):
         self.graph = graph
         self.kind = kind
         self.session = session
         self.capacity = int(capacity)
         self.k_visits = int(k_visits)
         self.alpha, self.eps = alpha, eps
+        self.fused = bool(fused)
         self.exec = session.stream(kind, capacity=self.capacity,
                                    k_visits=self.k_visits,
-                                   alpha=alpha, eps=eps)
+                                   alpha=alpha, eps=eps,
+                                   fused=self.fused, megastep=megastep)
         # tenant -> heap of (priority, seq, rid): priority then arrival
         self.queues: Dict[str, List[Tuple[float, int, int]]] = {}
         self.qid_rid: Dict[int, int] = {}      # executor qid -> server rid
         self.stamp: int = _IDLE_STAMP          # round backlog became non-empty
+        # the pump worker parks here while idle; submit() notifies.
+        # Shares the server lock so wait/notify and backlog state agree.
+        self.cv = threading.Condition(lock or threading.RLock())
 
     # ------------------------------------------------------------- backlog
 
@@ -160,21 +186,24 @@ class _LanePool:
             best = min(best, tickets[rid].req.priority)
         return best
 
-    def resize(self, capacity: int):
+    def resize(self, capacity: int, megastep=None):
         """Rebuild the executor at a new capacity.  Only legal when idle
         (no in-flight lane state to move); the backlog is server-side, so
-        nothing else changes."""
+        nothing else changes.  ``megastep`` injects the warm executable
+        for the new capacity so the rebuilt executor never traces."""
         if self.active:
             raise RuntimeError("cannot resize a pool with in-flight lanes")
         self.capacity = int(capacity)
         self.exec = self.session.stream(self.kind, capacity=self.capacity,
                                         k_visits=self.k_visits,
-                                        alpha=self.alpha, eps=self.eps)
+                                        alpha=self.alpha, eps=self.eps,
+                                        fused=self.fused, megastep=megastep)
         self.qid_rid = {}
 
 
 def default_autoscaler(pool_stats: dict) -> int:
-    """Planner-backed capacity hint: demand clamped by the memory model."""
+    """Planner-backed capacity hint: demand snapped to a pow2 bucket,
+    clamped by the memory model."""
     return _planner.autoscale_capacity(
         pool_stats["queued"], pool_stats["active"],
         mem=pool_stats["mem"], n_vertices=pool_stats["n_vertices"],
@@ -184,20 +213,31 @@ def default_autoscaler(pool_stats: dict) -> int:
 
 
 class GraphServer:
-    """Multi-tenant serving front end over per-(graph, kind) lane pools.
+    """Multi-tenant continuous-batching front end over lane pools.
 
-    ``capacity`` seeds every pool's lane count (the autoscaler may revise
-    it between chunks, bounded by ``max_capacity`` and the memory model);
-    ``k_visits`` is each pool's megastep chunk size — the scheduling
-    quantum of the whole server, since admission, harvest, arbitration and
-    deadline checks all happen at chunk boundaries; ``schedule`` picks the
-    pool-arbitration policy (any ``core/scheduler.py`` policy; request
-    priorities feed it); ``alpha``/``eps`` parameterize the push (ppr)
-    pools exactly as they do ``FPPSession.run``; ``autoscaler`` replaces
-    the default capacity hint
-    (callable: pool-stats dict -> suggested capacity, or ``None`` to
-    disable resizing); ``clock`` is injectable for deterministic deadline
-    tests.
+    ``capacity`` seeds every pool's lane count, snapped to a pow2 bucket
+    (the autoscaler revises it between chunks, bounded by
+    ``max_capacity`` and the memory model); ``k_visits`` is each pool's
+    megastep chunk size — the scheduling quantum of the whole server,
+    since admission, harvest and deadline checks all happen at chunk
+    boundaries; ``schedule`` picks the synchronous path's pool-arbitration
+    policy (any ``core/scheduler.py`` policy; request priorities feed
+    it); ``alpha``/``eps`` parameterize the push (ppr) pools exactly as
+    they do ``FPPSession.run``; ``autoscaler`` replaces the default
+    capacity hint (callable: pool-stats dict -> suggested capacity, or
+    ``None`` to disable resizing); ``clock`` is injectable for
+    deterministic deadline tests.
+
+    Continuous-batching knobs: ``fused`` selects each pool's visit body —
+    ``"auto"`` (default) picks per kind from the committed dispatch
+    yardsticks (``planner.auto_fused``; fused wins for minplus kinds, the
+    XLA megastep for ppr — see BENCH_engine.json bench_notes), or
+    True/False to force; ``dedup`` coalesces identical in-flight requests
+    (see module docstring); ``cache`` shares a :class:`MegastepCache`
+    across servers (benchmarks reuse warmth across sweep points);
+    ``prewarm`` is the default set of kinds whose megasteps
+    ``register_graph`` AOT-compiles in the background; ``idle_wait_s`` is
+    how long an idle pump worker parks between deadline checks.
     """
 
     def __init__(self, *, capacity: int = 8, max_capacity: int = 64,
@@ -206,15 +246,27 @@ class GraphServer:
                  autoscaler: Optional[Callable[[dict], int]]
                  = default_autoscaler,
                  clock: Callable[[], float] = time.monotonic,
-                 seed: int = 0):
+                 seed: int = 0,
+                 fused: object = "auto", dedup: bool = True,
+                 cache: Optional[MegastepCache] = None,
+                 prewarm: Iterable[str] = (),
+                 idle_wait_s: float = 0.05):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if fused not in (True, False, "auto"):
+            raise ValueError(f"fused must be True, False or 'auto', "
+                             f"got {fused!r}")
         self.capacity = int(capacity)
         self.max_capacity = int(max_capacity)
         self.k_visits = int(k_visits)
         self.alpha, self.eps = float(alpha), float(eps)
         self.autoscaler = autoscaler
         self.clock = clock
+        self.fused = fused
+        self.dedup = bool(dedup)
+        self.cache = cache if cache is not None else MegastepCache()
+        self.prewarm = tuple(prewarm)
+        self.idle_wait_s = float(idle_wait_s)
         self.rounds = 0
         self.responses: Dict[int, GraphResponse] = {}
         self._sessions: Dict[str, FPPSession] = {}
@@ -226,17 +278,35 @@ class GraphServer:
         self._arb = PartitionScheduler(schedule, 0, seed)
         self._next_rid = 0
         self._seq = 0
+        # --- continuous-batching state (serve/dispatch.py) ---
+        # ONE lock guards all server-side state; pool cvs and the
+        # response cv are views of it.  Executor locks nest strictly
+        # inside it (server lock -> executor lock, never the reverse).
+        self._lock = threading.RLock()
+        self._resp_cv = threading.Condition(self._lock)
+        self._running = False
+        self._workers: List[threading.Thread] = []
+        self._delivery = None
+        self._outstanding = 0                  # requests without a response
+        self._round_budget: Optional[int] = None
+        # in-flight dedup: coalesce key -> primary rid; primary rid ->
+        # follower rids (fan-out happens at delivery)
+        self._dedup: Dict[tuple, int] = {}
+        self._followers: Dict[int, List[int]] = {}
 
     # ---------------------------------------------------------- registration
 
-    def register_graph(self, name: str, graph_or_session, **plan_kw):
+    def register_graph(self, name: str, graph_or_session,
+                       prewarm: Optional[Iterable[str]] = None, **plan_kw):
         """Register a graph under ``name``; requests address it by name.
 
         Accepts a host CSR graph (a session is planned for it with
         ``plan_kw`` forwarded) or a ready :class:`FPPSession` — passing the
         session a test already ran ``session.run`` on guarantees the served
         plan is identical, which is how the bit-parity tests pin the
-        contract.  Chainable.
+        contract.  ``prewarm`` (default: the server's ``prewarm`` set)
+        names kinds whose megasteps are AOT-compiled in the background so
+        the first request never pays the trace.  Chainable.
         """
         if name in self._sessions:
             raise ValueError(f"graph {name!r} already registered")
@@ -244,10 +314,21 @@ class GraphServer:
             if plan_kw:
                 raise ValueError("plan_kw only applies when registering a "
                                  "raw graph, not a planned FPPSession")
-            self._sessions[name] = graph_or_session
+            session = graph_or_session
         else:
             plan_kw.setdefault("num_queries", self.capacity)
-            self._sessions[name] = FPPSession(graph_or_session).plan(**plan_kw)
+            session = FPPSession(graph_or_session).plan(**plan_kw)
+        self._sessions[name] = session
+        kinds = self.prewarm if prewarm is None else tuple(prewarm)
+        cap0 = _planner.pow2_bucket(self.capacity,
+                                    max_capacity=max(self.max_capacity,
+                                                     self.capacity))
+        for kind in kinds:
+            if kind not in SERVABLE_KINDS:
+                raise ValueError(f"prewarm kind must be one of "
+                                 f"{SERVABLE_KINDS}, got {kind!r}")
+            self.cache.warm_async(session, name, kind, cap0,
+                                  **self._warm_params(session, kind))
         return self
 
     def register_tenant(self, name: str, weight: float = 1.0):
@@ -256,55 +337,103 @@ class GraphServer:
         submit.  Chainable."""
         if weight <= 0:
             raise ValueError(f"tenant weight must be > 0, got {weight}")
-        self._weights[name] = float(weight)
-        self._vtime.setdefault(name, 0.0)
+        with self._lock:
+            self._weights[name] = float(weight)
+            self._vtime.setdefault(name, 0.0)
         return self
+
+    def _resolve_fused(self, session: FPPSession, kind: str) -> bool:
+        if self.fused == "auto":
+            bg, _ = session.prepared(unit_weights=(kind == "bfs"))
+            return _planner.auto_fused(kind, self.k_visits,
+                                       dmax=bg.nbr_part.shape[1])
+        return bool(self.fused)
+
+    def _warm_params(self, session: FPPSession, kind: str) -> dict:
+        """kwargs completing a megastep cache key for one of our pools —
+        everything beyond (graph, kind, capacity)."""
+        return dict(k_visits=self.k_visits,
+                    fused=self._resolve_fused(session, kind),
+                    alpha=self.alpha, eps=self.eps,
+                    schedule=session.current_plan.schedule, seed=0)
 
     def _pool(self, graph: str, kind: str) -> _LanePool:
         key = (graph, kind)
         if key not in self._pools:
-            pool = _LanePool(graph, kind, self._sessions[graph],
-                             self.capacity, self.k_visits,
-                             self.alpha, self.eps)
+            session = self._sessions[graph]
+            cap = _planner.pow2_bucket(
+                self.capacity, max_capacity=max(self.max_capacity,
+                                                self.capacity))
+            params = self._warm_params(session, kind)
+            # peek, don't build: pool creation happens under the server
+            # lock (first submit), so a cold cache must not stall it —
+            # the executor traces lazily in the pump lane instead
+            megastep = self.cache.peek(warm_key(graph, kind,
+                                                params["k_visits"], cap,
+                                                **{k: v for k, v
+                                                   in params.items()
+                                                   if k != "k_visits"}))
+            pool = _LanePool(graph, kind, session, cap, self.k_visits,
+                             self.alpha, self.eps, fused=params["fused"],
+                             megastep=megastep, lock=self._lock)
             self._pools[key] = pool
             self._pool_order.append(pool)
+            if self._running:
+                self._spawn_worker(pool)
         return self._pools[key]
 
     # --------------------------------------------------------------- submit
 
+    def _dedup_key(self, req: GraphRequest) -> tuple:
+        return (req.graph, req.kind, int(req.source), self.alpha, self.eps)
+
     def submit(self, req: GraphRequest) -> int:
-        """Enqueue one request; returns its rid (poll for the response)."""
+        """Book one request; returns its rid (``result``/``poll`` for the
+        response).  Thread-safe and device-free: the heavy lifting happens
+        on the pump lane at the next chunk boundary."""
         if req.kind not in SERVABLE_KINDS:
             raise ValueError(f"kind must be one of {SERVABLE_KINDS}, "
                              f"got {req.kind!r}")
-        if req.graph not in self._sessions:
-            raise ValueError(f"graph {req.graph!r} not registered "
-                             f"(have {sorted(self._sessions)})")
-        n = self._sessions[req.graph].graph.n
-        if not 0 <= int(req.source) < n:
-            raise ValueError(f"source {req.source} out of range for graph "
-                             f"{req.graph!r} with {n} vertices")
-        if req.tenant not in self._weights:
-            self.register_tenant(req.tenant)
-        rid = self._next_rid
-        self._next_rid += 1
-        t = _Ticket(rid=rid, req=req, submit_t=self.clock(),
-                    submit_round=self.rounds)
-        self._tickets[rid] = t
-        pool = self._pool(req.graph, req.kind)
-        if pool.queued == 0 and pool.active == 0:
-            pool.stamp = self.rounds
-        if not self._tenant_has_work(req.tenant):
-            # a tenant returning from idle joins at the busy tenants' pace
-            # instead of burning banked virtual time as a monopoly burst
-            busy = [self._vtime[tn] for tn in self._weights
-                    if tn != req.tenant and self._tenant_has_work(tn)]
-            if busy:
-                self._vtime[req.tenant] = max(self._vtime[req.tenant],
-                                              min(busy))
-        pool.enqueue(req.tenant, req.priority, self._seq, rid)
-        self._seq += 1
-        return rid
+        with self._lock:
+            if req.graph not in self._sessions:
+                raise ValueError(f"graph {req.graph!r} not registered "
+                                 f"(have {sorted(self._sessions)})")
+            n = self._sessions[req.graph].graph.n
+            if not 0 <= int(req.source) < n:
+                raise ValueError(f"source {req.source} out of range for "
+                                 f"graph {req.graph!r} with {n} vertices")
+            if req.tenant not in self._weights:
+                self.register_tenant(req.tenant)
+            rid = self._next_rid
+            self._next_rid += 1
+            t = _Ticket(rid=rid, req=req, submit_t=self.clock(),
+                        submit_round=self.rounds)
+            self._tickets[rid] = t
+            self._outstanding += 1
+            if self.dedup:
+                primary = self._dedup.get(self._dedup_key(req))
+                if primary is not None:
+                    # ride the in-flight twin's lane; answer fans out at
+                    # delivery with this request billed the same work
+                    self._followers.setdefault(primary, []).append(rid)
+                    return rid
+                self._dedup[self._dedup_key(req)] = rid
+            pool = self._pool(req.graph, req.kind)
+            if pool.queued == 0 and pool.active == 0:
+                pool.stamp = self.rounds
+            if not self._tenant_has_work(req.tenant):
+                # a tenant returning from idle joins at the busy tenants'
+                # pace instead of burning banked virtual time as a
+                # monopoly burst
+                busy = [self._vtime[tn] for tn in self._weights
+                        if tn != req.tenant and self._tenant_has_work(tn)]
+                if busy:
+                    self._vtime[req.tenant] = max(self._vtime[req.tenant],
+                                                  min(busy))
+            pool.enqueue(req.tenant, req.priority, self._seq, rid)
+            self._seq += 1
+            pool.cv.notify_all()
+            return rid
 
     def _tenant_has_work(self, tenant: str) -> bool:
         """True while the tenant has anything queued or in flight — the
@@ -327,30 +456,55 @@ class GraphServer:
         return d is not None and (now - t.submit_t) >= d
 
     def _reject(self, t: _Ticket, now: float):
-        self.responses[t.rid] = GraphResponse(
+        self._finish(GraphResponse(
             rid=t.rid, tenant=t.req.tenant, graph=t.req.graph,
             kind=t.req.kind, source=t.req.source, status="expired",
             values=None, residual=None, stats={
                 "queue_wait_s": now - t.submit_t,
                 "queue_wait_rounds": self.rounds - t.submit_round,
                 "latency_s": now - t.submit_t,
-            })
+            }))
+        key = self._dedup_key(t.req)
+        if self._dedup.get(key) == t.rid:
+            # an expired coalescing primary hands its lane claim to the
+            # oldest follower still inside its own deadline
+            del self._dedup[key]
+            followers = self._followers.pop(t.rid, [])
+            while followers:
+                frid = followers.pop(0)
+                ft = self._tickets[frid]
+                if self._expired(ft, now):
+                    self._reject(ft, now)
+                    continue
+                self._dedup[key] = frid
+                if followers:
+                    self._followers[frid] = followers
+                pool = self._pool(ft.req.graph, ft.req.kind)
+                if pool.queued == 0 and pool.active == 0:
+                    pool.stamp = self.rounds
+                pool.enqueue(ft.req.tenant, ft.req.priority, self._seq, frid)
+                self._seq += 1
+                pool.cv.notify_all()
+                break
+
+    def _police_pool(self, pool: _LanePool, now: float):
+        """Reject every queued request in this pool whose deadline lapsed
+        (explicit expired response — never a silent drop)."""
+        for tenant, heap in list(pool.queues.items()):
+            keep = []
+            for item in heap:
+                t = self._tickets[item[2]]
+                if self._expired(t, now):
+                    self._reject(t, now)
+                else:
+                    keep.append(item)
+            if len(keep) != len(heap):
+                heapq.heapify(keep)
+                pool.queues[tenant] = keep
 
     def _police_deadlines(self, now: float):
-        """Reject every queued request whose deadline lapsed (explicit
-        expired response — never a silent drop)."""
         for pool in self._pool_order:
-            for tenant, heap in pool.queues.items():
-                keep = []
-                for item in heap:
-                    t = self._tickets[item[2]]
-                    if self._expired(t, now):
-                        self._reject(t, now)
-                    else:
-                        keep.append(item)
-                if len(keep) != len(heap):
-                    heapq.heapify(keep)
-                    pool.queues[tenant] = keep
+            self._police_pool(pool, now)
 
     # ------------------------------------------------------------ admission
 
@@ -389,31 +543,73 @@ class GraphServer:
             t.admit_round = self.rounds
             self._vtime[tenant] += 1.0 / self._weights[tenant]
 
-    # -------------------------------------------------------------- harvest
+    # -------------------------------------------------------------- delivery
 
-    def _collect(self, pool: _LanePool, now: float):
-        for qid in [q for q, _ in pool.qid_rid.items()
-                    if pool.exec.queries[q].done]:
-            rid = pool.qid_rid.pop(qid)
+    def _finish(self, resp: GraphResponse):
+        """Store a response and wake every ``result``/drain waiter."""
+        self.responses[resp.rid] = resp
+        self._outstanding = max(0, self._outstanding - 1)
+        self._resp_cv.notify_all()
+
+    def _deliver(self, pool: _LanePool, qids: Iterable[int], now: float):
+        """Turn finished executor lanes into responses (+ dedup fan-out)."""
+        for qid in qids:
+            rid = pool.qid_rid.pop(qid, None)
+            if rid is None:
+                continue
             t = self._tickets[rid]
             q = pool.exec.queries[qid]
-            self.responses[rid] = GraphResponse(
+            stats = {
+                "visits": q.finished_visit - q.admitted_visit,
+                "edges": q.edges,
+                "host_syncs": q.finished_sync - q.admitted_sync,
+                "queue_wait_s": t.admit_t - t.submit_t,
+                "queue_wait_rounds": t.admit_round - t.submit_round,
+                "latency_s": now - t.submit_t,
+            }
+            key = self._dedup_key(t.req)
+            if self._dedup.get(key) == rid:
+                del self._dedup[key]
+            followers = self._followers.pop(rid, [])
+            if followers:
+                stats["fanout"] = len(followers)
+            self._finish(GraphResponse(
                 rid=rid, tenant=t.req.tenant, graph=pool.graph,
                 kind=pool.kind, source=t.req.source, status="ok",
-                values=q.values, residual=q.residual, stats={
-                    "visits": q.finished_visit - q.admitted_visit,
-                    "edges": q.edges,
-                    "host_syncs": q.finished_sync - q.admitted_sync,
-                    "queue_wait_s": t.admit_t - t.submit_t,
-                    "queue_wait_rounds": t.admit_round - t.submit_round,
-                    "latency_s": now - t.submit_t,
-                })
+                values=q.values, residual=q.residual, stats=stats))
+            for frid in followers:
+                ft = self._tickets[frid]
+                self._finish(GraphResponse(
+                    rid=frid, tenant=ft.req.tenant, graph=pool.graph,
+                    kind=pool.kind, source=ft.req.source, status="ok",
+                    values=q.values, residual=q.residual, stats={
+                        # the lane's work billed to every requester
+                        "visits": stats["visits"], "edges": q.edges,
+                        "host_syncs": stats["host_syncs"],
+                        "queue_wait_s": max(0.0, t.admit_t - ft.submit_t),
+                        "queue_wait_rounds": max(
+                            0, t.admit_round - ft.submit_round),
+                        "latency_s": now - ft.submit_t,
+                        "coalesced": True,
+                    }))
+
+    def _queue_delivery(self, pool: _LanePool, qids: List[int]):
+        """Hand finished lanes to the delivery thread (inline fallback
+        during shutdown, when the delivery lane is already gone)."""
+        d = self._delivery
+        if d is not None:
+            d.put(pool, qids)
+        else:
+            with self._lock:
+                self._deliver(pool, qids, self.clock())
 
     # ------------------------------------------------------------ autoscale
 
-    def _maybe_resize(self, pool: _LanePool):
+    def _resize_hint(self, pool: _LanePool) -> Optional[int]:
+        """A pow2-snapped target capacity, or None to leave the pool be.
+        Only idle pools resize — no in-flight lane state ever moves."""
         if self.autoscaler is None or pool.active:
-            return
+            return None
         plan = pool.session.current_plan
         hint = int(self.autoscaler({
             "queued": pool.queued, "active": pool.active,
@@ -422,15 +618,116 @@ class GraphServer:
             "block_size": pool.exec.bg.block_size,
             "min_capacity": 1, "max_capacity": self.max_capacity,
         }))
-        if hint != pool.capacity and hint >= 1:
-            pool.resize(hint)
+        if hint < 1:
+            return None
+        hint = _planner.pow2_bucket(hint, max_capacity=self.max_capacity)
+        return hint if hint != pool.capacity else None
+
+    def _warm_executable(self, pool: _LanePool, capacity: int):
+        """The warm megastep for this pool at ``capacity`` — compiled now
+        if the cache misses (callers keep the server lock released)."""
+        return self.cache.get_or_build(
+            pool.session, pool.graph, pool.kind, capacity,
+            **self._warm_params(pool.session, pool.kind))
+
+    def _apply_resize(self, pool: _LanePool, capacity: int, megastep):
+        pool.resize(capacity, megastep=megastep)
+
+    # --------------------------------------------------- continuous batching
+
+    def start(self):
+        """Spin up the pump + delivery lanes; idempotent.  Chainable."""
+        from repro.serve.dispatch import DeliveryWorker
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+            self._delivery = DeliveryWorker(self)
+            self._delivery.start()
+            for pool in self._pool_order:
+                self._spawn_worker(pool)
+        return self
+
+    def _spawn_worker(self, pool: _LanePool):
+        from repro.serve.dispatch import PoolWorker
+        w = PoolWorker(self, pool)
+        self._workers.append(w)
+        w.start()
+
+    def _take_round(self) -> bool:
+        """Charge one scheduling round against the budget; a spent budget
+        halts the lanes (``serve_forever`` then returns what completed)."""
+        if self._round_budget is not None and self.rounds >= self._round_budget:
+            self._halt_locked()
+            return False
+        self.rounds += 1
+        return True
+
+    def _halt_locked(self):
+        self._running = False
+        for p in self._pool_order:
+            p.cv.notify_all()
+        self._resp_cv.notify_all()
+
+    def shutdown(self) -> Dict[int, GraphResponse]:
+        """Stop the lanes at their next chunk boundary and join them.
+        Unserved requests stay booked — ``start()`` again to resume —
+        and the response table so far is returned."""
+        with self._lock:
+            self._halt_locked()
+            workers, self._workers = self._workers, []
+            delivery, self._delivery = self._delivery, None
+        for w in workers:
+            w.join()
+        if delivery is not None:
+            delivery.stop()
+            delivery.join()
+        return self.responses
+
+    def wait_drained(self, timeout: Optional[float] = None) -> bool:
+        """Block until every booked request has a response (True), the
+        lanes halt, or ``timeout`` elapses (False)."""
+        with self._lock:
+            self._resp_cv.wait_for(
+                lambda: self._outstanding == 0 or not self._running, timeout)
+            return self._outstanding == 0
+
+    def result(self, rid: int, timeout: Optional[float] = None
+               ) -> GraphResponse:
+        """Block until ``rid``'s response is ready and return it.
+
+        Requires running lanes (``start``/``serve_forever``) unless the
+        response already exists; raises ``KeyError`` for unknown rids,
+        ``TimeoutError`` on timeout, ``RuntimeError`` if the server halts
+        first."""
+        with self._lock:
+            resp = self.responses.get(rid)
+            if resp is not None:
+                return resp
+            if rid not in self._tickets:
+                raise KeyError(f"unknown request id {rid}")
+            if not self._running:
+                raise RuntimeError(
+                    f"request {rid} has no response and the serving lanes "
+                    f"are stopped; start() the server or pump serve()")
+            self._resp_cv.wait_for(
+                lambda: rid in self.responses or not self._running, timeout)
+            resp = self.responses.get(rid)
+            if resp is None:
+                if self._running:
+                    raise TimeoutError(
+                        f"request {rid} not served within {timeout}s")
+                raise RuntimeError(
+                    f"serving lanes halted before request {rid} completed")
+            return resp
 
     # ----------------------------------------------------------------- pump
 
     @property
     def pending(self) -> int:
-        """Requests without a response yet (queued + in flight)."""
-        return sum(p.queued + p.active for p in self._pool_order)
+        """Requests without a response yet (queued, in flight, or riding
+        a coalesced twin's lane)."""
+        return self._outstanding
 
     def _arbitrate(self) -> Optional[_LanePool]:
         if not self._pool_order:
@@ -444,33 +741,44 @@ class GraphServer:
         return None if idx is None else self._pool_order[idx]
 
     def step(self) -> bool:
-        """One serving round: police deadlines, arbitrate a pool, admit at
-        the chunk boundary, pump one megastep chunk, harvest responses,
-        revisit capacity.  Returns False when no pool holds work."""
-        now = self.clock()
-        self._police_deadlines(now)
-        pool = self._arbitrate()
-        if pool is None:
-            return False
-        self._maybe_resize(pool)
-        self._admit(pool, now)
-        if pool.active:
-            pool.exec.pump(self.k_visits)
-            self._collect(pool, self.clock())
-        if pool.queued == 0 and pool.active == 0:
-            pool.stamp = _IDLE_STAMP
-        else:
-            # refresh: the just-served pool becomes the youngest, so
-            # equal-priority pools rotate least-recently-served instead of
-            # the oldest stamp monopolizing every tie
-            pool.stamp = self.rounds
-        self.rounds += 1
-        return True
+        """One synchronous serving round: police deadlines, arbitrate a
+        pool, admit at the chunk boundary, pump one megastep chunk,
+        deliver responses, revisit capacity.  Returns False when no pool
+        holds work.  The parity oracle for the concurrent lanes — raises
+        if they are running (one pump per pool at a time)."""
+        with self._lock:
+            if self._running:
+                raise RuntimeError("step() is the synchronous pump; the "
+                                   "background lanes are running — use "
+                                   "submit/result, or shutdown() first")
+            now = self.clock()
+            self._police_deadlines(now)
+            pool = self._arbitrate()
+            if pool is None:
+                return False
+            hint = self._resize_hint(pool)
+            if hint is not None:
+                self._apply_resize(pool, hint,
+                                   self._warm_executable(pool, hint))
+            self._admit(pool, now)
+            if pool.active:
+                pool.exec.pump(self.k_visits)
+                self._deliver(pool, pool.exec.take_finished(), self.clock())
+            if pool.queued == 0 and pool.active == 0:
+                pool.stamp = _IDLE_STAMP
+            else:
+                # refresh: the just-served pool becomes the youngest, so
+                # equal-priority pools rotate least-recently-served
+                # instead of the oldest stamp monopolizing every tie
+                pool.stamp = self.rounds
+            self.rounds += 1
+            return True
 
     def serve(self, max_rounds: Optional[int] = None
               ) -> Dict[int, GraphResponse]:
-        """Pump until everything submitted so far has a response (or the
-        round budget runs out); returns the response table."""
+        """Synchronously pump until everything submitted so far has a
+        response (or the round budget runs out); returns the response
+        table."""
         start = self.rounds
         while self.pending and (max_rounds is None
                                 or self.rounds - start < max_rounds):
@@ -480,28 +788,52 @@ class GraphServer:
 
     def serve_forever(self, arrivals: Optional[
             Iterator[Iterable[GraphRequest]]] = None, *,
-            max_rounds: int = 100_000) -> Dict[int, GraphResponse]:
-        """The synchronous serving pump: draw one batch of requests from
-        ``arrivals`` per round (an iterator of request iterables — the
-        arrival process), interleave with chunk execution, and keep pumping
-        until the arrival stream is exhausted and every request has a
-        response.  ``max_rounds`` bounds loop iterations — idle ones
-        included, so an open-loop arrival stream yielding empty batches
-        cannot spin the pump forever."""
-        it = iter(arrivals) if arrivals is not None else None
-        for _ in range(max_rounds):
-            if it is not None:
-                batch = next(it, None)
-                if batch is None:
-                    it = None
-                else:
-                    self.submit_all(batch)
-            progressed = self.step()
-            if it is None and not progressed and not self.pending:
-                break
+            max_rounds: int = 100_000,
+            drain_timeout: Optional[float] = None
+            ) -> Dict[int, GraphResponse]:
+        """Continuous serving: start the lanes, feed the arrival stream
+        (an iterator of request batches — iterating it paces the open
+        loop; submissions interleave with chunk execution on the pump
+        threads), block until drained, then stop the lanes and return the
+        response table.  With ``arrivals=None`` the lanes stay up and
+        this blocks until ``shutdown()`` is called from another thread.
+        ``max_rounds`` bounds total pumped chunks across all pools — a
+        spent budget halts the lanes and returns what completed."""
+        with self._lock:
+            self._round_budget = self.rounds + int(max_rounds)
+        self.start()
+        try:
+            if arrivals is None:
+                with self._lock:
+                    self._resp_cv.wait_for(lambda: not self._running)
+                return self.responses
+            for batch in arrivals:
+                self.submit_all(batch)
+            self.wait_drained(timeout=drain_timeout)
+        finally:
+            with self._lock:
+                self._round_budget = None
+            if arrivals is not None:
+                self.shutdown()
         return self.responses
 
     def poll(self, rid: int) -> Optional[GraphResponse]:
         """The response for ``rid``, or None while it is still in the
         queue/in flight."""
         return self.responses.get(rid)
+
+    def stats(self) -> dict:
+        """A serving snapshot: per-pool occupancy and the compile cache."""
+        with self._lock:
+            return {
+                "running": self._running,
+                "rounds": self.rounds,
+                "outstanding": self._outstanding,
+                "pools": {f"{p.graph}/{p.kind}": {
+                    "capacity": p.capacity, "active": p.active,
+                    "queued": p.queued, "fused": p.fused,
+                    "visits": p.exec.visits,
+                    "host_syncs": p.exec.host_syncs,
+                } for p in self._pool_order},
+                "cache": self.cache.stats(),
+            }

@@ -15,13 +15,21 @@ What serving must additionally guarantee, pinned here:
   * two registered graphs serve interleaved traffic with no state bleed;
   * request priorities plumb through pool arbitration
     (core/scheduler.py ``prefer_older_ties``).
+What continuous batching adds, pinned here:
+  * multi-threaded submitters against the running lanes get the same
+    bit-identical answers (and ``serve_forever`` matches ``serve()``);
+  * identical in-flight requests coalesce onto one lane and fan out with
+    per-request billing (and ``dedup=False`` turns it off);
+  * the warm compile cache is hit, not re-compiled, across pow2 resizes.
 """
+import threading
+
 import numpy as np
 import pytest
 
 from repro.core.scheduler import PartitionScheduler
 from repro.fpp import FPPSession, MemoryModel
-from repro.fpp.planner import autoscale_capacity
+from repro.fpp.planner import auto_fused, autoscale_capacity, pow2_bucket
 from repro.graphs.generators import grid2d, rmat
 from repro.serve import GraphRequest, GraphServer
 
@@ -104,7 +112,10 @@ def test_hot_tenant_cannot_starve_cold_tenant():
     a FIFO queue would impose."""
     g = grid2d(8, 8, seed=4)
     srcs = _sources(g, 10, seed=5)
-    server = GraphServer(capacity=2, k_visits=16, autoscaler=None)
+    # dedup=False: the hot tenant reuses sources, and coalescing them
+    # would dissolve the very backlog this test measures
+    server = GraphServer(capacity=2, k_visits=16, autoscaler=None,
+                         dedup=False)
     server.register_graph("g", g, num_queries=2, block_size=16)
     hot = [server.submit(GraphRequest(kind="sssp", source=int(srcs[i % 10]),
                                       graph="g", tenant="hot"))
@@ -314,6 +325,237 @@ def test_server_grows_pool_capacity_under_backlog():
     assert all(out[r].status == "ok" for r in rids)
     # the backlog of 6 should have pulled capacity up to the next pow2
     assert server._pools[("g", "sssp")].capacity == 8
+
+
+# -------------------------------------------------- continuous batching
+
+
+def test_concurrent_submitters_bit_identical_and_result_blocks():
+    """Three client threads race submissions against the running lanes;
+    every blocking ``result`` comes back bit-identical to the one-shot
+    session run — a foreign-thread submit lands at a chunk boundary,
+    indistinguishable from a quiet one."""
+    g = grid2d(12, 12, seed=3)
+    srcs = _sources(g, 12, seed=21)
+    sess = FPPSession(g).plan(num_queries=4, block_size=32)
+    one = sess.run("sssp", srcs)
+    server = GraphServer(capacity=4, k_visits=16, autoscaler=None)
+    server.register_graph("g", sess)
+    server.start()
+    try:
+        rids, lock = {}, threading.Lock()
+
+        def client(lo):
+            for i in range(lo, lo + 4):
+                rid = server.submit(GraphRequest(
+                    kind="sssp", source=int(srcs[i]), graph="g",
+                    tenant=f"t{lo}"))
+                with lock:
+                    rids[i] = rid
+        threads = [threading.Thread(target=client, args=(lo,))
+                   for lo in (0, 4, 8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i, rid in rids.items():
+            r = server.result(rid, timeout=120)
+            assert r.status == "ok"
+            np.testing.assert_array_equal(r.values, one.values[i])
+        with pytest.raises(KeyError):
+            server.result(10_000, timeout=1)
+    finally:
+        server.shutdown()
+
+
+def test_serve_forever_matches_synchronous_serve():
+    """The same mixed workload through the concurrent lanes and through
+    the synchronous pump (the parity oracle): minplus answers are
+    bit-identical; push answers agree within the eps the one-shot run
+    carries (§3.3 — lane co-residency, and hence float accumulation
+    order, legitimately differs across schedules); every request is
+    answered with per-request stats."""
+    g = grid2d(10, 10, seed=6)
+    srcs = _sources(g, 6, seed=22)
+    sess = FPPSession(g).plan(num_queries=2, block_size=32)
+    reqs = [GraphRequest(kind=("sssp" if i % 2 else "ppr"),
+                         source=int(srcs[i]), graph="g",
+                         tenant="a" if i % 3 else "b")
+            for i in range(6)]
+
+    sync = GraphServer(capacity=2, k_visits=16, autoscaler=None)
+    sync.register_graph("g", sess)
+    sync_rids = sync.submit_all(reqs)
+    sync_out = sync.serve()
+
+    conc = GraphServer(capacity=2, k_visits=16, autoscaler=None)
+    conc.register_graph("g", sess)
+    conc_out = conc.serve_forever(iter([reqs]))
+    assert not conc._running                 # lanes stopped after drain
+
+    assert len(conc_out) == len(sync_out) == len(reqs)
+    by_src_sync = {(sync_out[r].kind, sync_out[r].source): sync_out[r]
+                   for r in sync_rids}
+    for r in conc_out.values():
+        assert r.status == "ok"
+        want = by_src_sync[(r.kind, r.source)].values
+        if r.kind == "ppr":
+            np.testing.assert_allclose(r.values, want, atol=1e-3)
+        else:
+            np.testing.assert_array_equal(r.values, want)
+        for stat in ("visits", "edges", "host_syncs", "latency_s"):
+            assert stat in r.stats
+
+
+def test_dedup_coalesces_in_flight_twins_and_bills_everyone():
+    """Identical in-flight requests ride one lane: same bits out, the
+    lane's work billed to every requester, ``fanout`` on the primary and
+    ``coalesced`` on followers — and with one lane + three twins the pool
+    only ever runs one query."""
+    g = grid2d(10, 10, seed=6)
+    src = int(_sources(g, 1, seed=23)[0])
+    sess = FPPSession(g).plan(num_queries=1, block_size=32)
+    one = sess.run("sssp", np.array([src]))
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    server.register_graph("g", sess)
+    rids = [server.submit(GraphRequest(kind="sssp", source=src, graph="g",
+                                       tenant=t))
+            for t in ("a", "b", "c")]
+    out = server.serve()
+    assert len(out) == 3
+    primary, followers = out[rids[0]], [out[r] for r in rids[1:]]
+    assert primary.stats["fanout"] == 2
+    assert all(f.stats["coalesced"] for f in followers)
+    for r in [primary] + followers:
+        assert r.status == "ok"
+        np.testing.assert_array_equal(r.values, one.values[0])
+        # per-request attribution: every requester billed the lane's work
+        assert r.stats["visits"] == primary.stats["visits"] >= 1
+        assert r.stats["edges"] == one.edges_processed[0]
+    # one lane, one execution: the executor saw exactly one query
+    assert server._pools[("g", "sssp")].exec._next_qid == 1
+
+
+def test_dedup_off_serves_twins_separately():
+    g = grid2d(8, 8, seed=4)
+    src = int(_sources(g, 1, seed=24)[0])
+    server = GraphServer(capacity=2, k_visits=16, autoscaler=None,
+                         dedup=False)
+    server.register_graph("g", g, num_queries=2, block_size=16)
+    rids = [server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+            for _ in range(2)]
+    out = server.serve()
+    assert all(out[r].status == "ok" for r in rids)
+    assert not any(out[r].stats.get("coalesced") for r in rids)
+    assert server._pools[("g", "sssp")].exec._next_qid == 2
+
+
+def test_expired_dedup_primary_promotes_live_follower():
+    """A coalescing primary whose deadline lapses while queued is
+    rejected; its follower (no deadline) is promoted onto the backlog
+    and still gets a real answer."""
+    tick = [0.0]
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 2, seed=25)
+    server = GraphServer(capacity=1, k_visits=16, clock=lambda: tick[0],
+                         autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    # occupy the single lane so the twins stay queued
+    blocker = server.submit(GraphRequest(kind="sssp", source=int(srcs[0]),
+                                         graph="g"))
+    doomed = server.submit(GraphRequest(kind="sssp", source=int(srcs[1]),
+                                        graph="g", deadline_s=5.0))
+    saved = server.submit(GraphRequest(kind="sssp", source=int(srcs[1]),
+                                       graph="g", tenant="other"))
+    tick[0] = 10.0                      # lapses while queued
+    out = server.serve()
+    assert out[doomed].status == "expired"
+    assert out[saved].status == "ok" and out[saved].values is not None
+    assert out[blocker].status == "ok"
+
+
+def test_warm_cache_shared_across_servers_and_resizes():
+    """A pow2 capacity bucket's megastep compiles once into the shared
+    cache; a second server over the same session resizes into a cache
+    hit instead of recompiling — the bench's sweep-point pattern."""
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 6, seed=26)
+    server = GraphServer(capacity=1, k_visits=16, max_capacity=8)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    rids = [server.submit(GraphRequest(kind="sssp", source=int(s),
+                                       graph="g")) for s in srcs]
+    out = server.serve()
+    assert all(out[r].status == "ok" for r in rids)
+    assert server._pools[("g", "sssp")].capacity == 8   # grew via resize
+    compiled = server.cache.stats()["misses"]
+
+    twin = GraphServer(capacity=1, k_visits=16, max_capacity=8,
+                       cache=server.cache)
+    twin.register_graph("g", server._sessions["g"])     # same session
+    rids = [twin.submit(GraphRequest(kind="sssp", source=int(s),
+                                     graph="g")) for s in srcs]
+    out = twin.serve()
+    assert all(out[r].status == "ok" for r in rids)
+    stats = twin.cache.stats()
+    assert stats["misses"] == compiled, stats   # no new compiles
+    assert stats["hits"] >= 1, stats            # twin's resize hit warmth
+    # every compiled capacity is a pow2 bucket
+    assert all(k[3] == pow2_bucket(k[3]) for k in server.cache._cache)
+
+
+# ------------------------------------------------------- planner dispatch
+
+
+def test_pow2_bucket_snaps_and_clamps():
+    assert pow2_bucket(0) == 1
+    assert pow2_bucket(1) == 1
+    assert pow2_bucket(5) == 8
+    assert pow2_bucket(8) == 8
+    assert pow2_bucket(9) == 16
+    assert pow2_bucket(10_000, max_capacity=64) == 64
+    assert pow2_bucket(2, min_capacity=4) == 4
+
+
+def test_auto_fused_follows_committed_yardsticks():
+    # minplus kinds: fused won both committed K points
+    assert auto_fused("sssp", 64) and auto_fused("sssp", 8)
+    assert auto_fused("bfs", 64)        # bfs shares sssp's minplus body
+    # ppr: the XLA megastep beat fused at both committed K points
+    assert not auto_fused("ppr", 64) and not auto_fused("ppr", 8)
+    # off-grid K resolves via the nearest committed yardstick
+    assert auto_fused("sssp", 16) in (True, False)
+
+
+def test_auto_fused_guards_dense_block_graphs():
+    """Past the planner's dmax budget the fused kernel's pre-gathered
+    adjacency grows linearly in dmax; the auto-select must fall back to
+    the XLA megastep (an explicit fused=True is never overridden)."""
+    from repro.fpp.planner import FUSED_DMAX_BUDGET
+    assert auto_fused("sssp", 64, dmax=FUSED_DMAX_BUDGET)
+    assert not auto_fused("sssp", 64, dmax=FUSED_DMAX_BUDGET + 1)
+    # a dense-partitioned graph resolves to the XLA megastep end to end:
+    # an ER graph's block adjacency is near-complete, dmax ~ P-1
+    from repro.graphs.generators import erdos_renyi
+    g = erdos_renyi(n=1024, avg_deg=4.0, seed=3)
+    sess = FPPSession(g).plan(num_queries=2, block_size=32, fused="auto")
+    bg, _ = sess.prepared()
+    assert bg.nbr_part.shape[1] > FUSED_DMAX_BUDGET
+    assert sess.current_plan.resolve_fused(
+        "sssp", dmax=bg.nbr_part.shape[1]) is False
+    server = GraphServer(capacity=2, k_visits=8)
+    server.register_graph("er", sess)
+    assert server._warm_params(sess, "sssp")["fused"] is False
+
+
+def test_plan_fused_auto_resolves_per_kind():
+    g = grid2d(8, 8, seed=4)
+    sess = FPPSession(g).plan(num_queries=2, block_size=16, fused="auto")
+    p = sess.current_plan
+    assert p.fused == "auto"
+    assert p.resolve_fused("sssp") is True
+    assert p.resolve_fused("ppr") is False
+    with pytest.raises(ValueError):
+        FPPSession(g).plan(num_queries=2, fused="sometimes")
 
 
 # ------------------------------------------------------------------ misc
