@@ -6,7 +6,8 @@ streaming megastep with concurrent admission/pump/delivery lanes
 (``dispatch.py``) and warm AOT-compiled megasteps (``compile_cache.py``).
 """
 from repro.serve.compile_cache import (MegastepCache,  # noqa
-                                       build_warm_megastep, warm_key)
+                                       build_warm_megastep, session_uid,
+                                       warm_key)
 from repro.serve.engine import (ContinuousBatcher, Request,  # noqa
                                 make_decode_step, make_prefill_step)
 from repro.serve.graph_server import (GraphRequest, GraphResponse,  # noqa

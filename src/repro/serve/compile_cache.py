@@ -15,8 +15,12 @@ the pool eats it.  This module moves the cost to ``register_graph`` time:
     one (BlockGraph, perm) per session, so "same graph" is by identity,
     not just by value).
   * :class:`MegastepCache` memoizes those executables under
-    ``(graph, kind, K, capacity, fused, alpha, eps, schedule, seed)``.
-    Capacity is the raw lane count — the *server* snaps demand to pow2
+    ``(graph, kind, K, capacity, fused, alpha, eps, schedule, seed,
+    session_uid)`` — the uid (:func:`session_uid`) pins the executable to
+    the session whose constants it baked in, so a cache shared across
+    servers can never hand one graph's program to a different graph that
+    happens to reuse the same registered name.  Capacity is the raw lane
+    count — the *server* snaps demand to pow2
     buckets (``planner.pow2_bucket``) before asking, which keeps the set
     of distinct compiled shapes logarithmic in load instead of linear.
 
@@ -33,6 +37,7 @@ concurrent warmers), so a background warm thread never blocks admission.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Callable, Dict, Optional, Tuple
@@ -44,13 +49,39 @@ import numpy as np
 from repro.core import visit as _visit
 from repro.fpp.streaming import build_stream_engine, build_stream_megastep
 
+_uid_lock = threading.Lock()
+_uid_counter = itertools.count()
 
-def warm_key(graph: str, kind: str, k_visits: int, capacity: int, *,
+
+def session_uid(session) -> int:
+    """A process-unique token for this session, minted on first use.
+
+    The compiled megastep bakes in the session's graph constants
+    (``session.prepared`` caches one BlockGraph per session), so cache
+    keys must identify the *session*, not just its registered name —
+    two servers sharing a :class:`MegastepCache` may both call a
+    different graph ``"default"``.  A stored attribute rather than
+    ``id(session)``: ids are recycled after GC, a minted uid never is.
+    """
+    uid = getattr(session, "_megastep_cache_uid", None)
+    if uid is None:
+        with _uid_lock:
+            uid = getattr(session, "_megastep_cache_uid", None)
+            if uid is None:
+                uid = next(_uid_counter)
+                session._megastep_cache_uid = uid
+    return uid
+
+
+def warm_key(session, graph: str, kind: str, k_visits: int, capacity: int, *,
              fused: bool = False, alpha: float = 0.15, eps: float = 1e-4,
              schedule: str = "priority", seed: int = 0) -> tuple:
-    """The cache key: every parameter that reaches the traced program."""
+    """The cache key: every parameter that reaches the traced program,
+    including the identity of the session whose graph constants the
+    executable bakes in (:func:`session_uid`)."""
     return (str(graph), str(kind), int(k_visits), int(capacity),
-            bool(fused), float(alpha), float(eps), str(schedule), int(seed))
+            bool(fused), float(alpha), float(eps), str(schedule), int(seed),
+            session_uid(session))
 
 
 def build_warm_megastep(session, kind: str, capacity: int, *,
@@ -110,7 +141,7 @@ class MegastepCache:
                      k_visits: int = 64, fused: bool = False,
                      alpha: float = 0.15, eps: float = 1e-4,
                      schedule: str = "priority", seed: int = 0):
-        key = warm_key(graph, kind, k_visits, capacity, fused=fused,
+        key = warm_key(session, graph, kind, k_visits, capacity, fused=fused,
                        alpha=alpha, eps=eps, schedule=schedule, seed=seed)
         while True:
             with self._lock:

@@ -310,6 +310,14 @@ class GraphServer:
         """
         if name in self._sessions:
             raise ValueError(f"graph {name!r} already registered")
+        # validate everything before mutating server state or kicking off
+        # warm threads: a rejected register_graph must have no effect, so
+        # the caller's corrected retry doesn't hit "already registered"
+        kinds = self.prewarm if prewarm is None else tuple(prewarm)
+        for kind in kinds:
+            if kind not in SERVABLE_KINDS:
+                raise ValueError(f"prewarm kind must be one of "
+                                 f"{SERVABLE_KINDS}, got {kind!r}")
         if isinstance(graph_or_session, FPPSession):
             if plan_kw:
                 raise ValueError("plan_kw only applies when registering a "
@@ -319,14 +327,10 @@ class GraphServer:
             plan_kw.setdefault("num_queries", self.capacity)
             session = FPPSession(graph_or_session).plan(**plan_kw)
         self._sessions[name] = session
-        kinds = self.prewarm if prewarm is None else tuple(prewarm)
         cap0 = _planner.pow2_bucket(self.capacity,
                                     max_capacity=max(self.max_capacity,
                                                      self.capacity))
         for kind in kinds:
-            if kind not in SERVABLE_KINDS:
-                raise ValueError(f"prewarm kind must be one of "
-                                 f"{SERVABLE_KINDS}, got {kind!r}")
             self.cache.warm_async(session, name, kind, cap0,
                                   **self._warm_params(session, kind))
         return self
@@ -368,7 +372,7 @@ class GraphServer:
             # peek, don't build: pool creation happens under the server
             # lock (first submit), so a cold cache must not stall it —
             # the executor traces lazily in the pump lane instead
-            megastep = self.cache.peek(warm_key(graph, kind,
+            megastep = self.cache.peek(warm_key(session, graph, kind,
                                                 params["k_visits"], cap,
                                                 **{k: v for k, v
                                                    in params.items()
@@ -489,18 +493,28 @@ class GraphServer:
 
     def _police_pool(self, pool: _LanePool, now: float):
         """Reject every queued request in this pool whose deadline lapsed
-        (explicit expired response — never a silent drop)."""
+        (explicit expired response — never a silent drop).
+
+        Two phases: pull expired items out of every tenant heap *first*,
+        then reject.  ``_reject`` on a coalescing primary promotes a
+        follower via ``pool.enqueue`` — possibly into this very pool —
+        which would corrupt a heap still being iterated and let the
+        rebuild drop the promotion; rejecting only after the heaps are
+        rebuilt makes the promotion an ordinary push."""
+        expired: List[_Ticket] = []
         for tenant, heap in list(pool.queues.items()):
             keep = []
             for item in heap:
                 t = self._tickets[item[2]]
                 if self._expired(t, now):
-                    self._reject(t, now)
+                    expired.append(t)
                 else:
                     keep.append(item)
             if len(keep) != len(heap):
                 heapq.heapify(keep)
                 pool.queues[tenant] = keep
+        for t in expired:
+            self._reject(t, now)
 
     def _police_deadlines(self, now: float):
         for pool in self._pool_order:

@@ -474,6 +474,52 @@ def test_expired_dedup_primary_promotes_live_follower():
     assert out[blocker].status == "ok"
 
 
+def test_expired_primary_promotion_same_tenant_not_dropped():
+    """Regression: policing rebuilds the heap it sweeps, and rejecting an
+    expired coalescing primary promotes its follower into that same
+    tenant's heap (the common case — the same tenant submitted the
+    duplicate).  The promotion must land in the rebuilt heap, not be
+    dropped by it, and each expired primary must be rejected exactly
+    once even with several lapsing in one sweep."""
+    tick = [0.0]
+    g = grid2d(8, 8, seed=4)
+    srcs = _sources(g, 3, seed=27)
+    server = GraphServer(capacity=1, k_visits=16, clock=lambda: tick[0],
+                         autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    # occupy the single lane so everything below stays queued
+    blocker = server.submit(GraphRequest(kind="sssp", source=int(srcs[0]),
+                                         graph="g"))
+    doomed, saved = [], []
+    for s in srcs[1:]:
+        doomed.append(server.submit(GraphRequest(
+            kind="sssp", source=int(s), graph="g", deadline_s=5.0)))
+        saved.append(server.submit(GraphRequest(
+            kind="sssp", source=int(s), graph="g")))   # same tenant twin
+    tick[0] = 10.0                      # both primaries lapse while queued
+    out = server.serve()
+    for rid in doomed:
+        assert out[rid].status == "expired"
+    for rid in saved:
+        assert out[rid].status == "ok" and out[rid].values is not None
+    assert out[blocker].status == "ok"
+    assert server.pending == 0
+
+
+def test_register_graph_invalid_prewarm_has_no_effect():
+    """A register_graph rejected for a bad prewarm kind must leave no
+    trace: the corrected retry succeeds instead of hitting 'already
+    registered'."""
+    g = grid2d(8, 8, seed=4)
+    server = GraphServer(capacity=1, k_visits=16)
+    with pytest.raises(ValueError, match="prewarm kind"):
+        server.register_graph("g", g, prewarm=("sssp", "pagerank"),
+                              num_queries=1, block_size=16)
+    assert "g" not in server._sessions
+    server.register_graph("g", g, prewarm=("sssp",),
+                          num_queries=1, block_size=16)   # retry works
+
+
 def test_warm_cache_shared_across_servers_and_resizes():
     """A pow2 capacity bucket's megastep compiles once into the shared
     cache; a second server over the same session resizes into a cache
@@ -501,6 +547,31 @@ def test_warm_cache_shared_across_servers_and_resizes():
     assert stats["hits"] >= 1, stats            # twin's resize hit warmth
     # every compiled capacity is a pow2 bucket
     assert all(k[3] == pow2_bucket(k[3]) for k in server.cache._cache)
+
+
+def test_warm_cache_keys_by_session_not_graph_name():
+    """Two servers sharing one cache, each calling a *different* graph by
+    the same name: the second must never be handed the first's executable
+    (same structure, different weights — a collision would be silently
+    wrong values, not a shape error)."""
+    from repro.serve import MegastepCache
+    g1 = grid2d(8, 8, seed=1)
+    g2 = grid2d(8, 8, seed=2)           # same shape, different weights
+    src = int(_sources(g1, 1, seed=28)[0])
+    cache = MegastepCache()
+    s1 = GraphServer(capacity=2, k_visits=16, autoscaler=None, cache=cache)
+    s1.register_graph("default", g1, num_queries=2, block_size=16)
+    s1._warm_executable(s1._pool("default", "sssp"), 2)   # warm g1's key
+    s2 = GraphServer(capacity=2, k_visits=16, autoscaler=None, cache=cache)
+    s2.register_graph("default", g2, num_queries=2, block_size=16)
+    rid = s2.submit(GraphRequest(kind="sssp", source=src, graph="default"))
+    out = s2.serve()
+    expected = FPPSession(g2).plan(num_queries=2, block_size=16).run(
+        "sssp", [src])
+    np.testing.assert_array_equal(out[rid].values, expected.values[0])
+    # warming g2's pool lands a second entry, not a name-collision hit
+    s2._warm_executable(s2._pool("default", "sssp"), 2)
+    assert cache.stats()["size"] == 2
 
 
 # ------------------------------------------------------- planner dispatch
