@@ -5,7 +5,10 @@ one hot, one light — submit a mixed stream of SSSP and PPR requests against
 two registered graphs, and the server multiplexes them onto per-(graph,
 kind) lane pools with weighted-fair admission at megastep chunk boundaries.
 Shown both ways: the continuous engine (start / submit / result / shutdown,
-the production path) and the synchronous pump (serve(), the scripting path).
+the production path) and the synchronous pump (serve(), the scripting path)
+— plus both reuse tiers: a warm repeat of an already-answered source hits
+the result cache (cached=True, zero billed work), while twin in-flight
+requests on a fresh source coalesce onto one lane (coalesced=True).
 
     PYTHONPATH=src python examples/serve_graph.py
 """
@@ -58,18 +61,36 @@ def main():
 
     # --- the continuous engine: same server, background lanes -----------
     # submit() returns immediately from any thread; result() blocks until
-    # the delivery lane hands the response over.  Twin in-flight requests
-    # coalesce onto one lane (the second response carries coalesced=True).
+    # the delivery lane hands the response over.
     server.start()
+
+    # a warm repeat: road_src[0] was already answered above, so this hit
+    # comes from the result cache — same bits, zero billed work, no lane
     s = int(road_src[0])
-    r1 = server.submit(GraphRequest(kind="sssp", source=s, graph="road",
+    cold = next(r for r in ok if r.kind == "sssp" and r.source == s)
+    warm = server.result(server.submit(GraphRequest(
+        kind="sssp", source=s, graph="road", tenant="light")), timeout=60)
+    np.testing.assert_array_equal(warm.values, cold.values)
+    print(f"continuous: rid={warm.rid} cached="
+          f"{bool(warm.stats.get('cached'))} visits billed="
+          f"{warm.stats['visits']} latency="
+          f"{warm.stats['latency_s'] * 1e3:.1f} ms")
+
+    # twin *in-flight* requests on a never-served source instead coalesce
+    # onto one lane (the follower's response carries coalesced=True)
+    fresh = int(np.setdiff1d(np.flatnonzero(road.out_degree() > 0),
+                             road_src)[0])
+    r1 = server.submit(GraphRequest(kind="sssp", source=fresh, graph="road",
                                     tenant="hot"))
-    r2 = server.submit(GraphRequest(kind="sssp", source=s, graph="road",
+    r2 = server.submit(GraphRequest(kind="sssp", source=fresh, graph="road",
                                     tenant="light"))
     a, b = server.result(r1, timeout=60), server.result(r2, timeout=60)
     np.testing.assert_array_equal(a.values, b.values)
     print(f"continuous: rid={b.rid} coalesced={bool(b.stats.get('coalesced'))}"
           f" latency={b.stats['latency_s'] * 1e3:.1f} ms")
+    st = server.stats()
+    print(f"reuse: cache_hits={st['cache_hits']} coalesced={st['coalesced']} "
+          f"cache_bytes={st['cache_bytes']}")
     server.shutdown()
 
 

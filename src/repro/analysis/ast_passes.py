@@ -11,10 +11,11 @@ Two lints, both plain ``ast`` walks — no jax import:
                  ``# fppcheck: allow-assert`` excuse.
 
   ast.host-jnp   ``jnp.``/``jax.numpy`` calls inside host Python ``for``/
-                 ``while`` loops in ``core/``.  A jnp call per host
-                 iteration is a dispatch (and often a transfer) per
-                 iteration — the exact pattern the K-visit megastep exists
-                 to remove.  Loops inside nested ``def``/``lambda`` are
+                 ``while`` loops in ``core/`` and ``serve/``.  A jnp call
+                 per host iteration is a dispatch (and often a transfer)
+                 per iteration — the exact pattern the K-visit megastep
+                 exists to remove, and in the serving lanes a stall every
+                 tenant shares.  Loops inside nested ``def``/``lambda`` are
                  skipped (those are traced bodies, where jnp is the point),
                  as are scalar constructors like ``jnp.int32(0)`` and lines
                  carrying ``# fppcheck: allow-host-jnp``.
@@ -143,9 +144,22 @@ def _jnp_aliases(tree) -> set:
     return aliases
 
 
+#: Subtrees the host-jnp lint polices: the kernel/dataflow core plus the
+#: serving layer, whose admission/pump/delivery threads are exactly where
+#: a stray per-iteration dispatch would stall every tenant at once.
+HOST_JNP_SUBDIRS = ("src/repro/core", "src/repro/serve")
+
+
 def check_host_jnp_loops(ctx: PassContext) -> List[Finding]:
     findings = []
-    for path in _py_files(ctx.root, "src/repro/core"):
+    for sub in HOST_JNP_SUBDIRS:
+        findings.extend(_host_jnp_in(ctx, sub))
+    return findings
+
+
+def _host_jnp_in(ctx: PassContext, sub: str) -> List[Finding]:
+    findings = []
+    for path in _py_files(ctx.root, sub):
         text = path.read_text()
         tree = ast.parse(text, filename=str(path))
         aliases = _jnp_aliases(tree)

@@ -323,6 +323,29 @@ def autotune_block_size(session, kind: str, sources: np.ndarray,
     return int(best["block_size"]), rows
 
 
+#: default serving result-cache budget, in units of one single-lane HBM
+#: plane set (``MemoryModel.state_bytes`` at Q=1).  One cached entry costs
+#: roughly a third of a plane set (values [n] f32; ppr adds a residual
+#: plane), so 16 plane sets hold on the order of 25-50 hot answers — wide
+#: enough to cover a Zipf head, small next to the executor state itself.
+RESULT_CACHE_PLANE_SETS = 16
+
+
+def result_cache_budget(mem: MemoryModel, n_vertices: int, block_size: int,
+                        plane_sets: int = RESULT_CACHE_PLANE_SETS) -> int:
+    """Byte budget for the serving result cache (DESIGN.md §4.2).
+
+    Priced by the same §3.1 memory model that sizes everything else: a
+    small multiple (:data:`RESULT_CACHE_PLANE_SETS`) of one query lane's
+    padded HBM plane set for this graph.  ``GraphServer`` takes the max
+    over its registered graphs, so the cache scales with the largest
+    graph being served rather than a hardcoded byte count; an explicit
+    ``GraphServer(cache_bytes=...)`` replaces this default entirely.
+    """
+    return int(plane_sets) * mem.state_bytes(int(n_vertices), 1,
+                                             int(block_size))
+
+
 def autoscale_capacity(queue_depth: int, active: int, *,
                        mem: MemoryModel, n_vertices: int, block_size: int,
                        min_capacity: int = 1,

@@ -3,7 +3,9 @@
 ``engine.py`` (§4.1) serves LM decode via continuous batching;
 ``graph_server.py`` (§4.2) serves mixed graph-query traffic over the
 streaming megastep with concurrent admission/pump/delivery lanes
-(``dispatch.py``) and warm AOT-compiled megasteps (``compile_cache.py``).
+(``dispatch.py``), warm AOT-compiled megasteps (``compile_cache.py``),
+and a byte-budgeted LRU of completed result planes for hot-source reuse
+(``result_cache.py``).
 """
 from repro.serve.compile_cache import (MegastepCache,  # noqa
                                        build_warm_megastep, session_uid,
@@ -12,3 +14,5 @@ from repro.serve.engine import (ContinuousBatcher, Request,  # noqa
                                 make_decode_step, make_prefill_step)
 from repro.serve.graph_server import (GraphRequest, GraphResponse,  # noqa
                                       GraphServer, default_autoscaler)
+from repro.serve.result_cache import (CacheEntry, ResultCache,  # noqa
+                                      result_key)

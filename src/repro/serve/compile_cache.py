@@ -37,6 +37,7 @@ concurrent warmers), so a background warm thread never blocks admission.
 """
 from __future__ import annotations
 
+import collections
 import itertools
 import threading
 import time
@@ -111,21 +112,35 @@ def build_warm_megastep(session, kind: str, capacity: int, *,
 
 
 class MegastepCache:
-    """Thread-safe memo of warm megastep executables.
+    """Thread-safe LRU memo of warm megastep executables.
 
     ``get_or_build`` is the one entry point: a hit returns instantly, a
     miss compiles *outside* the lock while other keys stay available, and
     two threads racing on the same key compile once (the loser waits on
     the winner's in-flight event).  ``warm_async`` wraps it in a daemon
     thread for register-time prewarming that must not block registration.
+
+    ``max_entries`` bounds the memo: a long-lived multi-graph server (or a
+    ``bench_serve`` sweep re-registering graphs across points) would
+    otherwise accumulate one executable per distinct key forever.  The
+    default is generous — pow2 capacity snapping already keeps the live
+    key set logarithmic in load, so eviction only bites when graphs churn
+    — and every hit/peek refreshes recency, so what gets dropped is the
+    executable nothing has asked for longest (``evictions`` in
+    ``stats()`` counts the drops).
     """
 
-    def __init__(self):
+    def __init__(self, max_entries: int = 256):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self._lock = threading.Lock()
-        self._cache: Dict[tuple, object] = {}
+        self._cache: "collections.OrderedDict[tuple, object]" = \
+            collections.OrderedDict()
         self._inflight: Dict[tuple, threading.Event] = {}
+        self.max_entries = int(max_entries)
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self.compile_s = 0.0      # total seconds spent compiling
 
     def __len__(self) -> int:
@@ -133,9 +148,14 @@ class MegastepCache:
             return len(self._cache)
 
     def peek(self, key: tuple):
-        """The executable if already warm, else None; never compiles."""
+        """The executable if already warm, else None; never compiles.
+        A found key is refreshed — a peeked executable is about to be
+        injected into an executor, which is as live as a hit."""
         with self._lock:
-            return self._cache.get(key)
+            exe = self._cache.get(key)
+            if exe is not None:
+                self._cache.move_to_end(key)
+            return exe
 
     def get_or_build(self, session, graph: str, kind: str, capacity: int, *,
                      k_visits: int = 64, fused: bool = False,
@@ -147,6 +167,7 @@ class MegastepCache:
             with self._lock:
                 if key in self._cache:
                     self.hits += 1
+                    self._cache.move_to_end(key)
                     return self._cache[key]
                 ev = self._inflight.get(key)
                 if ev is None:
@@ -165,6 +186,10 @@ class MegastepCache:
                     eps=eps, seed=seed, k_visits=k_visits, fused=fused)
                 with self._lock:
                     self._cache[key] = exe
+                    self._cache.move_to_end(key)
+                    while len(self._cache) > self.max_entries:
+                        self._cache.popitem(last=False)
+                        self.evictions += 1
                     self.compile_s += time.perf_counter() - t0
                 return exe
             finally:
@@ -186,5 +211,6 @@ class MegastepCache:
     def stats(self) -> dict:
         with self._lock:
             return {"size": len(self._cache), "hits": self.hits,
-                    "misses": self.misses,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "max_entries": self.max_entries,
                     "compile_s": round(self.compile_s, 3)}

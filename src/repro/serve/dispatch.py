@@ -55,7 +55,10 @@ class PoolWorker(threading.Thread):
         srv, pool = self.server, self.pool
         while True:
             with srv._lock:
-                if not srv._running:
+                if not srv._running or pool.retired:
+                    # retired: update_graph replaced this pool's graph —
+                    # the pool was drained by contract, so exiting loses
+                    # nothing; fresh pools get fresh workers
                     return
                 now = srv.clock()
                 srv._police_pool(pool, now)
@@ -98,7 +101,13 @@ class DeliveryWorker(threading.Thread):
         self.q: queue.Queue = queue.Queue()
 
     def put(self, pool, qids):
-        self.q.put((pool, list(qids)))
+        self.q.put(("lanes", pool, list(qids)))
+
+    def put_cached(self, rid, entry):
+        """Queue one result-cache hit: same delivery lane, same
+        ``result()``/``poll()`` wake-up path as a lane-computed answer —
+        a cached response is distinguishable only by its stats."""
+        self.q.put(("cached", rid, entry))
 
     def stop(self):
         self.q.put(None)
@@ -109,6 +118,9 @@ class DeliveryWorker(threading.Thread):
             item = self.q.get()
             if item is None:
                 return
-            pool, qids = item
+            tag, a, b = item
             with srv._lock:
-                srv._deliver(pool, qids, srv.clock())
+                if tag == "cached":
+                    srv._finish_cached(a, b, srv.clock())
+                else:
+                    srv._deliver(a, b, srv.clock())

@@ -42,6 +42,17 @@ are rejected with an explicit ``status="expired"`` response, never
 silently dropped; an expired coalescing primary promotes its oldest
 live follower onto the backlog.
 
+*Completed* answers are reused too: a byte-budgeted LRU of finished
+result planes (serve/result_cache.py) is checked in ``submit`` **before**
+the dedup window — a repeat of a hot source that already finished is
+answered from the cache through the ordinary delivery lane (``cached:
+True``, zero billed visits/edges/host_syncs, exact queue wait) without
+ever touching a lane; ``_deliver`` populates the cache once per primary.
+``update_graph`` re-registers a name with new graph data and bumps its
+**epoch** — part of every cache key — so planes computed against the
+replaced graph can never be served (the staleness bound for dynamic
+graphs); ``result_cache=False`` disables the tier.
+
     server = GraphServer(capacity=8, prewarm=("sssp",))
     server.register_graph("road", road_csr)
     server.start()                            # spin up the three lanes
@@ -72,7 +83,8 @@ import numpy as np
 from repro.core.scheduler import PartitionScheduler
 from repro.fpp import planner as _planner
 from repro.fpp.session import FPPSession
-from repro.serve.compile_cache import MegastepCache, warm_key
+from repro.serve.compile_cache import MegastepCache, session_uid, warm_key
+from repro.serve.result_cache import CacheEntry, ResultCache, result_key
 
 SERVABLE_KINDS = ("sssp", "bfs", "ppr")
 
@@ -158,6 +170,8 @@ class _LanePool:
         self.queues: Dict[str, List[Tuple[float, int, int]]] = {}
         self.qid_rid: Dict[int, int] = {}      # executor qid -> server rid
         self.stamp: int = _IDLE_STAMP          # round backlog became non-empty
+        self.retired = False                   # set by update_graph; the
+        #                                        pool's worker exits on sight
         # the pump worker parks here while idle; submit() notifies.
         # Shares the server lock so wait/notify and backlog state agree.
         self.cv = threading.Condition(lock or threading.RLock())
@@ -238,6 +252,14 @@ class GraphServer:
     ``prewarm`` is the default set of kinds whose megasteps
     ``register_graph`` AOT-compiles in the background; ``idle_wait_s`` is
     how long an idle pump worker parks between deadline checks.
+
+    Result-cache knobs: ``result_cache`` is True (default — a private
+    :class:`ResultCache`), False/None (disable the tier), or a
+    :class:`ResultCache` instance to share completed planes across
+    servers; ``cache_bytes`` fixes its byte budget — by default each
+    ``register_graph`` grows the budget to
+    ``planner.result_cache_budget`` for the largest graph served (a
+    small multiple of one query lane's §3.1 plane set).
     """
 
     def __init__(self, *, capacity: int = 8, max_capacity: int = 64,
@@ -249,6 +271,8 @@ class GraphServer:
                  seed: int = 0,
                  fused: object = "auto", dedup: bool = True,
                  cache: Optional[MegastepCache] = None,
+                 result_cache: object = True,
+                 cache_bytes: Optional[int] = None,
                  prewarm: Iterable[str] = (),
                  idle_wait_s: float = 0.05):
         if capacity < 1:
@@ -265,6 +289,15 @@ class GraphServer:
         self.fused = fused
         self.dedup = bool(dedup)
         self.cache = cache if cache is not None else MegastepCache()
+        if isinstance(result_cache, ResultCache):
+            self.result_cache: Optional[ResultCache] = result_cache
+        elif result_cache:
+            self.result_cache = ResultCache()
+        else:
+            self.result_cache = None
+        self.cache_bytes = None if cache_bytes is None else int(cache_bytes)
+        if self.result_cache is not None and self.cache_bytes is not None:
+            self.result_cache.reserve(self.cache_bytes)
         self.prewarm = tuple(prewarm)
         self.idle_wait_s = float(idle_wait_s)
         self.rounds = 0
@@ -275,6 +308,9 @@ class GraphServer:
         self._weights: Dict[str, float] = {}
         self._vtime: Dict[str, float] = {}
         self._tickets: Dict[int, _Ticket] = {}
+        self._epochs: Dict[str, int] = {}      # graph name -> update epoch
+        self._coalesced_total = 0              # follower rides booked
+        self._fanout_total = 0                 # follower responses fanned out
         self._arb = PartitionScheduler(schedule, 0, seed)
         self._next_rid = 0
         self._seq = 0
@@ -318,21 +354,91 @@ class GraphServer:
             if kind not in SERVABLE_KINDS:
                 raise ValueError(f"prewarm kind must be one of "
                                  f"{SERVABLE_KINDS}, got {kind!r}")
-        if isinstance(graph_or_session, FPPSession):
-            if plan_kw:
-                raise ValueError("plan_kw only applies when registering a "
-                                 "raw graph, not a planned FPPSession")
-            session = graph_or_session
-        else:
-            plan_kw.setdefault("num_queries", self.capacity)
-            session = FPPSession(graph_or_session).plan(**plan_kw)
+        session = self._build_session(graph_or_session, plan_kw)
         self._sessions[name] = session
+        self._epochs.setdefault(name, 0)
+        self._reserve_cache_budget(session)
         cap0 = _planner.pow2_bucket(self.capacity,
                                     max_capacity=max(self.max_capacity,
                                                      self.capacity))
         for kind in kinds:
             self.cache.warm_async(session, name, kind, cap0,
                                   **self._warm_params(session, kind))
+        return self
+
+    def _build_session(self, graph_or_session, plan_kw: dict) -> FPPSession:
+        if isinstance(graph_or_session, FPPSession):
+            if plan_kw:
+                raise ValueError("plan_kw only applies when registering a "
+                                 "raw graph, not a planned FPPSession")
+            return graph_or_session
+        plan_kw.setdefault("num_queries", self.capacity)
+        return FPPSession(graph_or_session).plan(**plan_kw)
+
+    def _reserve_cache_budget(self, session: FPPSession):
+        """Grow the result cache's byte budget for this graph: the explicit
+        ``cache_bytes`` if given, else the planner's plane-set default."""
+        if self.result_cache is None:
+            return
+        budget = (self.cache_bytes if self.cache_bytes is not None
+                  else _planner.result_cache_budget(
+                      session.mem, session.graph.n,
+                      session.current_plan.block_size))
+        self.result_cache.reserve(budget)
+
+    def update_graph(self, name: str, graph_or_session,
+                     prewarm: Optional[Iterable[str]] = None, **plan_kw):
+        """Re-register ``name`` with new graph data; requests keep the name.
+
+        The dynamic-graph path: the registered name's **epoch** is bumped,
+        and since the epoch is part of every result-cache key, planes
+        computed against the replaced graph can never be served again —
+        staleness is bounded by the update, not by TTL guesswork (the old
+        session's entries are also dropped eagerly to free their bytes).
+        The name's lane pools are retired (their workers exit; fresh pools
+        build from the new session on the next request) and the new
+        session's megasteps prewarm exactly as at first registration.
+
+        Only legal while the name has no queued or in-flight work — an
+        update must never splice two different graphs into one answer, so
+        drain (``wait_drained``) before updating.  Validation happens
+        before any mutation: a rejected update leaves the old graph
+        serving.  Chainable.
+        """
+        with self._lock:
+            if name not in self._sessions:
+                raise ValueError(f"graph {name!r} not registered "
+                                 f"(have {sorted(self._sessions)}); use "
+                                 f"register_graph for new names")
+            kinds = self.prewarm if prewarm is None else tuple(prewarm)
+            for kind in kinds:
+                if kind not in SERVABLE_KINDS:
+                    raise ValueError(f"prewarm kind must be one of "
+                                     f"{SERVABLE_KINDS}, got {kind!r}")
+            for (g, kind), pool in self._pools.items():
+                if g == name and (pool.queued or pool.active):
+                    raise RuntimeError(
+                        f"cannot update graph {name!r} with requests "
+                        f"queued or in flight on pool ({g}, {kind}); "
+                        f"drain first (wait_drained)")
+            session = self._build_session(graph_or_session, plan_kw)
+            old = self._sessions[name]
+            self._epochs[name] += 1
+            if self.result_cache is not None:
+                self.result_cache.invalidate_session(session_uid(old))
+            self._sessions[name] = session
+            self._reserve_cache_budget(session)
+            for key in [k for k in self._pools if k[0] == name]:
+                pool = self._pools.pop(key)
+                pool.retired = True
+                self._pool_order.remove(pool)
+                pool.cv.notify_all()
+            cap0 = _planner.pow2_bucket(
+                self.capacity, max_capacity=max(self.max_capacity,
+                                                self.capacity))
+            for kind in kinds:
+                self.cache.warm_async(session, name, kind, cap0,
+                                      **self._warm_params(session, kind))
         return self
 
     def register_tenant(self, name: str, weight: float = 1.0):
@@ -391,6 +497,14 @@ class GraphServer:
     def _dedup_key(self, req: GraphRequest) -> tuple:
         return (req.graph, req.kind, int(req.source), self.alpha, self.eps)
 
+    def _result_key(self, req: GraphRequest) -> tuple:
+        """The result-cache key for this request: the dedup identity with
+        the graph name replaced by (session uid, epoch) — value identity
+        that survives name reuse and bounds staleness across updates."""
+        return result_key(session_uid(self._sessions[req.graph]),
+                          self._epochs[req.graph], req.kind, req.source,
+                          self.alpha, self.eps)
+
     def submit(self, req: GraphRequest) -> int:
         """Book one request; returns its rid (``result``/``poll`` for the
         response).  Thread-safe and device-free: the heavy lifting happens
@@ -414,12 +528,22 @@ class GraphServer:
                         submit_round=self.rounds)
             self._tickets[rid] = t
             self._outstanding += 1
+            if self.result_cache is not None:
+                # completed-answer reuse, checked BEFORE the dedup window:
+                # cache covers finished hot sources, dedup the in-flight
+                # gap.  A hit never touches a lane — it rides the delivery
+                # lane so result()/poll() semantics are unchanged.
+                entry = self.result_cache.get(self._result_key(req))
+                if entry is not None:
+                    self._queue_cached(rid, entry)
+                    return rid
             if self.dedup:
                 primary = self._dedup.get(self._dedup_key(req))
                 if primary is not None:
                     # ride the in-flight twin's lane; answer fans out at
                     # delivery with this request billed the same work
                     self._followers.setdefault(primary, []).append(rid)
+                    self._coalesced_total += 1
                     return rid
                 self._dedup[self._dedup_key(req)] = rid
             pool = self._pool(req.graph, req.kind)
@@ -565,6 +689,33 @@ class GraphServer:
         self._outstanding = max(0, self._outstanding - 1)
         self._resp_cv.notify_all()
 
+    def _queue_cached(self, rid: int, entry: CacheEntry):
+        """Route a cache hit through the delivery lane (inline when the
+        lanes aren't running — the synchronous path's fallback, matching
+        ``_queue_delivery``)."""
+        d = self._delivery
+        if d is not None:
+            d.put_cached(rid, entry)
+        else:
+            self._finish_cached(rid, entry, self.clock())
+
+    def _finish_cached(self, rid: int, entry: CacheEntry, now: float):
+        """Build and store the response for one cache hit (under the
+        server lock).  Zero billed visits/edges/host_syncs — no lane ever
+        ran — but exact queue wait: the time from submit until the
+        delivery lane got to it."""
+        t = self._tickets[rid]
+        self._finish(GraphResponse(
+            rid=rid, tenant=t.req.tenant, graph=t.req.graph,
+            kind=t.req.kind, source=t.req.source, status="ok",
+            values=entry.values, residual=entry.residual, stats={
+                "visits": 0, "edges": 0.0, "host_syncs": 0,
+                "queue_wait_s": now - t.submit_t,
+                "queue_wait_rounds": self.rounds - t.submit_round,
+                "latency_s": now - t.submit_t,
+                "cached": True,
+            }))
+
     def _deliver(self, pool: _LanePool, qids: Iterable[int], now: float):
         """Turn finished executor lanes into responses (+ dedup fan-out)."""
         for qid in qids:
@@ -587,6 +738,16 @@ class GraphServer:
             followers = self._followers.pop(rid, [])
             if followers:
                 stats["fanout"] = len(followers)
+                self._fanout_total += len(followers)
+            if (self.result_cache is not None
+                    and self._sessions.get(pool.graph) is pool.session):
+                # populate once per primary — fan-out followers below ride
+                # the same planes; the session-identity guard means a pool
+                # that somehow outlived an update_graph can never poison
+                # the new epoch (update_graph refuses in-flight work, so
+                # this is belt and braces)
+                self.result_cache.put(self._result_key(t.req),
+                                      q.values, q.residual)
             self._finish(GraphResponse(
                 rid=rid, tenant=t.req.tenant, graph=pool.graph,
                 kind=pool.kind, source=t.req.source, status="ok",
@@ -837,8 +998,16 @@ class GraphServer:
         return self.responses.get(rid)
 
     def stats(self) -> dict:
-        """A serving snapshot: per-pool occupancy and the compile cache."""
+        """A serving snapshot: per-pool occupancy, both cache tiers, and
+        the flat reuse counters — ``cache_*`` (result-cache hits, misses,
+        evictions, resident bytes), ``coalesced``/``fanout`` (dedup
+        totals) — so ``bench_serve.py`` and operators read one dict
+        instead of poking server internals."""
         with self._lock:
+            rc = (self.result_cache.stats() if self.result_cache is not None
+                  else {"entries": 0, "bytes": 0, "budget_bytes": 0,
+                        "hits": 0, "misses": 0, "evictions": 0,
+                        "invalidations": 0})
             return {
                 "running": self._running,
                 "rounds": self.rounds,
@@ -849,5 +1018,16 @@ class GraphServer:
                     "visits": p.exec.visits,
                     "host_syncs": p.exec.host_syncs,
                 } for p in self._pool_order},
+                "epochs": dict(self._epochs),
+                "cache_hits": rc["hits"],
+                "cache_misses": rc["misses"],
+                "cache_evictions": rc["evictions"],
+                "cache_bytes": rc["bytes"],
+                "coalesced": self._coalesced_total,
+                "fanout": self._fanout_total,
+                "result_cache": rc,
+                "compile_cache": self.cache.stats(),
+                # legacy alias (pre-result-cache callers read the compile
+                # cache under "cache")
                 "cache": self.cache.stats(),
             }

@@ -83,6 +83,28 @@ def test_jnp_in_host_loop_caught(tmp_path):
     assert "jnp.add" in findings[0].message
 
 
+def test_jnp_in_host_loop_caught_under_serve(tmp_path):
+    # the serving lanes are host-side by design (admission / delivery /
+    # result cache) — a per-iteration dispatch there stalls every tenant,
+    # so the lint polices serve/ with the same rules as core/
+    root = _mini_repo(tmp_path)
+    (root / "src" / "repro" / "serve").mkdir()
+    (root / "src" / "repro" / "serve" / "lane.py").write_text(
+        textwrap.dedent("""\
+            import jax.numpy as jnp
+
+            def drain(batches):
+                out = []
+                while batches:
+                    out.append(jnp.stack(batches.pop()))   # flagged
+                    out.append(jnp.asarray(0))             # ctor: fine
+                return out
+        """))
+    findings = check_host_jnp_loops(PassContext(root=root))
+    assert [f.location for f in findings] == ["src/repro/serve/lane.py:6"]
+    assert "jnp.stack" in findings[0].message
+
+
 # ------------------------------------------------------------------ docs
 
 

@@ -141,7 +141,10 @@ def test_late_joining_tenant_neither_starved_nor_monopolist():
     hot backlog)."""
     g = grid2d(8, 8, seed=4)
     srcs = _sources(g, 10, seed=15)
-    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    # result_cache off: cold reuses sources hot already finished, and a
+    # cache hit skips admission entirely — this test is about admission
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None,
+                         result_cache=False)
     server.register_graph("g", g, num_queries=1, block_size=16)
     hot = [server.submit(GraphRequest(kind="sssp", source=int(srcs[i % 10]),
                                       graph="g", tenant="hot"))

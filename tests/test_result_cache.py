@@ -1,0 +1,376 @@
+"""The serving result-cache tier (DESIGN.md §4.2, serve/result_cache.py).
+
+What answer reuse must never change: answers.  A cache hit returns the
+*same* plane the populating response carried — bit-identical to a fresh
+``FPPSession.run`` for every kind, because the entry IS a lane-computed
+answer (minplus kinds are exactness-pinned, and a ppr hit is exact
+against its own cold twin by construction: same plane, same bits).
+
+What it must additionally guarantee, pinned here:
+  * hits are visible and billed honestly: ``cached: True``, zero
+    visits/edges/host_syncs, exact queue wait; ``result()``/``poll()``
+    behave exactly as for lane-computed answers;
+  * ``update_graph`` bumps the name's epoch, so planes computed against
+    the replaced graph are unservable (the staleness bound) and the new
+    graph's answers are correct;
+  * the byte budget holds: exact per-entry accounting, LRU eviction
+    order, oversized entries refused rather than flushing the cache;
+  * the warm megastep cache is LRU-bounded too (``max_entries``).
+"""
+import numpy as np
+import pytest
+
+from repro.fpp import FPPSession, MemoryModel
+from repro.fpp.planner import result_cache_budget
+from repro.graphs.generators import grid2d, rmat
+from repro.serve import (CacheEntry, GraphRequest, GraphServer, MegastepCache,
+                         ResultCache, result_key)
+from repro.serve.compile_cache import session_uid
+
+
+def _sources(g, k, seed=0):
+    cand = np.flatnonzero(g.out_degree() > 0)
+    return np.random.default_rng(seed).choice(cand, size=k, replace=False)
+
+
+# ------------------------------------------------------------ unit: cache
+
+
+def _entry_arrays(nbytes, seed=0):
+    """A float64 plane of exactly ``nbytes`` bytes."""
+    return np.random.default_rng(seed).random(nbytes // 8)
+
+
+def test_lru_eviction_order_and_recency_refresh():
+    cache = ResultCache(budget_bytes=3 * 800)
+    for i in range(3):
+        assert cache.put(("s", 0, "sssp", i, 0.15, 1e-4),
+                         _entry_arrays(800, seed=i))
+    # touch key 0: it becomes most-recent, so key 1 is now LRU
+    assert cache.get(("s", 0, "sssp", 0, 0.15, 1e-4)) is not None
+    assert cache.put(("s", 0, "sssp", 3, 0.15, 1e-4), _entry_arrays(800))
+    assert cache.get(("s", 0, "sssp", 1, 0.15, 1e-4)) is None   # evicted
+    assert cache.get(("s", 0, "sssp", 0, 0.15, 1e-4)) is not None
+    assert cache.get(("s", 0, "sssp", 2, 0.15, 1e-4)) is not None
+    s = cache.stats()
+    assert s["evictions"] == 1 and s["entries"] == 3
+    assert s["bytes"] == 3 * 800 <= s["budget_bytes"]
+
+
+def test_byte_budget_exact_accounting_and_oversize_refused():
+    cache = ResultCache(budget_bytes=1000)
+    vals, res = _entry_arrays(400), _entry_arrays(400, seed=1)
+    assert cache.put(("a",), vals, res)
+    assert cache.bytes == vals.nbytes + res.nbytes == 800
+    # an entry bigger than the whole budget must not flush the hot one
+    assert not cache.put(("b",), _entry_arrays(1600))
+    assert cache.get(("a",)) is not None
+    # same-key refresh replaces, never double-counts
+    assert cache.put(("a",), _entry_arrays(800, seed=2))
+    assert cache.bytes == 800 and len(cache) == 1
+
+
+def test_invalidate_session_frees_bytes():
+    cache = ResultCache(budget_bytes=10_000)
+    cache.put(result_key(7, 0, "sssp", 1, 0.15, 1e-4), _entry_arrays(160))
+    cache.put(result_key(7, 0, "sssp", 2, 0.15, 1e-4), _entry_arrays(160))
+    cache.put(result_key(8, 0, "sssp", 1, 0.15, 1e-4), _entry_arrays(160))
+    assert cache.invalidate_session(7) == 2
+    assert cache.bytes == 160 and len(cache) == 1
+    assert cache.get(result_key(8, 0, "sssp", 1, 0.15, 1e-4)) is not None
+    assert cache.stats()["invalidations"] == 2
+
+
+def test_cached_arrays_are_frozen():
+    cache = ResultCache(budget_bytes=10_000)
+    vals = _entry_arrays(160)
+    cache.put(("k",), vals)
+    hit = cache.get(("k",))
+    assert hit.values is vals          # reuse, not a copy
+    with pytest.raises(ValueError):
+        hit.values[0] = 99.0           # mutation fails loudly
+
+
+def test_reserve_grows_never_shrinks():
+    cache = ResultCache(budget_bytes=100)
+    assert cache.reserve(500) == 500
+    assert cache.reserve(50) == 500
+
+
+# --------------------------------------------------------- server: parity
+
+
+@pytest.mark.parametrize("kind", ["sssp", "bfs", "ppr"])
+def test_cached_hit_bit_identical_to_fresh_run(kind):
+    """The bit-parity contract: a warm repeat returns the same plane the
+    cold request computed — which is itself bit-identical to
+    ``session.run`` — so hit bits == fresh bits, minplus and push alike."""
+    g = grid2d(12, 12, seed=3)
+    srcs = _sources(g, 3, seed=11)
+    sess = FPPSession(g).plan(num_queries=3, block_size=32)
+    one = sess.run(kind, srcs)
+    server = GraphServer(capacity=3, k_visits=16)
+    server.register_graph("g", sess)
+    cold = [server.submit(GraphRequest(kind=kind, source=int(s), graph="g"))
+            for s in srcs]
+    server.serve()
+    warm = [server.submit(GraphRequest(kind=kind, source=int(s), graph="g"))
+            for s in srcs]
+    out = server.serve()
+    for i, (c, w) in enumerate(zip(cold, warm)):
+        assert out[w].status == "ok"
+        assert out[w].stats.get("cached") is True
+        assert not out[c].stats.get("cached")
+        np.testing.assert_array_equal(out[w].values, one.values[i],
+                                      err_msg=kind)
+        np.testing.assert_array_equal(out[w].values, out[c].values)
+        if kind == "ppr":
+            np.testing.assert_array_equal(out[w].residual, one.residual[i])
+        # a hit never touched a lane: zero billed work, but honest waits
+        assert out[w].stats["visits"] == 0
+        assert out[w].stats["edges"] == 0.0
+        assert out[w].stats["host_syncs"] == 0
+        assert out[w].stats["queue_wait_s"] >= 0.0
+    s = server.stats()
+    assert s["cache_hits"] == 3 and s["cache_misses"] == 3
+    assert s["cache_bytes"] > 0
+
+
+def test_hit_skips_the_lane_entirely():
+    g = grid2d(10, 10, seed=6)
+    src = int(_sources(g, 1, seed=12)[0])
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=32)
+    r1 = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    r2 = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    assert server.poll(r2).stats.get("cached") is True
+    np.testing.assert_array_equal(server.poll(r2).values,
+                                  server.poll(r1).values)
+    # the executor only ever saw the cold query
+    assert server._pools[("g", "sssp")].exec._next_qid == 1
+
+
+def test_result_and_poll_parity_on_hits_through_running_lanes():
+    """A hit rides the delivery lane: blocking ``result()`` and
+    ``poll()`` behave exactly as for a lane-computed answer."""
+    g = grid2d(10, 10, seed=6)
+    src = int(_sources(g, 1, seed=13)[0])
+    server = GraphServer(capacity=2, k_visits=16, autoscaler=None)
+    server.register_graph("g", g, num_queries=2, block_size=32)
+    server.start()
+    try:
+        cold = server.result(server.submit(
+            GraphRequest(kind="sssp", source=src, graph="g")), timeout=120)
+        rid = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+        warm = server.result(rid, timeout=120)
+        assert warm.status == "ok" and warm.stats.get("cached") is True
+        np.testing.assert_array_equal(warm.values, cold.values)
+        assert server.poll(rid) is warm
+        assert server.wait_drained(timeout=10)
+    finally:
+        server.shutdown()
+
+
+def test_result_cache_off_recomputes():
+    g = grid2d(8, 8, seed=4)
+    src = int(_sources(g, 1, seed=14)[0])
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None,
+                         result_cache=False)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    r2 = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    assert not server.poll(r2).stats.get("cached")
+    assert server._pools[("g", "sssp")].exec._next_qid == 2
+    assert server.stats()["cache_hits"] == 0
+
+
+# ----------------------------------------------------- server: invalidation
+
+
+def test_update_graph_epoch_invalidates_and_serves_new_answers():
+    """The staleness bound: after ``update_graph`` the same (kind, source)
+    is a miss, and the recomputed answer matches a fresh run on the NEW
+    graph — never the cached plane of the old one."""
+    g_old = grid2d(10, 10, seed=6)
+    g_new = grid2d(10, 10, seed=60)     # same n, different weights
+    src = int(_sources(g_old, 1, seed=15)[0])
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    server.register_graph("g", g_old, num_queries=1, block_size=32)
+    r1 = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    old_vals = server.poll(r1).values
+
+    server.update_graph("g", g_new, num_queries=1, block_size=32)
+    assert server.stats()["epochs"]["g"] == 1
+    r2 = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    fresh = server.poll(r2)
+    assert not fresh.stats.get("cached")         # post-update hit is a miss
+    want = FPPSession(g_new).plan(num_queries=1, block_size=32).run(
+        "sssp", np.array([src]))
+    np.testing.assert_array_equal(fresh.values, want.values[0])
+    assert not np.array_equal(fresh.values, old_vals)
+    # the old session's entries were dropped eagerly, the new one cached
+    r3 = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    assert server.poll(r3).stats.get("cached") is True
+    np.testing.assert_array_equal(server.poll(r3).values, want.values[0])
+    assert server.stats()["result_cache"]["invalidations"] >= 1
+
+
+def test_update_graph_same_session_epoch_still_invalidates():
+    """Even re-registering the *same session object* (uid unchanged —
+    e.g. graph weights mutated in place) bumps the epoch, so pre-update
+    planes cannot be served."""
+    g = grid2d(8, 8, seed=4)
+    src = int(_sources(g, 1, seed=16)[0])
+    sess = FPPSession(g).plan(num_queries=1, block_size=16)
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    server.register_graph("g", sess)
+    server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    server.update_graph("g", sess)
+    r2 = server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    assert not server.poll(r2).stats.get("cached")
+
+
+def test_update_graph_validation():
+    g = grid2d(8, 8, seed=4)
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    with pytest.raises(ValueError, match="not registered"):
+        server.update_graph("nope", g, num_queries=1, block_size=16)
+    server.register_graph("g", g, num_queries=1, block_size=16)
+    src = int(_sources(g, 1, seed=17)[0])
+    server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    with pytest.raises(RuntimeError, match="drain first"):
+        server.update_graph("g", g, num_queries=1, block_size=16)
+    server.serve()                      # drained: now the update is legal
+    server.update_graph("g", g, num_queries=1, block_size=16)
+    assert server.stats()["epochs"]["g"] == 1
+
+
+# ----------------------------------------------------- server: byte budget
+
+
+def test_server_cache_bytes_budget_enforced():
+    """A budget sized for ~one plane holds one entry: the second distinct
+    source evicts the first (LRU), and the counters say so."""
+    g = grid2d(10, 10, seed=6)
+    srcs = _sources(g, 2, seed=18)
+    sess = FPPSession(g).plan(num_queries=1, block_size=32)
+    one_plane = sess.run("sssp", srcs[:1]).values[0].nbytes
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None,
+                         cache_bytes=int(one_plane * 1.5))
+    server.register_graph("g", sess)
+    for s in srcs:
+        server.submit(GraphRequest(kind="sssp", source=int(s), graph="g"))
+        server.serve()
+    s = server.stats()
+    assert s["result_cache"]["entries"] == 1
+    assert s["cache_evictions"] == 1
+    assert s["cache_bytes"] <= int(one_plane * 1.5)
+    # srcs[1] is resident, srcs[0] was evicted
+    r_hit = server.submit(GraphRequest(kind="sssp", source=int(srcs[1]),
+                                       graph="g"))
+    server.serve()
+    assert server.poll(r_hit).stats.get("cached") is True
+
+
+def test_default_budget_comes_from_planner():
+    g = rmat(7, 4, seed=7)
+    sess = FPPSession(g).plan(num_queries=2, block_size=32)
+    server = GraphServer(capacity=2, k_visits=16)
+    server.register_graph("g", sess)
+    want = result_cache_budget(sess.mem, sess.graph.n,
+                               sess.current_plan.block_size)
+    assert server.result_cache.budget_bytes == want
+    assert want == 16 * sess.mem.state_bytes(sess.graph.n, 1,
+                                             sess.current_plan.block_size)
+
+
+def test_shared_result_cache_across_servers():
+    """A shared cache serves one server's completed plane to another
+    server of the *same session* — and keys by session uid, so a
+    different graph under the same registered name can never hit."""
+    g = grid2d(10, 10, seed=6)
+    src = int(_sources(g, 1, seed=19)[0])
+    sess = FPPSession(g).plan(num_queries=1, block_size=32)
+    shared = ResultCache()
+    s1 = GraphServer(capacity=1, k_visits=16, autoscaler=None,
+                     result_cache=shared)
+    s1.register_graph("g", sess)
+    s1.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    s1.serve()
+    s2 = GraphServer(capacity=1, k_visits=16, autoscaler=None,
+                     result_cache=shared)
+    s2.register_graph("g", sess)        # same session -> same uid
+    r = s2.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    s2.serve()
+    assert s2.poll(r).stats.get("cached") is True
+    # same name, different graph: a different session uid, so no hit
+    other = FPPSession(grid2d(10, 10, seed=61)).plan(num_queries=1,
+                                                     block_size=32)
+    s3 = GraphServer(capacity=1, k_visits=16, autoscaler=None,
+                     result_cache=shared)
+    s3.register_graph("g", other)
+    r3 = s3.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    s3.serve()
+    assert not s3.poll(r3).stats.get("cached")
+
+
+# ------------------------------------------------------- server: counters
+
+
+def test_stats_surface_cache_and_dedup_counters():
+    g = grid2d(10, 10, seed=6)
+    src = int(_sources(g, 1, seed=20)[0])
+    server = GraphServer(capacity=1, k_visits=16, autoscaler=None)
+    server.register_graph("g", g, num_queries=1, block_size=32)
+    # three in-flight twins: one primary + two coalesced followers
+    for t in ("a", "b", "c"):
+        server.submit(GraphRequest(kind="sssp", source=src, graph="g",
+                                   tenant=t))
+    server.serve()
+    # one warm repeat: a result-cache hit
+    server.submit(GraphRequest(kind="sssp", source=src, graph="g"))
+    server.serve()
+    s = server.stats()
+    assert s["coalesced"] == 2 and s["fanout"] == 2
+    assert s["cache_hits"] == 1
+    assert s["cache_misses"] >= 1
+    assert s["cache_evictions"] == 0
+    assert s["cache_bytes"] == s["result_cache"]["bytes"] > 0
+    assert s["compile_cache"]["max_entries"] >= 1
+    assert s["cache"] == s["compile_cache"]    # legacy alias
+
+
+# ------------------------------------------------- megastep cache bounding
+
+
+def test_megastep_cache_lru_eviction():
+    cache = MegastepCache(max_entries=2)
+    g = grid2d(6, 6, seed=1)
+    sess = FPPSession(g).plan(num_queries=1, block_size=16)
+    for cap in (1, 2):
+        cache.get_or_build(sess, "g", "sssp", cap, k_visits=8)
+    assert len(cache) == 2
+    # touch cap=1 so cap=2 is LRU, then insert a third capacity
+    k1 = cache.get_or_build(sess, "g", "sssp", 1, k_visits=8)
+    cache.get_or_build(sess, "g", "sssp", 4, k_visits=8)
+    st = cache.stats()
+    assert st["size"] == 2 and st["evictions"] == 1
+    # cap=1 survived (refreshed); cap=2 was dropped and would recompile
+    assert cache.get_or_build(sess, "g", "sssp", 1, k_visits=8) is k1
+    before = st["misses"]
+    cache.get_or_build(sess, "g", "sssp", 2, k_visits=8)
+    assert cache.stats()["misses"] == before + 1
+
+
+def test_megastep_cache_rejects_bad_max_entries():
+    with pytest.raises(ValueError, match="max_entries"):
+        MegastepCache(max_entries=0)
