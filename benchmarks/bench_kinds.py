@@ -1,0 +1,90 @@
+"""New-kind microbench: cc / kreach / rw rows on the ingested fixture.
+
+The visit-algebra workload matrix grew past the paper's sssp/bfs/ppr
+trio — connected components (zero-weight min-label propagation with the
+strict-pending rule), hop-budgeted weighted k-reach (lex-(hops, dist)
+packed into one f32 plane), and batched random-walk sampling (a
+per-(source, step) tape, no algebra at all).  This module gives each new
+kind a measured row per backend so BENCH_engine.json carries their perf
+trajectory next to the dispatch and serving sections, and so
+``planner.auto_fused`` has somewhere to read yardsticks from when a
+fused variant of these kinds lands.
+
+The quick graph is deliberately the committed SNAP-style fixture
+(``build_suite("snap-tiny")`` -> ``graphs.io.load_edge_list``): the rows
+measure the kinds on *really ingested* data — sparse ids compacted on
+load, text weights, a hub-heavy degree tail the degree-aware planner has
+to size around — not on a friendly generator.  Each timed run is also
+cross-checked (cc against the union-find oracle, kreach/rw engine vs
+baselines bitwise), so a row can never be fast-but-wrong.
+
+Rows mirror into the ``bench_kinds`` section of the top-level
+``BENCH_engine.json`` (CI asserts every kind x backend cell is present).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import mirror_engine_rows, rnd, sources_for, timed
+from repro.core import oracles
+from repro.fpp import FPPSession
+from repro.graphs.generators import build_suite
+
+COLUMNS = ["kind", "backend", "graph", "queries", "runtime_s", "qps",
+           "visits", "edges_per_q"]
+
+KINDS = ("cc", "kreach", "rw")
+BACKENDS = ("engine", "baselines")
+K_HOPS = 4
+WALK_LEN = 16
+
+
+def _kwargs(kind):
+    if kind == "kreach":
+        return {"k": K_HOPS}
+    if kind == "rw":
+        return {"length": WALK_LEN, "seed": 0}
+    return {}
+
+
+def run(quick: bool = True):
+    gname = "snap-tiny" if quick else "social-lj"
+    g = build_suite(gname)
+    Q = 8 if quick else 32
+    # planner default: degree-aware sizing sees the fixture's hub tail
+    sess = FPPSession(g).plan(num_queries=Q)
+    srcs = sources_for(g, Q, seed=5)
+    want_cc = oracles.connected_components(g).astype(np.float32)
+
+    rows = []
+    for kind in KINDS:
+        kw = _kwargs(kind)
+        results = {}
+        for backend in BACKENDS:
+            sess.run(kind, srcs, backend=backend, **kw)   # warm the jits
+            res, secs = timed(sess.run, kind, srcs, backend=backend,
+                              repeats=2, **kw)
+            results[backend] = res
+            rows.append({
+                "kind": kind, "backend": backend, "graph": gname,
+                "queries": len(srcs),
+                "runtime_s": rnd(secs, 4),
+                "qps": rnd(len(srcs) / max(secs, 1e-9), 1),
+                "visits": res.stats.get("visits", 0),
+                "edges_per_q": rnd(float(np.mean(res.edges_processed)), 1),
+            })
+            if kind == "cc":
+                # rows must stay honest: every backend's labels are the
+                # union-find labels, bitwise, on every lane
+                assert all(np.array_equal(results[backend].values[q], want_cc)
+                           for q in range(len(srcs))), backend
+        # kreach/rw: deterministic cross-backend bit-parity
+        a, b = (results[bk].values for bk in BACKENDS)
+        assert np.array_equal(a, b), kind
+    mirror_engine_rows("bench_kinds", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_table
+    print(fmt_table(run(quick=True), COLUMNS))

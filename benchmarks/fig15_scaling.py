@@ -15,11 +15,13 @@ from repro.core.queries import prepare, run_ppr, run_rw, run_sssp
 from repro.graphs.generators import build_suite
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, graph: str = "social-lj"):
     from repro.core.distributed import run_distributed_ppr
     from repro.fpp.backends import default_mesh
 
-    g = build_suite("social-lj")
+    # any suite name works, including the committed ingested fixture
+    # ("snap-tiny") — the scaling sweep is graph-agnostic
+    g = build_suite(graph)
     bg, perm = prepare(g, 256)
     counts = (8, 32, 128) if quick else (8, 32, 128, 512)
     mesh = default_mesh()

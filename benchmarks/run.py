@@ -25,6 +25,7 @@ MODULES = [
     "fig16_partition_size",  # Fig 16: partition-size sweep
     "bench_dispatch",     # ISSUE 4: host-loop vs K-visit megastep dispatch
     "bench_serve",        # ISSUE 8: open-loop SLO sweep (continuous batching)
+    "bench_kinds",        # ISSUE 10: cc/kreach/rw rows on the ingested fixture
 ]
 
 

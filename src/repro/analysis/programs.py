@@ -44,6 +44,7 @@ CANONICAL_COLS = 16
 CANONICAL_SEED = 0
 CANONICAL_Q = 8
 CANONICAL_K = 8
+CANONICAL_WALK_LEN = 16
 
 
 @dataclasses.dataclass
@@ -78,12 +79,15 @@ def build_programs(only: Optional[str] = None) -> List[Program]:
     """The full matrix; ``only`` substring-filters the program keys."""
     import jax
 
-    from repro.core.baselines import make_minplus_round, make_push_round
+    from repro.core.baselines import (make_minplus_round, make_push_round,
+                                      make_walk_round)
     from repro.core.distributed import make_distributed_program
     from repro.core.engine import DeviceGraph, FPPEngine
+    from repro.core.queries import WEIGHT_VARIANTS
+    from repro.core.randomwalk import init_walk_state, make_walk_visit
     from repro.core.yielding import NO_YIELD
-    from repro.fpp.backends import KINDS, default_mesh
-    from repro.fpp.planner import default_yield_config
+    from repro.fpp.backends import _ENGINE_MODE, KINDS, default_mesh
+    from repro.fpp.planner import default_yield_config, pow2_bucket
     from repro.fpp.session import FPPSession
     from repro.fpp.streaming import StreamingExecutor
     from repro.graphs.generators import grid2d
@@ -99,9 +103,54 @@ def build_programs(only: Optional[str] = None) -> List[Program]:
     programs: List[Program] = []
 
     for kind in KINDS:
-        bg, _ = sess.prepared(unit_weights=(kind == "bfs"))
+        bg, _ = sess.prepared(weights=WEIGHT_VARIANTS.get(kind, "natural"))
         yc = default_yield_config(kind, bg)
-        mode = "push" if kind == "ppr" else "minplus"
+
+        if kind == "rw":
+            # rw has no megastep: its hot program at every backend is the
+            # buffered walk visit (engine/streaming/serving lanes) or the
+            # bulk walk round/mesh program (baselines/distributed) — the
+            # exact-edge counter analogue is the int32 ``steps`` plane
+            wlen = CANONICAL_WALK_LEN
+            wcount = lambda out: {"steps": out[1]}
+            wdon = lambda args, out: [("occ", args[5], out[4])]
+
+            def _walk_program(keyname, backend, capacity):
+                dgw = DeviceGraph.build(bg, NO_YIELD, capacity)
+                st = init_walk_state(
+                    dgw, np.arange(capacity, dtype=np.int64) % bg.n)
+                return Program(
+                    key=keyname, backend=backend, kind="rw",
+                    fn=make_walk_visit(dgw, wlen, CANONICAL_SEED),
+                    args=st + (jnp.int32(0),),
+                    counters=wcount, donation=wdon)
+
+            programs.append(_walk_program("engine/rw", "engine",
+                                          CANONICAL_Q))
+            programs.append(_walk_program("streaming/rw", "streaming",
+                                          CANONICAL_Q))
+            programs.append(_walk_program("engine-serve/rw", "engine",
+                                          pow2_bucket(CANONICAL_Q)))
+
+            fn, args = make_distributed_program(
+                bg, CANONICAL_Q, mesh, kind="rw", yield_config=yc,
+                length=wlen, seed=CANONICAL_SEED)
+            programs.append(Program(
+                key=f"distributed/rw@d{ndev}", backend="distributed",
+                kind="rw", fn=fn, args=args,
+                counters=lambda out: {"steps": out[1]},
+                donation=lambda args, out: [("occ", args[9], out[4])]))
+
+            dgw = DeviceGraph.build(bg, NO_YIELD, CANONICAL_Q)
+            programs.append(Program(
+                key="baselines/rw", backend="baselines", kind="rw",
+                fn=make_walk_round(dgw, wlen, CANONICAL_SEED),
+                args=init_walk_state(
+                    dgw, np.arange(CANONICAL_Q, dtype=np.int64) % bg.n),
+                counters=wcount, donation=wdon))
+            continue
+
+        mode = _ENGINE_MODE[kind]
 
         # -- engine megastep ------------------------------------------------
         eng = FPPEngine(bg, mode=mode, num_queries=CANONICAL_Q,

@@ -82,8 +82,15 @@ def make_minplus_round(dg: DeviceGraph, blk_src: jax.Array,
 
 
 def global_minplus(bg: BlockGraph, sources: np.ndarray,
-                   max_rounds: int | None = None) -> BaselineResult:
-    """Synchronous global Bellman-Ford over all blocks (Ligra-like)."""
+                   max_rounds: int | None = None,
+                   init_plane: np.ndarray | None = None) -> BaselineResult:
+    """Synchronous global Bellman-Ford over all blocks (Ligra-like).
+
+    ``init_plane`` ([P, B], +inf empty) replaces the one-hot source state for
+    the every-vertex-is-a-source kinds: cc seeds each vertex with its own
+    label and the synchronous rounds become min-label propagation (sources
+    then only set the lane count).
+    """
     dg = DeviceGraph.build(bg, NO_YIELD, len(sources))
     P, B, Q = dg.num_parts, dg.block_size, len(sources)
     max_rounds = max_rounds or (bg.n + 1)
@@ -91,7 +98,12 @@ def global_minplus(bg: BlockGraph, sources: np.ndarray,
     blk_dst = jnp.asarray(bg.blk_dst.astype(np.int32))
     round_fn = make_minplus_round(dg, blk_src, blk_dst)
 
-    dist = _block_state(dg, sources)
+    if init_plane is not None:
+        dist = jnp.broadcast_to(
+            jnp.asarray(init_plane, dtype=jnp.float32)[:, None, :],
+            (P, Q, B))
+    else:
+        dist = _block_state(dg, sources)
     frontier = jnp.isfinite(dist)
     edges = np.zeros(Q, dtype=np.float64)
     bpd = float(B * B * 4)          # bytes per block stream
@@ -114,6 +126,38 @@ def global_minplus(bg: BlockGraph, sources: np.ndarray,
     vals = np.asarray(dist).transpose(1, 0, 2).reshape(Q, -1)[:, :bg.n]
     return BaselineResult(vals, edges, rounds, traffic_unshared,
                           traffic_shared)
+
+
+def make_walk_round(dg: DeviceGraph, length: int, seed: int):
+    """The jitted synchronous random-walk round: one tape entry for every
+    live walker at once (Ligra-style bulk stepping — no partition residency).
+    Module-level so the fppcheck inventory traces exactly the program
+    ``global_random_walks`` runs.  Same per-(source, step) tape as the
+    partition-resident engine loop (core/randomwalk.py), so trajectories
+    are bitwise identical."""
+    from repro.core.randomwalk import make_walk_stepper
+    step = make_walk_stepper(dg, length, seed)
+
+    @jax.jit
+    def round_fn(pos, steps, part, src, thash, occ):
+        return step(pos, steps, part, src, thash, occ, steps < length)
+
+    return round_fn
+
+
+def global_random_walks(bg: BlockGraph, sources: np.ndarray, length: int,
+                        seed: int = 0):
+    """Synchronous bulk random walks: every live walker steps once per round
+    for ``length`` rounds — the inter-query baseline for the rw kind."""
+    from repro.core.randomwalk import WalkResult, init_walk_state
+    dg = DeviceGraph.build(bg, NO_YIELD, len(sources))
+    round_fn = make_walk_round(dg, length, seed)
+    pos, steps, part, src, thash, occ = init_walk_state(dg, sources)
+    for _ in range(length):
+        pos, steps, part, thash, occ = round_fn(pos, steps, part, src,
+                                                thash, occ)
+    return WalkResult(np.asarray(pos), np.asarray(steps), np.asarray(thash),
+                      visits=length, occupancy=np.asarray(occ)[:, :bg.n])
 
 
 def make_push_round(dg: DeviceGraph, blk_src: jax.Array,

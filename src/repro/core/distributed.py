@@ -183,16 +183,23 @@ def _check_query_sharding(Q: int, mesh: Mesh, query_axes) -> int:
 
 def _run_program(algebra: VisitAlgebra, bg: BlockGraph, sources: np.ndarray,
                  mesh: Mesh, yc: YieldConfig, max_rounds: int,
-                 max_supersteps: int, query_axes, part_axis: str):
+                 max_supersteps: int, query_axes, part_axis: str,
+                 num_queries: Optional[int] = None,
+                 init_ops: Optional[np.ndarray] = None):
     """Shared driver: build shards, init state, run, unshift edge counters."""
     ndev = int(mesh.shape[part_axis])
-    Q = len(sources)
+    Q = int(num_queries if num_queries is not None else len(sources))
     _check_query_sharding(Q, mesh, query_axes)
     sg = ShardedGraph.build(bg, ndev, yc, Q)
     B, pl, dmax = sg.block_size, sg.pl, sg.dmax
     p_pad = ndev * pl
+    if init_ops is not None:
+        io = np.full((p_pad, B), algebra.identity, dtype=np.float32)
+        io[:bg.num_parts] = init_ops
+        init_ops = io
     planes0, buf0 = _visit.init_dense_state(
-        algebra, p_pad, Q, B, np.asarray(sources), trash_row=False)
+        algebra, p_pad, Q, B, np.asarray(sources), trash_row=False,
+        init_ops=init_ops)
     fn = _make_program(algebra, mesh, pl=pl, dmax=dmax, ndev=ndev,
                        max_rounds=max_rounds, max_supersteps=max_supersteps,
                        query_axes=tuple(query_axes), part_axis=part_axis)
@@ -233,6 +240,30 @@ def run_distributed_sssp(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
                              steps, edges)
 
 
+def run_distributed_cc(bg: BlockGraph, num_queries: int, mesh: Mesh,
+                       yield_config: Optional[YieldConfig] = None,
+                       max_supersteps: int = 100_000,
+                       query_axes=("data",), part_axis: str = "model"):
+    """Connected components at pod scale: the minplus superstep program over
+    a zero-weight block graph, seeded with every vertex's own label
+    (``visit.cc_label_plane``) instead of one-hot sources.  All query lanes
+    converge to the same label plane (cc is per-graph); ``num_queries``
+    only sets the lane count so the result contract matches other kinds.
+    """
+    yc = yield_config or YieldConfig()
+    # strict pending: over zero weights an equal re-sent label would keep
+    # the superstep loop pending forever (see visit.minplus_algebra)
+    algebra = _visit.minplus_algebra(yc.window(), strict=True)
+    vals, _, edges, steps = _run_program(
+        algebra, bg, np.empty(0, dtype=np.int64), mesh, yc,
+        max_rounds=yc.max_rounds or bg.block_size,
+        max_supersteps=max_supersteps, query_axes=query_axes,
+        part_axis=part_axis, num_queries=num_queries,
+        init_ops=_visit.cc_label_plane(bg))
+    return DistributedResult(
+        _to_values(vals[0], bg.num_parts, num_queries, bg.n), steps, edges)
+
+
 def run_distributed_ppr(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
                         alpha: float = 0.15, eps: float = 1e-4,
                         yield_config: Optional[YieldConfig] = None,
@@ -261,32 +292,119 @@ def run_distributed_ppr(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
     return DistributedResult(pvals, steps, edges, residual=rvals)
 
 
+def make_walk_mesh_program(mesh: Mesh, block_size: int, length: int,
+                           seed: int, walk_axes: Tuple[str, ...]):
+    """jit(shard_map(fori(step))) for the rw kind: walkers shard over
+    ``walk_axes``, the graph is replicated, and there is NO collective —
+    walks are independent, so the pod runtime for rw is pure data
+    parallelism over the same per-(source, step) tape every other rw
+    runtime replays (core/randomwalk.py).
+    """
+    from repro.core.randomwalk import stepper_from_arrays
+
+    def body(blocks, diag_blk, nbr_blk, nbr_part,
+             pos, steps, part, src, thash, occ):
+        step = stepper_from_arrays(blocks, diag_blk, nbr_blk, nbr_part,
+                                   block_size, length,
+                                   jax.random.PRNGKey(seed))
+
+        def one(_, c):
+            pos, steps, part, thash, occ = c
+            return step(pos, steps, part, src, thash, occ, steps < length)
+
+        pos, steps, part, thash, occ = jax.lax.fori_loop(
+            0, length, one, (pos, steps, part, thash, occ))
+        return pos, steps, part, thash, occ
+
+    rep = P()
+    wspec = P(tuple(walk_axes))
+    occ_spec = P(tuple(walk_axes), None)
+    return jax.jit(_shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, rep, rep, rep,
+                  wspec, wspec, wspec, wspec, wspec, occ_spec),
+        out_specs=(wspec, wspec, wspec, wspec, occ_spec)))
+
+
+def run_distributed_walks(bg: BlockGraph, sources: np.ndarray, mesh: Mesh,
+                          length: int, seed: int = 0, walk_axes=None):
+    """Batched random walks sharded over every mesh axis (graph replicated).
+
+    Walker count is padded up to the axes' size with clones of walker 0
+    (same tape id => same trajectory, sliced off on return).  Returns a
+    ``core.randomwalk.WalkResult`` bitwise identical to the single-device
+    engine loop and the synchronous baseline.
+    """
+    from repro.core.engine import DeviceGraph
+    from repro.core.randomwalk import WalkResult, init_walk_state
+    from repro.core.yielding import NO_YIELD
+    walk_axes = tuple(walk_axes or mesh.axis_names)
+    nshard = int(np.prod([mesh.shape[a] for a in walk_axes]))
+    srcs = np.asarray(sources)
+    Q = srcs.size
+    Qp = -(-max(Q, 1) // nshard) * nshard
+    padded = np.concatenate([srcs, np.full(Qp - Q, srcs[0] if Q else 0,
+                                           dtype=srcs.dtype)])
+    dg = DeviceGraph.build(bg, NO_YIELD, Qp)
+    fn = make_walk_mesh_program(mesh, bg.block_size, length, seed, walk_axes)
+    pos, steps, part, src, thash, occ = init_walk_state(dg, padded)
+    pos, steps, part, thash, occ = fn(dg.blocks, dg.diag_blk, dg.nbr_blk,
+                                      dg.nbr_part, pos, steps, part, src,
+                                      thash, occ)
+    return WalkResult(np.asarray(pos)[:Q], np.asarray(steps)[:Q],
+                      np.asarray(thash)[:Q], visits=length,
+                      occupancy=np.asarray(occ)[:Q, :bg.n])
+
+
 def make_distributed_program(bg: BlockGraph, num_queries: int, mesh: Mesh, *,
                              kind: str = "sssp", alpha: float = 0.15,
                              eps: float = 1e-4,
                              yield_config: Optional[YieldConfig] = None,
                              query_axes=("data",), part_axis: str = "model",
-                             max_supersteps: int = 1000):
+                             max_supersteps: int = 1000,
+                             length: int = 32, seed: int = 0):
     """The jitted mesh program plus matching abstract arguments.
 
     Public AOT handle: ``(fn, args)`` where ``args`` are
     ``ShapeDtypeStruct``s, so callers can ``fn.lower(*args)`` without
     building real shards — the multi-pod dry-run compiles it, and the
     fppcheck jaxpr/HLO passes (DESIGN.md §7) trace and budget exactly the
-    program ``run_distributed_*`` executes.  ``kind``: "sssp"/"bfs" use
-    the minplus algebra, "ppr" the push algebra.
+    program ``run_distributed_*`` executes.  ``kind``: "sssp"/"bfs"/"cc"/
+    "kreach" use the minplus algebra (cc over zero weights + label init,
+    kreach over hop-shifted weights — same program, different operands),
+    "ppr" the push algebra, "rw" the collective-free sharded walk program
+    (``length``/``seed`` are its tape parameters).
     """
     yc = yield_config or YieldConfig()
+    B = bg.block_size
+    if kind == "rw":
+        fn = make_walk_mesh_program(mesh, B, length, seed,
+                                    walk_axes=tuple(mesh.axis_names))
+        P_, dmax = bg.num_parts, bg.nbr_blk.shape[1]
+        f32, i32 = jnp.float32, jnp.int32
+        args = (
+            jax.ShapeDtypeStruct(bg.blocks.shape, f32),
+            jax.ShapeDtypeStruct((P_,), i32),
+            jax.ShapeDtypeStruct((P_, dmax), i32),
+            jax.ShapeDtypeStruct((P_, dmax), i32),
+            jax.ShapeDtypeStruct((num_queries,), i32),
+            jax.ShapeDtypeStruct((num_queries,), i32),
+            jax.ShapeDtypeStruct((num_queries,), i32),
+            jax.ShapeDtypeStruct((num_queries,), i32),
+            jax.ShapeDtypeStruct((num_queries,), jnp.uint32),
+            jax.ShapeDtypeStruct((num_queries, P_ * B), f32),
+        )
+        return fn, args
     if kind == "ppr":
         algebra = _visit.push_algebra(alpha, eps)
         max_rounds = yc.max_rounds or 64
-    elif kind in ("sssp", "bfs"):
-        algebra = _visit.minplus_algebra(yc.window())
+    elif kind in ("sssp", "bfs", "cc", "kreach"):
+        algebra = _visit.minplus_algebra(yc.window(), strict=(kind == "cc"))
         max_rounds = yc.max_rounds or bg.block_size
     else:
-        raise ValueError(f"unknown kind {kind!r}; one of sssp/bfs/ppr")
+        raise ValueError(
+            f"unknown kind {kind!r}; one of sssp/bfs/ppr/cc/kreach/rw")
     ndev = int(mesh.shape[part_axis])
-    B = bg.block_size
     pl = -(-bg.num_parts // ndev)
     p_pad = pl * ndev
     dmax = bg.nbr_blk.shape[1]

@@ -40,13 +40,18 @@ import numpy as np
 
 from repro.core import visit as _visit
 from repro.core.graph import BlockGraph
+from repro.core.oracles import decode_kreach
 from repro.core.scheduler import PartitionScheduler
 from repro.core.visit import (VisitAlgebra, VisitState, minplus_algebra,
                               push_algebra)
 from repro.core.yielding import YieldConfig
 from repro.kernels.minplus import ops as minplus_ops
 
-MODES = ("minplus", "push")
+#: ``cc`` and ``kreach`` are minplus-algebra instantiations over transformed
+#: weight planes (zero weights + per-vertex label ops; hop-shifted weights),
+#: so they inherit the megastep / fused-kernel / superstep machinery intact —
+#: only the state init and the host-side finalize differ (DESIGN.md §2.1).
+MODES = ("minplus", "push", "cc", "kreach")
 
 
 class VisitStats(NamedTuple):
@@ -148,16 +153,22 @@ class FPPEngine:
                  schedule: str = "priority", num_queries: int = 1,
                  alpha: float = 0.15, eps: float = 1e-4, seed: int = 0,
                  use_pallas: bool = False, k_visits: int = 64,
-                 fused: bool = False, frontier_mode: str = "dense"):
+                 fused: bool = False, frontier_mode: str = "dense",
+                 hop_budget: int = 8, hop_stride: float = 1.0):
         if mode not in MODES:
             raise ValueError(f"unknown engine mode {mode!r}; one of {MODES}")
         if k_visits < 1:
             raise ValueError(f"k_visits must be >= 1, got {k_visits}")
+        if mode == "cc" and bg.n >= (1 << 24):
+            raise ValueError(
+                f"cc labels ride the f32 minplus planes, exact only below "
+                f"2^24 vertices; got n={bg.n}")
         self.bg = bg
         self.mode = mode
         self.yc = yield_config
         self.num_queries = num_queries
         self.alpha, self.eps = alpha, eps
+        self.hop_budget, self.hop_stride = int(hop_budget), float(hop_stride)
         self.seed = seed
         self.k_visits = int(k_visits)
         self.fused = bool(fused)
@@ -165,20 +176,23 @@ class FPPEngine:
         self.dg = DeviceGraph.build(bg, yield_config, num_queries)
         self.scheduler = PartitionScheduler(schedule, bg.num_parts, seed)
         max_rounds = yield_config.max_rounds or (
-            bg.block_size if mode == "minplus" else 64)
+            bg.block_size if mode != "push" else 64)
         self.max_rounds = max_rounds
         # fused visits run the whole body inside one pallas_call, so the
         # algebra must keep its XLA relax/spread — a pallas_call nested in
         # a Pallas kernel body would not lower
-        if mode == "minplus":
-            relax = (minplus_ops.minplus_pallas
-                     if use_pallas and not fused else None)
-            self.algebra: VisitAlgebra = minplus_algebra(
-                yield_config.window(), relax=relax)
-        else:
+        if mode == "push":
             spread = (minplus_ops.masked_matmul_pallas
                       if use_pallas and not fused else None)
-            self.algebra = push_algebra(alpha, eps, spread=spread)
+            self.algebra: VisitAlgebra = push_algebra(alpha, eps,
+                                                      spread=spread)
+        else:
+            relax = (minplus_ops.minplus_pallas
+                     if use_pallas and not fused else None)
+            # cc propagates over zero weights, where an equal re-sent label
+            # would pend (and re-emit) forever under the default <= rule
+            self.algebra = minplus_algebra(yield_config.window(), relax=relax,
+                                           strict=(mode == "cc"))
         self._visit = _visit.make_visit(self.dg, self.algebra, max_rounds)
         # the hot loop: K visits per host dispatch, scheduler on device;
         # fused=True swaps the visit body for the fused Pallas kernel
@@ -195,6 +209,15 @@ class FPPEngine:
         self._visit_blocks = (1 + out_blocks).astype(np.int64)
 
     def init_state(self, sources: np.ndarray) -> VisitState:
+        if self.mode == "cc":
+            # cc is a per-graph computation: every vertex is a source and
+            # every query lane converges to the same label plane, so the
+            # one-hot source injection is replaced by a full init plane
+            # (sources only set the lane count)
+            return _visit.init_engine_state(
+                self.algebra, self.dg, np.empty(0, dtype=np.int64),
+                num_queries=self.num_queries,
+                init_ops=_visit.cc_label_plane(self.bg))
         return _visit.init_engine_state(self.algebra, self.dg, sources)
 
     def run(self, sources: np.ndarray, max_visits: int | None = None,
@@ -287,10 +310,16 @@ class FPPEngine:
     def _finalize(self, state: VisitState, edges: np.ndarray,
                   stats: VisitStats, order: list) -> EngineResult:
         n = self.bg.n
-        if self.mode == "minplus":
+        if self.mode != "push":
             dist = state.planes[0]
             vals = np.asarray(dist).transpose(1, 0, 2).reshape(
                 self.num_queries, -1)[:, :n]
+            if self.mode == "kreach":
+                # the packed lex-(hops, dist) plane unpacks on host; the hop
+                # plane rides the residual slot of the result contract
+                vals, hops = decode_kreach(vals, self.hop_stride,
+                                           self.hop_budget)
+                return EngineResult(vals, hops, edges, stats, order)
             return EngineResult(vals, None, edges, stats, order)
         pvals = np.asarray(state.planes[0]).transpose(1, 0, 2).reshape(
             self.num_queries, -1)[:, :n]

@@ -108,6 +108,148 @@ def ppr_push(g: CSRGraph, src: int, alpha: float = 0.15,
     return p.astype(np.float32), r.astype(np.float32), edges
 
 
+def connected_components(g: CSRGraph) -> np.ndarray:
+    """Union-find component labels; label = min vertex id in the component.
+
+    The differential anchor for the ``cc`` kind: min-label propagation over
+    a symmetrized graph must converge to exactly these labels.
+    """
+    parent = np.arange(g.n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:           # path compression
+            parent[x], x = root, int(parent[x])
+        return root
+
+    src, dst, _ = g.edges()
+    for u, v in zip(src, dst):
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(int(v)) for v in range(g.n)], dtype=np.int64)
+
+
+def label_prop(g: CSRGraph) -> Tuple[np.ndarray, int]:
+    """Synchronous min-label propagation to fixpoint (labels, rounds).
+
+    The sequential twin of the visit-algebra ``cc`` kind: every vertex
+    starts labeled with its own id and repeatedly takes the min over its
+    in-labels; on symmetrized graphs the fixpoint equals union-find.
+    """
+    labels = np.arange(g.n, dtype=np.int64)
+    src, dst, _ = g.edges()
+    rounds = 0
+    while True:
+        nxt = labels.copy()
+        np.minimum.at(nxt, dst, labels[src])
+        rounds += 1
+        if (nxt == labels).all():
+            return labels, rounds
+        labels = nxt
+
+
+def kreach_stride(n: int, weights_max: float) -> float:
+    """The hop-packing stride S shared by every ``kreach`` backend and the
+    oracle: the smallest power of two exceeding twice the largest possible
+    path weight, so ``packed = hops * S + dist`` decodes exactly in f32
+    (``hops * S`` is representable and ``dist < S / 2`` can never carry)."""
+    hi = 2.0 * max(1.0, float(n)) * max(1.0, float(weights_max))
+    s = 2.0
+    while s <= hi:
+        s *= 2.0
+    return s
+
+
+def decode_kreach(packed: np.ndarray, stride: float, k: int):
+    """Unpack the lexicographic (hops, dist) plane: ``values`` is the dist
+    of the hop-minimal path where ``hops <= k`` (else +inf), ``hops`` the
+    hop count (+inf unreachable).  Shared by the engine finalize, the
+    distributed/baseline decodes, and the oracle — the decode is part of
+    the kind's contract, so it lives in exactly one place."""
+    p64 = np.asarray(packed, np.float64)
+    finite = np.isfinite(p64)
+    hops = np.floor(np.where(finite, p64, 0.0) / float(stride))
+    dist = p64 - hops * float(stride)
+    values = np.where(finite & (hops <= k), dist, np.inf).astype(np.float32)
+    hops = np.where(finite, hops, np.inf).astype(np.float32)
+    return values, hops
+
+
+def kreach(g: CSRGraph, src: int, k: int,
+           stride: float | None = None) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Sequential weighted k-reach: Dijkstra over the hop-shifted weights
+    ``w' = f32(w + S)`` with f32 accumulation — expression-identical to the
+    relaxations the block backends run, so parity is bitwise, not approximate.
+    Returns (values, hops, edges) per :func:`decode_kreach`."""
+    if stride is None:
+        stride = kreach_stride(g.n, float(g.weights.max()) if g.m else 1.0)
+    s32 = np.float32(stride)
+    dist = np.full(g.n, np.inf, dtype=np.float32)
+    dist[src] = np.float32(0.0)
+    done = np.zeros(g.n, dtype=bool)
+    heap = [(np.float32(0.0), src)]
+    edges = 0
+    while heap:
+        d, u = heapq.heappop(heap)
+        if done[u]:
+            continue
+        done[u] = True
+        for e in range(g.indptr[u], g.indptr[u + 1]):
+            v = int(g.indices[e])
+            edges += 1
+            nd = np.float32(d + np.float32(np.float32(g.weights[e]) + s32))
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(heap, (nd, v))
+    values, hops = decode_kreach(dist, stride, k)
+    return values, hops, edges
+
+
+def random_walk(bg, src: int, length: int, seed: int = 0) -> np.ndarray:
+    """Sequential replay of one walker's tape over the block layout.
+
+    The randomness contract of the ``rw`` kind: at (source ``src``, step
+    ``t``) the walker draws ``u = uniform(fold_in(fold_in(key(seed), src),
+    t))`` and takes the ``min(floor(u * deg), deg - 1)``-th finite entry of
+    its block-layout adjacency row (diagonal columns first, then the
+    ``nbr_blk`` slots in order).  The trajectory is a pure function of
+    (graph, seed, source, length) — independent of lane placement,
+    chunking, or backend — so every runtime must reproduce it bitwise.
+    Returns the visited positions (start included, <= length + 1 entries —
+    a walk parked on a sink ends there, matching the runtimes' occupancy
+    planes which count each visited position exactly once).
+    """
+    import jax
+
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), int(src))
+    B = bg.block_size
+    pos = int(src)
+    out = [pos]
+    for t in range(length):
+        p, l = pos // B, pos % B
+        row = np.concatenate(
+            [bg.blocks[bg.diag_blk[p]][l]]
+            + [np.where(bg.nbr_part[p, j] >= 0,
+                        bg.blocks[bg.nbr_blk[p, j]][l], np.inf)
+               for j in range(bg.nbr_part.shape[1])])
+        finite = np.isfinite(row)
+        deg = int(finite.sum())
+        if deg == 0:
+            break
+        u = np.float32(jax.random.uniform(jax.random.fold_in(base, t)))
+        # f32 product, exactly as the device stepper computes it
+        idx = min(int(np.floor(u * np.float32(deg))), deg - 1)
+        col = int(np.flatnonzero(finite)[idx])
+        slot, local = col // B, col % B
+        dest_part = p if slot == 0 else int(bg.nbr_part[p, slot - 1])
+        pos = dest_part * B + local
+        out.append(pos)
+    return np.asarray(out, dtype=np.int64)
+
+
 def dfs_order(g: CSRGraph, src: int) -> np.ndarray:
     """Preorder DFS labels (-1 unreachable). Host-only reference."""
     label = np.full(g.n, -1, dtype=np.int32)

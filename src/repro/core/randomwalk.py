@@ -6,10 +6,24 @@ walkers repeatedly within the VMEM-resident block until they exit the partition
 (or finish), then exiting walkers are handed to their new partitions in a
 batch.  Temporal locality is maximal — the paper reports RW among the best
 scaling query types (Fig. 15).
+
+Randomness contract (the ``rw`` kind's portability invariant, pinned by
+``oracles.random_walk``): walker ``src`` at step ``t`` draws
+
+    u = uniform(fold_in(fold_in(PRNGKey(seed), src), t))
+
+and takes the ``min(floor(u * deg), deg - 1)``-th finite entry of its
+block-layout adjacency row (diagonal columns first, then the ``nbr_blk``
+slots in order).  Because the tape is indexed by (source, step) — not by
+visit order, lane placement, or key-split history — the trajectory is a pure
+function of (graph, seed, source, length), so the partition-resident engine
+loop, the synchronous baselines round, the sharded distributed stepper, and
+the serving lanes all reproduce identical walks bitwise.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,81 +33,128 @@ from repro.core.engine import DeviceGraph
 from repro.core.graph import BlockGraph
 from repro.core.yielding import NO_YIELD
 
-NEG_INF = -jnp.inf
-
 
 @dataclasses.dataclass
 class WalkResult:
-    positions: np.ndarray      # [Q] final vertex (original padded id space)
+    positions: np.ndarray      # [Q] final vertex (reordered padded id space)
     steps: np.ndarray          # [Q]
     trajectory_hash: np.ndarray  # [Q] order-sensitive hash (for testing)
     visits: int
+    occupancy: Optional[np.ndarray] = None  # [Q, n] f32 visit counts
+    #                                         (start + each step's position)
+
+
+def stepper_from_arrays(blocks, diag_blk, nbr_blk, nbr_part,
+                        block_size: int, length: int, key0) -> Callable:
+    """The one-step transition shared by every rw runtime, built from bare
+    graph arrays so the distributed runtime can reconstruct it inside a
+    ``shard_map`` body from replicated operands.
+
+    ``step(pos, steps, part, src, thash, occ, mask) -> (pos', steps', part',
+    thash', occ')`` advances every walker in ``mask`` by one tape entry
+    (walkers on sinks park with ``steps = length``).  All arrays are [Q]
+    except ``occ`` [Q, P * B]; ``src`` is the walker's tape id (its source
+    vertex, reordered space), constant for the walk's lifetime.
+    """
+    B = block_size
+
+    def step(pos, steps, part, src, thash, occ, mask):
+        Q = pos.shape[0]
+        loc = pos % B
+        diag = blocks[diag_blk[part], loc]                   # [Q, B]
+        nbrb = nbr_blk[part]                                 # [Q, D]
+        nbrp = nbr_part[part]                                # [Q, D]
+        out = blocks[jnp.maximum(nbrb, 0), loc[:, None]]     # [Q, D, B]
+        out = jnp.where((nbrb >= 0)[:, :, None], out, jnp.inf)
+        rows = jnp.concatenate([diag[:, None], out], axis=1).reshape(Q, -1)
+        finite = jnp.isfinite(rows)
+        deg = jnp.sum(finite, axis=1, dtype=jnp.int32)
+        keys = jax.vmap(lambda s, t: jax.random.fold_in(
+            jax.random.fold_in(key0, s), t))(src, steps)
+        u = jax.vmap(jax.random.uniform)(keys)               # [Q] in [0, 1)
+        idx = jnp.clip(jnp.floor(u * deg.astype(jnp.float32)).astype(
+            jnp.int32), 0, jnp.maximum(deg - 1, 0))
+        # pick the (idx+1)-th finite column: first position where the
+        # running finite count hits idx+1 and the cell itself is finite
+        cum = jnp.cumsum(finite, axis=1)
+        choice = jnp.argmax((cum == (idx + 1)[:, None]) & finite, axis=1)
+        slot, new_loc = choice // B, choice % B
+        dest_parts = jnp.concatenate(
+            [part[:, None], jnp.where(nbrp >= 0, nbrp, 0)], axis=1)
+        new_part = jnp.take_along_axis(dest_parts, slot[:, None], axis=1)[:, 0]
+        new_pos = new_part * B + new_loc
+        has_nbr = deg > 0
+        move = mask & has_nbr
+        steps = jnp.where(mask & ~has_nbr, jnp.int32(length), steps)
+        pos = jnp.where(move, new_pos, pos)
+        part = jnp.where(move, new_part, part)
+        steps = jnp.where(move, steps + 1, steps)
+        thash = jnp.where(move,
+                          thash * jnp.uint32(1000003)
+                          + new_pos.astype(jnp.uint32), thash)
+        occ = occ.at[jnp.arange(Q), new_pos].add(move.astype(occ.dtype))
+        return pos, steps, part, thash, occ
+
+    return step
+
+
+def make_walk_stepper(dg: DeviceGraph, length: int, seed: int) -> Callable:
+    """:func:`stepper_from_arrays` over a staged :class:`DeviceGraph`."""
+    return stepper_from_arrays(dg.blocks, dg.diag_blk, dg.nbr_blk,
+                               dg.nbr_part, dg.block_size, length,
+                               jax.random.PRNGKey(seed))
+
+
+def make_walk_visit(dg: DeviceGraph, length: int, seed: int,
+                    max_rounds: int = 64) -> Callable:
+    """The jitted rw visit: steps all walkers resident in partition ``p``
+    until they leave it, finish, or hit ``max_rounds`` — the rw analogue of
+    the engine's buffered visit (occupancy plane instead of value planes).
+
+    ``visit(pos, steps, part, src, thash, occ, p) -> same state``.
+    """
+    step = make_walk_stepper(dg, length, seed)
+
+    @jax.jit
+    def visit(pos, steps, part, src, thash, occ, p):
+        def cond(c):
+            pos, steps, part, thash, occ, rounds = c
+            here = (part == p) & (steps < length)
+            return jnp.logical_and(rounds < max_rounds, jnp.any(here))
+
+        def body(c):
+            pos, steps, part, thash, occ, rounds = c
+            here = (part == p) & (steps < length)
+            pos, steps, part, thash, occ = step(pos, steps, part, src,
+                                               thash, occ, here)
+            return pos, steps, part, thash, occ, rounds + 1
+
+        pos, steps, part, thash, occ, _ = jax.lax.while_loop(
+            cond, body, (pos, steps, part, thash, occ, jnp.int32(0)))
+        return pos, steps, part, thash, occ
+
+    return visit
+
+
+def init_walk_state(dg: DeviceGraph, sources: np.ndarray):
+    """(pos, steps, part, src, thash, occ) device state; occupancy starts
+    with the source position counted once per lane."""
+    srcs = np.asarray(sources, dtype=np.int32)
+    Q = srcs.size
+    occ = np.zeros((Q, dg.num_parts * dg.block_size), dtype=np.float32)
+    occ[np.arange(Q), srcs] = 1.0
+    return (jnp.asarray(srcs), jnp.zeros(Q, dtype=jnp.int32),
+            jnp.asarray(srcs // dg.block_size), jnp.asarray(srcs),
+            jnp.asarray(srcs.astype(np.uint32)), jnp.asarray(occ))
 
 
 def run_random_walks(bg: BlockGraph, sources: np.ndarray, length: int,
                      seed: int = 0, max_rounds_per_visit: int = 64) -> WalkResult:
     """Walk ``length`` steps from each source. Walkers at sink vertices stop."""
     dg = DeviceGraph.build(bg, NO_YIELD, len(sources))
-    P, B, Q = dg.num_parts, dg.block_size, len(sources)
-    key0 = jax.random.PRNGKey(seed)
-
-    @jax.jit
-    def visit(pos, steps, part, thash, key, p):
-        """Steps all walkers whose ``part == p`` until they leave p/finish."""
-
-        def cond(c):
-            pos, steps, part, thash, key, rounds = c
-            here = (part == p) & (steps < length)
-            return jnp.logical_and(rounds < max_rounds_per_visit,
-                                   jnp.any(here))
-
-        def body(c):
-            pos, steps, part, thash, key, rounds = c
-            here = (part == p) & (steps < length)
-            loc = pos % B
-            # adjacency row of each walker: diagonal block + out blocks
-            diag_rows = dg.blocks[dg.diag_blk[p], loc]          # [Q, B]
-            out_blks = dg.nbr_blk[p]                            # [Dmax]
-            out_rows = dg.blocks[jnp.maximum(out_blks, 0)][:, loc, :]
-            out_rows = jnp.where((out_blks >= 0)[:, None, None],
-                                 out_rows.transpose(0, 1, 2), jnp.inf)
-            rows = jnp.concatenate(
-                [diag_rows[None], out_rows], axis=0)            # [D+1, Q, B]
-            rows = rows.transpose(1, 0, 2).reshape(Q, -1)       # [Q, (D+1)B]
-            finite = jnp.isfinite(rows)
-            key, sub = jax.random.split(key)
-            gumbel = jax.random.gumbel(sub, rows.shape)
-            score = jnp.where(finite, gumbel, NEG_INF)
-            choice = jnp.argmax(score, axis=1)                  # [Q]
-            has_nbr = jnp.any(finite, axis=1)
-            slot = choice // B
-            new_loc = choice % B
-            dest_parts = jnp.concatenate(
-                [jnp.array([p], dtype=jnp.int32),
-                 jnp.where(dg.nbr_part[p] >= 0, dg.nbr_part[p], p)])
-            new_part = dest_parts[slot]
-            new_pos = new_part * B + new_loc
-            move = here & has_nbr
-            # sinks finish their walk in place
-            steps = jnp.where(here & ~has_nbr, length, steps)
-            pos = jnp.where(move, new_pos, pos)
-            part = jnp.where(move, new_part, part)
-            steps = jnp.where(move, steps + 1, steps)
-            thash = jnp.where(move,
-                              thash * jnp.uint32(1000003)
-                              + new_pos.astype(jnp.uint32), thash)
-            return pos, steps, part, thash, key, rounds + 1
-
-        pos, steps, part, thash, key, _ = jax.lax.while_loop(
-            cond, body, (pos, steps, part, thash, key, jnp.int32(0)))
-        return pos, steps, part, thash, key
-
-    srcs = np.asarray(sources)
-    pos = jnp.asarray(srcs.astype(np.int32))
-    part = jnp.asarray((srcs // B).astype(np.int32))
-    steps = jnp.zeros(Q, dtype=jnp.int32)
-    thash = jnp.asarray(srcs.astype(np.uint32))
-    key = key0
+    P, Q = dg.num_parts, len(sources)
+    visit = make_walk_visit(dg, length, seed, max_rounds=max_rounds_per_visit)
+    pos, steps, part, src, thash, occ = init_walk_state(dg, sources)
     visits = 0
     while True:
         part_np, steps_np = np.asarray(part), np.asarray(steps)
@@ -104,10 +165,10 @@ def run_random_walks(bg: BlockGraph, sources: np.ndarray, length: int,
         # greedy choice is the right one for walks: no redundant work exists)
         counts = np.bincount(part_np[live], minlength=P)
         p = int(np.argmax(counts))
-        pos, steps, part, thash, key = visit(pos, steps, part, thash, key,
-                                             jnp.int32(p))
+        pos, steps, part, thash, occ = visit(pos, steps, part, src, thash,
+                                             occ, jnp.int32(p))
         visits += 1
         if visits > Q * length + P:  # safety; unreachable in practice
             break
     return WalkResult(np.asarray(pos), np.asarray(steps), np.asarray(thash),
-                      visits)
+                      visits, occupancy=np.asarray(occ)[:, :bg.n])

@@ -105,14 +105,25 @@ class VisitAlgebra:
         return dict(self.params)[name]
 
 
-def minplus_algebra(window: float, relax: Optional[Callable] = None
-                    ) -> VisitAlgebra:
-    """SSSP/BFS family: ops combine by ``min``, relax is min-plus matmul."""
+def minplus_algebra(window: float, relax: Optional[Callable] = None,
+                    strict: bool = False) -> VisitAlgebra:
+    """SSSP/BFS family: ops combine by ``min``, relax is min-plus matmul.
+
+    ``strict=True`` makes an op pend only when it *strictly* improves the
+    plane value (``buf < d`` instead of ``buf <= d``).  Positive-weight
+    kinds terminate either way — a cycle re-sends values strictly above
+    the plane, so equal re-sends never happen — but the zero-weight cc
+    instantiation livelocks under ``<=``: two partitions forever re-emit
+    each other's already-applied labels (equal, hence pending, hence
+    re-emitted).  Strictness drops an op that cannot change anything,
+    which is exact for an idempotent min fixpoint.
+    """
     relax = relax or minplus_ops.minplus
+    lt = jnp.less if strict else jnp.less_equal
 
     def pending(buf, planes, deg):
         (d,) = planes
-        return jnp.isfinite(buf) & (buf <= d)
+        return jnp.isfinite(buf) & lt(buf, d)
 
     def prio_of(buf_row, planes_row, deg_row):
         pend = pending(buf_row, planes_row, deg_row)
@@ -121,7 +132,7 @@ def minplus_algebra(window: float, relax: Optional[Callable] = None
 
     def begin(planes_row, buf_row, deg_row):
         (d0,) = planes_row
-        pending0 = jnp.isfinite(buf_row) & (buf_row <= d0)
+        pending0 = jnp.isfinite(buf_row) & lt(buf_row, d0)
         d1 = jnp.minimum(d0, jnp.where(pending0, buf_row, INF))
         alpha = jnp.min(jnp.where(pending0, d1, INF), axis=1, keepdims=True)
         return MinplusCarry(d=d1, pending=pending0,
@@ -152,7 +163,8 @@ def minplus_algebra(window: float, relax: Optional[Callable] = None
         contrib=relax,
         scatter=lambda buf, idx, cands: buf.at[idx].min(cands),
         pending=pending, prio_of=prio_of, finish=finish,
-        params=(("window", float(window)),))
+        params=(("window", float(window)),
+                ("strict", 1.0 if strict else 0.0)))
 
 
 def push_algebra(alpha: float, eps: float,
@@ -225,23 +237,44 @@ class VisitState(NamedTuple):
 
 def init_dense_state(algebra: VisitAlgebra, num_parts: int, num_queries: int,
                      block_size: int, sources: np.ndarray,
-                     trash_row: bool = True):
+                     trash_row: bool = True,
+                     init_ops: Optional[np.ndarray] = None):
     """Host-side (planes, buf) with one source op buffered per query lane.
 
     ``sources``: [k] reordered vertex ids, k <= num_queries — lane ``i`` gets
     ``sources[i]``; remaining lanes start empty (streaming admission fills
     them later by the exact same buffered-op injection).
+
+    ``init_ops``: optional ``[P, B]`` plane of buffered ops broadcast to
+    every query lane before source injection — the every-vertex-is-a-source
+    kinds (cc label propagation seeds each vertex with its own label) start
+    from this instead of a one-hot source.  Cells holding
+    ``algebra.identity`` stay empty, so partition padding is expressed by
+    the caller writing identity there.
     """
     P, Q, B = num_parts, num_queries, block_size
     planes = tuple(np.full((P, Q, B), v, dtype=np.float32)
                    for v in algebra.plane_init)
     buf = np.full((P + (1 if trash_row else 0), Q, B), algebra.identity,
                   dtype=np.float32)
+    if init_ops is not None:
+        buf[:P] = np.broadcast_to(
+            np.asarray(init_ops, dtype=np.float32)[:, None, :], (P, Q, B))
     sources = np.asarray(sources)
     if sources.size:
         parts, locs = np.divmod(sources, B)
         buf[parts, np.arange(sources.size), locs] = algebra.source_value
     return planes, buf
+
+
+def cc_label_plane(bg) -> np.ndarray:
+    """[P, B] initial cc label ops: every real vertex seeds its own reordered
+    id as an f32 minplus op; padding slots hold the identity (+inf).  Shared
+    by every cc backend so the propagated fixpoint is the same plane bitwise
+    (integer-valued f32 mins, exact below 2^24 vertices)."""
+    P, B = bg.num_parts, bg.block_size
+    ids = np.arange(P * B, dtype=np.float32).reshape(P, B)
+    return np.where(np.asarray(bg.vmask), ids, np.float32(np.inf))
 
 
 def state_meta(algebra: VisitAlgebra, planes, buf, deg, counter: int = 0):
@@ -255,11 +288,13 @@ def state_meta(algebra: VisitAlgebra, planes, buf, deg, counter: int = 0):
 
 
 def init_engine_state(algebra: VisitAlgebra, dg, sources: np.ndarray,
-                      num_queries: Optional[int] = None) -> VisitState:
+                      num_queries: Optional[int] = None,
+                      init_ops: Optional[np.ndarray] = None) -> VisitState:
     """Device state for the host-scheduled engine (trash buffer row included)."""
     Q = int(num_queries if num_queries is not None else len(sources))
     planes_np, buf_np = init_dense_state(
-        algebra, dg.num_parts, Q, dg.block_size, sources, trash_row=True)
+        algebra, dg.num_parts, Q, dg.block_size, sources, trash_row=True,
+        init_ops=init_ops)
     planes = tuple(jnp.asarray(x) for x in planes_np)
     buf = jnp.asarray(buf_np)
     prio, ops, stamp = state_meta(algebra, planes, buf, dg.deg)

@@ -55,8 +55,12 @@ DISPATCH_YARDSTICKS = {
 }
 
 #: bfs runs the same minplus megastep/fused kernels as sssp (unit weights
-#: only change the block values), so it shares sssp's yardstick row
-_YARDSTICK_KIND = {"bfs": "sssp"}
+#: only change the block values), so it shares sssp's yardstick row; cc and
+#: kreach are minplus instantiations over transformed weights (zero /
+#: hop-shifted), so they share it too.  rw has no yardstick row yet — its
+#: walker loop never dispatches a megastep, so auto_fused's conservative
+#: False is exactly right.
+_YARDSTICK_KIND = {"bfs": "sssp", "cc": "sssp", "kreach": "sssp"}
 
 
 def auto_fused(kind: str, k_visits: int = 64,
@@ -237,9 +241,30 @@ def default_method(g: CSRGraph) -> str:
     return "bfs"
 
 
+def est_dmax(g: CSRGraph, block_size: int) -> int:
+    """Pessimistic neighbor-slot estimate for one partition of size B.
+
+    Skewed (real SNAP-style) graphs concentrate edges on a few hubs; if
+    the ``B`` heaviest vertices land in one partition, their combined
+    out-edges reach at best ``ceil(sum(top-B degrees) / B)`` distinct
+    partitions — the floor on that partition's boundary-block count.
+    Clamped to ``P - 1`` (a partition cannot neighbor more partitions than
+    exist).  This is a planning estimate from the degree sequence alone,
+    usable before any partitioning has run.
+    """
+    if g.n == 0:
+        return 0
+    deg = np.sort(g.out_degree())[::-1]
+    top = float(deg[: int(block_size)].sum())
+    num_parts = -(-g.n // int(block_size))
+    return int(min(max(num_parts - 1, 0),
+                   np.ceil(top / max(float(block_size), 1.0))))
+
+
 def model_block_size(g: CSRGraph, num_queries: int, mem: MemoryModel,
                      candidates: Sequence[int] = CANDIDATE_BLOCK_SIZES,
-                     min_parts: int = 8, fused: bool = False) -> int:
+                     min_parts: int = 8, fused: bool = False,
+                     degree_aware: bool = True) -> int:
     """Largest candidate whose visit working set fits the memory model.
 
     Also keeps at least ``min_parts`` partitions alive (clamped to what the
@@ -247,11 +272,23 @@ def model_block_size(g: CSRGraph, num_queries: int, mem: MemoryModel,
     scheduler to choose between and buffered consolidation degenerates —
     the "smaller multiplies scheduling overhead, larger thrashes" U-shape
     of Fig. 16 has a scheduling wall on the right, not just a cache wall.
+
+    ``degree_aware=True`` adds the skew guard for real ingested graphs:
+    each candidate must also keep one visit's *neighborhood* — the diagonal
+    block plus :func:`est_dmax` boundary blocks streamed against it —
+    inside the VMEM budget.  On uniform-degree graphs the estimate is tiny
+    and the guard never binds; on hub-heavy graphs it pushes the plan to a
+    smaller B so heavy vertices split across more, smaller boundary blocks
+    instead of dragging a mega-neighborhood through the cache every visit.
     """
     best = None
     for b in candidates:
         if -(-g.n // b) < max(2, min(min_parts, g.n // candidates[0])):
             break
+        if degree_aware:
+            hood = (1 + est_dmax(g, b)) * b * b * mem.dtype_bytes
+            if hood > mem.vmem_bytes:
+                continue   # hub neighborhoods outgrow VMEM at this B
         if mem.fits(b, num_queries, g.n, fused=fused):
             best = b
     if best is None:
@@ -277,9 +314,10 @@ def measure_run(session, kind: str, sources: np.ndarray,
     (``host_syncs`` is recorded per row; benchmarks/bench_dispatch.py
     sweeps K itself).
     """
+    from repro.core.queries import WEIGHT_VARIANTS
     session.prepared(block_size=overrides.get("block_size"),
                      method=overrides.get("method"),
-                     unit_weights=(kind == "bfs"))
+                     weights=WEIGHT_VARIANTS.get(kind, "natural"))
     t0 = time.perf_counter()
     res = session.run(kind, sources, **overrides)
     secs = time.perf_counter() - t0
@@ -376,20 +414,24 @@ def make_plan(g: CSRGraph, num_queries: int, *,
               schedule: str = "priority",
               backend: str = "engine",
               yield_config: Optional[YieldConfig] = None,
-              fused: object = False) -> Plan:
+              fused: object = False,
+              degree_aware: bool = True) -> Plan:
     """Resolve a plan without measuring (the model-only path).
 
     ``FPPSession.plan(tune=True)`` upgrades the block size by measurement.
     ``fused="auto"`` defers the visit-body choice to the per-kind
     yardsticks (:func:`auto_fused`); block sizing then budgets the fused
     working set, the conservative bound, since some kinds may fuse.
+    ``degree_aware=False`` disables the hub-skew VMEM guard in
+    :func:`model_block_size` (ignored when ``block_size`` is explicit).
     """
     mem = mem or MemoryModel()
     if fused not in (True, False, "auto"):
         raise ValueError(f"fused must be True, False, or 'auto', "
                          f"got {fused!r}")
     if block_size is None:
-        block_size = model_block_size(g, num_queries, mem, fused=bool(fused))
+        block_size = model_block_size(g, num_queries, mem, fused=bool(fused),
+                                      degree_aware=degree_aware)
     method = method or default_method(g)
     return Plan(block_size=int(block_size), method=method, schedule=schedule,
                 backend=backend, num_queries=int(num_queries), mem=mem,
@@ -403,6 +445,12 @@ def default_yield_config(kind: str, bg) -> YieldConfig:
         return YieldConfig(delta=1.0)          # Δ=1 == level-synchronous
     if kind == "ppr":
         return YieldConfig(mu_factor=100.0)    # paper's NCP setting
+    if kind in ("cc", "kreach", "rw"):
+        # these kinds run transformed weights (zero / hop-shifted) or no
+        # weights at all, so a Δ-window derived from the block values would
+        # be the wrong scale (0 for cc, the hop stride for kreach) — run
+        # the full-window fixpoint instead
+        return YieldConfig()
     wmax = float(np.nanmax(np.where(np.isfinite(bg.blocks), bg.blocks,
                                     np.nan)))
     return YieldConfig(delta=default_delta(wmax))

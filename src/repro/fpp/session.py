@@ -57,11 +57,25 @@ class FPPSession:
         self.graph = g
         self.mem = mem or MemoryModel()
         self._plan: Optional[Plan] = None
-        # (block_size, method, unit_weights) -> (BlockGraph, perm)
+        # (block_size, method, weight_variant) -> (BlockGraph, perm)
         self._prepared: Dict[tuple, Tuple[BlockGraph, np.ndarray]] = {}
+        self._kreach_stride: Optional[float] = None
         # the serving compile cache warms megasteps on background threads
         # (serve/compile_cache.py); partitioning must not race itself
         self._prepare_lock = threading.Lock()
+
+    @property
+    def kreach_stride(self) -> float:
+        """The hop-shift S for this graph's kreach packing (a per-graph
+        constant: ``oracles.kreach_stride`` of n and the max weight), shared
+        by the "shift" weight variant and the result decode so they can
+        never disagree."""
+        if self._kreach_stride is None:
+            from repro.core.oracles import kreach_stride
+            g = self.graph
+            self._kreach_stride = kreach_stride(
+                g.n, float(g.weights.max()) if g.m else 1.0)
+        return self._kreach_stride
 
     # ------------------------------------------------------------------ plan
 
@@ -115,19 +129,27 @@ class FPPSession:
 
     def prepared(self, *, block_size: Optional[int] = None,
                  method: Optional[str] = None,
-                 unit_weights: bool = False):
-        """(BlockGraph, perm) for the plan (or overrides), cached."""
+                 unit_weights: bool = False,
+                 weights: Optional[str] = None):
+        """(BlockGraph, perm) for the plan (or overrides), cached per
+        weight variant.
+
+        ``weights`` names a ``core/queries.reweight`` variant (natural /
+        unit / zero / shift); ``unit_weights=True`` is the legacy spelling
+        of ``weights="unit"``.  Reweighting never touches the structure, so
+        every variant of one (block_size, method) shares the same perm —
+        each just carries its own block values.
+        """
+        from repro.core.queries import reweight
         p = self.current_plan
         bs = int(block_size or p.block_size)
         meth = method or p.method
-        key = (bs, meth, bool(unit_weights))
+        variant = weights or ("unit" if unit_weights else "natural")
+        key = (bs, meth, variant)
         with self._prepare_lock:
             if key not in self._prepared:
-                g = self.graph
-                if unit_weights:
-                    g = CSRGraph(indptr=g.indptr, indices=g.indices,
-                                 weights=np.ones_like(g.weights),
-                                 n=g.n, m=g.m)
+                stride = self.kreach_stride if variant == "shift" else None
+                g = reweight(self.graph, variant, stride=stride)
                 self._prepared[key] = partition(g, bs, method=meth)
             return self._prepared[key]
 
@@ -143,18 +165,29 @@ class FPPSession:
             use_pallas: bool = False, mesh=None,
             max_visits: Optional[int] = None,
             fused: Optional[bool] = None,
-            frontier_mode: str = "dense") -> SessionResult:
+            frontier_mode: str = "dense",
+            k: int = 8, length: int = 32,
+            seed: int = 0) -> SessionResult:
         """Execute one query batch.  Sources and values use original ids.
 
         ``fused`` defaults to the plan's setting (``plan(fused=True)``);
         pass it explicitly to override per run.  ``frontier_mode="sparse"``
         selects the fused kernel's chunk-skipping late-frontier relaxation
         (minplus kinds only).
+
+        The session resolves each kind's weight variant and decode: ``cc``
+        values come back as canonical min-original-id component labels
+        (identical across every lane and backend), ``kreach`` takes the
+        hop budget ``k`` (values = dist of the hop-minimal path within the
+        budget; residual = hop counts), ``rw`` takes ``length``/``seed``
+        (values = occupancy counts; fused is not applicable and is
+        ignored — the walker loop has no megastep to fuse).
         """
+        from repro.core.queries import WEIGHT_VARIANTS
         sources = np.asarray(sources)
         p = self.current_plan
         bg, perm = self.prepared(block_size=block_size, method=method,
-                                 unit_weights=(kind == "bfs"))
+                                 weights=WEIGHT_VARIANTS.get(kind, "natural"))
         yc = (yield_config if yield_config is not None else
               (p.yield_config or _planner.default_yield_config(kind, bg)))
         bk = backend or p.backend
@@ -164,15 +197,19 @@ class FPPSession:
             # plan(fused="auto") resolves per kind from committed yardsticks,
             # falling back to the XLA megastep when this partitioning is
             # denser than the fused-kernel dmax budget.
-            fused = bk == "engine" and p.resolve_fused(
+            fused = bk == "engine" and kind != "rw" and p.resolve_fused(
                 kind, dmax=bg.nbr_part.shape[1])
         out = _backends.run_query(
             bk, kind, bg, perm[sources],
             schedule=schedule or p.schedule, yield_config=yc,
             alpha=alpha, eps=eps, use_pallas=use_pallas, mesh=mesh,
             max_visits=max_visits,
-            fused=bool(fused), frontier_mode=frontier_mode)
+            fused=bool(fused) and kind != "rw", frontier_mode=frontier_mode,
+            k=k, hop_stride=(self.kreach_stride if kind == "kreach" else 1.0),
+            length=length, seed=seed)
         values = out.values[:, perm]          # back to original vertex ids
+        if kind == "cc":
+            values = _backends.canonicalize_cc(values)
         residual = None if out.residual is None else out.residual[:, perm]
         return SessionResult(kind=kind, backend=backend or p.backend,
                              values=values, residual=residual,
@@ -186,7 +223,8 @@ class FPPSession:
                yield_config: Optional[YieldConfig] = None,
                alpha: float = 0.15, eps: float = 1e-4,
                harvest_every: int = 1, k_visits: int = 64,
-               fused: Optional[bool] = None, megastep=None):
+               fused: Optional[bool] = None, megastep=None,
+               k: int = 8, length: int = 32, seed: int = 0):
         """A streaming executor: submit query batches as they arrive
         (fpp/streaming.py); answers match the one-shot run of the union.
         ``k_visits`` sets the device-resident chunk size — admission and
@@ -197,10 +235,23 @@ class FPPSession:
         once per chunk regardless.  ``fused`` defaults to the plan's
         (per-kind under ``fused="auto"``); ``megastep`` injects a warm
         pre-compiled executable (serve/compile_cache.py) so the executor
-        never traces."""
-        from repro.fpp.streaming import StreamingExecutor
+        never traces.
+
+        ``kind="rw"`` returns a :class:`~repro.fpp.streaming.WalkExecutor`
+        (same submit/pump/take_finished surface) whose walks are bitwise
+        the tape walks of ``run("rw", ...)`` at the executor's ``length``
+        and ``seed``; ``kind="kreach"`` streams at hop budget ``k``.
+        """
+        from repro.fpp.streaming import StreamingExecutor, WalkExecutor
+        from repro.core.queries import WEIGHT_VARIANTS
+        if kind == "rw":
+            # ``megastep`` doubles as the warm compiled walk visit here —
+            # one injection surface for every lane kind
+            return WalkExecutor(self, capacity=capacity, length=length,
+                                seed=seed, k_visits=k_visits, visit=megastep)
         if fused is None:
-            bg, _ = self.prepared(unit_weights=(kind == "bfs"))
+            bg, _ = self.prepared(
+                weights=WEIGHT_VARIANTS.get(kind, "natural"))
             fused = self.current_plan.resolve_fused(
                 kind, k_visits, dmax=bg.nbr_part.shape[1])
         return StreamingExecutor(
@@ -208,7 +259,7 @@ class FPPSession:
             schedule=schedule or self.current_plan.schedule,
             yield_config=yield_config, alpha=alpha, eps=eps,
             harvest_every=harvest_every, k_visits=k_visits,
-            fused=bool(fused), megastep=megastep)
+            fused=bool(fused), megastep=megastep, k=k)
 
     # --------------------------------------------------- paper applications
 

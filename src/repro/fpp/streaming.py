@@ -60,8 +60,9 @@ def build_stream_engine(session, kind: str, capacity: int, *,
                         yield_config: Optional[YieldConfig] = None,
                         alpha: float = 0.15, eps: float = 1e-4,
                         seed: int = 0, k_visits: int = 64,
-                        fused: bool = False) -> Tuple[FPPEngine, object,
-                                                      np.ndarray]:
+                        fused: bool = False,
+                        k: int = 8) -> Tuple[FPPEngine, object,
+                                             np.ndarray]:
     """(engine, bg, perm) exactly as a :class:`StreamingExecutor` for the
     same arguments would build them.
 
@@ -70,16 +71,22 @@ def build_stream_engine(session, kind: str, capacity: int, *,
     from this engine is interchangeable with the one the executor would
     trace itself, because the graph staging (``session.prepared`` is
     cached per session), yield config, algebra parameters, and chunk size
-    all come from here.
+    all come from here.  ``k`` is the kreach hop budget (ignored by other
+    kinds); the stride comes from the session so the shift variant and the
+    decode can never disagree.
     """
-    bg, perm = session.prepared(unit_weights=(kind == "bfs"))
+    from repro.core.queries import WEIGHT_VARIANTS
+    from repro.fpp.backends import _ENGINE_MODE
+    bg, perm = session.prepared(weights=WEIGHT_VARIANTS.get(kind, "natural"))
     yc = (yield_config if yield_config is not None
           else _planner.default_yield_config(kind, bg))
-    mode = "push" if kind == "ppr" else "minplus"
-    engine = FPPEngine(bg, mode=mode, num_queries=int(capacity),
+    engine = FPPEngine(bg, mode=_ENGINE_MODE[kind],
+                       num_queries=int(capacity),
                        yield_config=yc, schedule=schedule, alpha=alpha,
                        eps=eps, seed=seed, k_visits=int(k_visits),
-                       fused=bool(fused))
+                       fused=bool(fused), hop_budget=int(k),
+                       hop_stride=(session.kreach_stride
+                                   if kind == "kreach" else 1.0))
     return engine, bg, perm
 
 
@@ -142,20 +149,22 @@ class StreamingExecutor:
                  alpha: float = 0.15, eps: float = 1e-4,
                  harvest_every: int = 1, seed: int = 0,
                  k_visits: int = 64, fused: bool = False,
-                 megastep: Optional[Callable] = None):
-        if kind not in ("sssp", "bfs", "ppr"):
-            raise ValueError(f"streaming supports sssp/bfs/ppr, got {kind!r}")
+                 megastep: Optional[Callable] = None, k: int = 8):
+        if kind not in ("sssp", "bfs", "ppr", "cc", "kreach"):
+            raise ValueError(f"streaming supports sssp/bfs/ppr/cc/kreach "
+                             f"(rw streams via WalkExecutor), got {kind!r}")
         self.session = session
         self.kind = kind
         self.capacity = int(capacity)
         self.alpha, self.eps = alpha, eps
+        self.k = int(k)
         # per-visit cadence of the legacy step() path; pump()/run() harvest
         # at megastep chunk boundaries instead
         self.harvest_every = max(1, int(harvest_every))
         self.engine, bg, perm = build_stream_engine(
             session, kind, self.capacity, schedule=schedule,
             yield_config=yield_config, alpha=alpha, eps=eps, seed=seed,
-            k_visits=k_visits, fused=fused)
+            k_visits=k_visits, fused=fused, k=k)
         self.bg, self.perm = bg, perm
         self.mode = self.engine.mode
         # own megastep with the pending-lane harvest mask folded into the
@@ -190,6 +199,11 @@ class StreamingExecutor:
         self._pending_q = jax.jit(lambda planes, buf: jnp.any(
             alg.pending(buf[:-1], planes, deg), axis=(0, 2)))
         self._prio_row = jax.jit(alg.prio_of)
+        if self.mode == "cc":
+            # cc admission buffers the whole label plane (every partition),
+            # so the priority refresh runs vmapped over all rows at once
+            self._cc_plane = jnp.asarray(_visit.cc_label_plane(bg))
+            self._prio_all = jax.jit(jax.vmap(alg.prio_of))
 
     # ----------------------------------------------------------- lifecycle
 
@@ -218,9 +232,37 @@ class StreamingExecutor:
 
     # ----------------------------------------------------------- admission
 
+    def _inject_plane(self, q: StreamQuery, slot: int):
+        """cc admission: a cc lane's init is the whole label plane, not one
+        source op — buffer it across every partition exactly as the
+        one-shot run's ``init_ops`` does (the source only names the lane),
+        then refresh every partition's priority row in one vmapped
+        dispatch.  Late cc arrivals therefore converge to the identical
+        labels a one-shot lane computes: same initial buffer, same
+        fixpoint."""
+        st = self.state
+        P = self.bg.num_parts
+        buf = st.buf.at[:P, slot, :].set(self.algebra.combine(
+            st.buf[:P, slot, :], self._cc_plane))
+        newprio, newops = self._prio_all(buf[:P], st.planes,
+                                         self.engine.dg.deg)
+        came_alive = (~np.isfinite(np.asarray(st.prio))
+                      & np.isfinite(np.asarray(newprio)))
+        stamp = jnp.where(jnp.asarray(came_alive), jnp.int32(self.visits),
+                          st.stamp)
+        self.state = st._replace(buf=buf, prio=jnp.asarray(newprio),
+                                 ops_count=jnp.asarray(newops), stamp=stamp)
+        q.slot = slot
+        q.admitted_visit = self.visits
+        q.admitted_sync = self.host_syncs
+        self.slot_qid[slot] = q.qid
+
     def _inject(self, q: StreamQuery, slot: int):
         """Buffer the query's source op — identical to one-shot init, so the
         scheduler sees a late arrival as just another pending partition."""
+        if self.mode == "cc":
+            self._inject_plane(q, slot)
+            return
         B = self.engine.dg.block_size
         src = int(self.perm[q.source])
         pv, lv = divmod(src, B)
@@ -280,7 +322,23 @@ class StreamingExecutor:
                 rfull = (np.asarray(st.planes[1][:, slot, :])
                          + np.asarray(st.buf[:-1, slot, :])).reshape(-1)[:n]
                 q.residual = rfull[self.perm].astype(np.float32)
-            q.values = vals[self.perm].astype(np.float32)
+            if self.mode == "kreach":
+                # unpack the lexicographic (hops, dist) fixpoint with the
+                # engine's stride/budget — elementwise, so decode-then-perm
+                # equals perm-then-decode
+                from repro.core.oracles import decode_kreach
+                dv, dh = decode_kreach(vals[None, :], self.engine.hop_stride,
+                                       self.engine.hop_budget)
+                q.values = dv[0][self.perm].astype(np.float32)
+                q.residual = dh[0][self.perm].astype(np.float32)
+            elif self.mode == "cc":
+                # raw reordered-rep labels -> canonical min-original-id
+                # labels, after the perm mapping (same order as session.run)
+                from repro.fpp.backends import canonicalize_cc
+                q.values = canonicalize_cc(
+                    vals[self.perm][None, :])[0]
+            else:
+                q.values = vals[self.perm].astype(np.float32)
             q.edges = float(self._edges[slot])
             q.finished_visit = self.visits
             q.finished_sync = self.host_syncs
@@ -390,6 +448,197 @@ class StreamingExecutor:
 
     def run(self, max_visits: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Drain queue + lanes; returns {qid: values} (original ids)."""
+        budget = max_visits or 2000 * self.bg.num_parts
+        while (self.queue or self.active) and self.visits < budget:
+            if self.pump(budget - self.visits) == 0:
+                break
+        with self._lock:
+            self._harvest()
+            return {qid: q.values
+                    for qid, q in self.queries.items() if q.done}
+
+    def result(self, qid: int) -> StreamQuery:
+        return self.queries[qid]
+
+
+class WalkExecutor:
+    """Slot-recycling random-walk lanes: the :class:`StreamingExecutor`
+    surface (submit / pump / run / take_finished / result) over the
+    buffered walker loop (core/randomwalk.py).
+
+    A lane holds one walker; free lanes park with ``steps = length`` so the
+    jitted visit's liveness mask skips them.  Because the rw tape is keyed
+    by (source, step) — never by lane, batch, or visit order — a walker
+    admitted into a recycled slot mid-stream draws exactly the trajectory
+    the one-shot ``session.run("rw", ...)`` would, so served occupancy rows
+    are bitwise the session's.  ``length`` and ``seed`` are executor-wide
+    (like ``alpha``/``eps`` on the push lanes): they parameterize the
+    compiled visit, so requests wanting different values belong on a
+    different executor.
+
+    Completion is per-lane exact (``steps >= length``), values are
+    occupancy counts [n] in original ids (start + each step), and
+    ``edges`` bills the steps actually taken — the same contract
+    ``backends.run_query("rw")`` returns.  Thread-safety matches
+    StreamingExecutor: one lock, foreign submits join at visit boundaries.
+    """
+
+    def __init__(self, session, capacity: int = 16, *, length: int = 32,
+                 seed: int = 0, k_visits: int = 64, visit=None):
+        from repro.core.engine import DeviceGraph
+        from repro.core.randomwalk import make_walk_visit
+        from repro.core.yielding import NO_YIELD
+        self.session = session
+        self.kind = "rw"
+        self.capacity = int(capacity)
+        self.length, self.seed = int(length), int(seed)
+        self.k_visits = int(k_visits)
+        bg, perm = session.prepared()
+        self.bg, self.perm = bg, perm
+        self.dg = DeviceGraph.build(bg, NO_YIELD, self.capacity)
+        # ``visit`` injects a warm AOT-compiled walk visit
+        # (serve/compile_cache.build_warm_megastep kind="rw") — same
+        # function of the same graph constants, so injection never changes
+        # a trajectory
+        self._visit = (visit if visit is not None
+                       else make_walk_visit(self.dg, self.length, self.seed))
+        B = self.dg.block_size
+        # one visit streams the resident diagonal block plus every boundary
+        # block against it — the same neighborhood the planner budgets
+        self._visit_bytes = float(
+            (1 + self.dg.nbr_blk.shape[1]) * B * B * 4)
+        Q, n_pad = self.capacity, self.dg.num_parts * B
+        self._pos = jnp.zeros(Q, jnp.int32)
+        self._steps = jnp.full(Q, self.length, jnp.int32)   # parked
+        self._part = jnp.zeros(Q, jnp.int32)
+        self._src = jnp.zeros(Q, jnp.int32)
+        self._thash = jnp.zeros(Q, jnp.uint32)
+        self._occ = jnp.zeros((Q, n_pad), jnp.float32)
+        self._lock = threading.RLock()
+        self.finished: collections.deque = collections.deque()
+        self.queue: collections.deque = collections.deque()
+        self.queries: Dict[int, StreamQuery] = {}
+        self.free_slots: List[int] = list(range(self.capacity))
+        self.slot_qid = np.full(self.capacity, -1, dtype=np.int64)
+        self.visits = 0
+        self.modeled_bytes = 0.0
+        self.host_syncs = 0
+        self._next_qid = 0
+
+    # ----------------------------------------------------------- admission
+
+    def submit(self, sources: np.ndarray) -> List[int]:
+        """Enqueue walk sources (original ids); returns their qids."""
+        with self._lock:
+            qids = []
+            for s in np.atleast_1d(np.asarray(sources)):
+                q = StreamQuery(qid=self._next_qid, source=int(s),
+                                submitted_visit=self.visits)
+                self._next_qid += 1
+                self.queries[q.qid] = q
+                self.queue.append(q.qid)
+                qids.append(q.qid)
+            self._admit()
+            return qids
+
+    def _admit(self):
+        B = self.dg.block_size
+        while self.free_slots and self.queue:
+            qid = self.queue.popleft()
+            slot = self.free_slots.pop(0)
+            q = self.queries[qid]
+            src = int(self.perm[q.source])
+            # identical to randomwalk.init_walk_state, per lane
+            self._pos = self._pos.at[slot].set(src)
+            self._steps = self._steps.at[slot].set(0)
+            self._part = self._part.at[slot].set(src // B)
+            self._src = self._src.at[slot].set(src)
+            self._thash = self._thash.at[slot].set(jnp.uint32(src))
+            self._occ = self._occ.at[slot].set(0.0).at[slot, src].set(1.0)
+            q.slot = slot
+            q.admitted_visit = self.visits
+            q.admitted_sync = self.host_syncs
+            self.slot_qid[slot] = q.qid
+
+    # ------------------------------------------------------------- harvest
+
+    def _harvest(self):
+        active = self.slot_qid >= 0
+        if not active.any():
+            return
+        self.host_syncs += 1
+        steps = np.asarray(self._steps)
+        done = active & (steps >= self.length)
+        if not done.any():
+            return
+        occ = np.asarray(self._occ)
+        n = self.bg.n
+        for slot in np.flatnonzero(done):
+            q = self.queries[int(self.slot_qid[slot])]
+            q.values = occ[slot, :n][self.perm].astype(np.float32)
+            q.edges = float(steps[slot])
+            q.finished_visit = self.visits
+            q.finished_sync = self.host_syncs
+            q.done = True
+            self.finished.append(q.qid)
+            self.slot_qid[slot] = -1
+            self.free_slots.append(int(slot))
+            # park the lane; its occupancy row resets at the next admit
+            self._steps = self._steps.at[int(slot)].set(self.length)
+
+    # ---------------------------------------------------------------- loop
+
+    @property
+    def active(self) -> int:
+        return int((self.slot_qid >= 0).sum())
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def take_finished(self) -> List[int]:
+        with self._lock:
+            out = list(self.finished)
+            self.finished.clear()
+            return out
+
+    def pump(self, max_visits: int) -> int:
+        """Advance up to ``max_visits`` buffered walk visits, admitting and
+        harvesting around each (walk scheduling reads walker residency from
+        the host every visit, so per-visit boundaries cost no extra sync).
+        Returns visits executed."""
+        start = self.visits
+        while True:
+            with self._lock:
+                if self.visits - start >= int(max_visits):
+                    break
+                self._admit()
+                self.host_syncs += 1
+                steps = np.asarray(self._steps)
+                part = np.asarray(self._part)
+                live = (self.slot_qid >= 0) & (steps < self.length)
+                if not live.any():
+                    self._harvest()
+                    self._admit()
+                    if not self.queue and self.active == 0:
+                        break
+                    continue    # freshly admitted (or length-0) lanes
+                # max-ops scheduling: the partition with most live walkers
+                counts = np.bincount(part[live],
+                                     minlength=self.dg.num_parts)
+                p = int(np.argmax(counts))
+                (self._pos, self._steps, self._part, self._thash,
+                 self._occ) = self._visit(self._pos, self._steps,
+                                          self._part, self._src,
+                                          self._thash, self._occ,
+                                          jnp.int32(p))
+                self.visits += 1
+                self.modeled_bytes += self._visit_bytes
+                self._harvest()
+        return self.visits - start
+
+    def run(self, max_visits: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drain queue + lanes; returns {qid: occupancy} (original ids)."""
         budget = max_visits or 2000 * self.bg.num_parts
         while (self.queue or self.active) and self.visits < budget:
             if self.pump(budget - self.visits) == 0:

@@ -29,29 +29,46 @@ def load_edge_list(path: str, *, symmetrize: bool = True,
                    weighted: bool | None = None,
                    comment: str = "#") -> CSRGraph:
     """SNAP-style whitespace edge list: ``src dst [weight]`` per line.
-    Vertex ids are compacted to 0..n-1.  .gz transparently supported."""
+    Vertex ids are compacted to 0..n-1.  .gz transparently supported.
+
+    ``weighted=None`` infers from the *whole* file: all 3-column lines
+    means weighted, all 2-column means unit weights, and a mix raises
+    (inferring from the first line silently dropped weights in mixed
+    files).  An explicit ``weighted=True``/``False`` keeps the lenient
+    behavior — missing third columns read as 1.0 / extra columns are
+    ignored.
+    """
     opener = gzip.open if path.endswith(".gz") else open
     src, dst, w = [], [], []
+    arities = set()
     with opener(path, "rt") as f:
-        for line in f:
+        for lineno, line in enumerate(f, 1):
             line = line.strip()
             if not line or line.startswith(comment):
                 continue
             parts = line.split()
             src.append(int(parts[0]))
             dst.append(int(parts[1]))
-            if weighted is None:
-                weighted = len(parts) > 2
-            if weighted:
-                w.append(float(parts[2]) if len(parts) > 2 else 1.0)
+            has_w = len(parts) > 2
+            arities.add(has_w)
+            if weighted is None and len(arities) > 1:
+                raise ValueError(
+                    f"{path}:{lineno}: inconsistent edge-list arity — the "
+                    f"file mixes 2-column and 3-column lines; pass "
+                    f"weighted=True or weighted=False to disambiguate")
+            w.append(float(parts[2]) if has_w else 1.0)
+    if weighted is None:
+        weighted = True in arities
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
+    # id compaction via sorted-search, not a dense [0, ids.max()] table —
+    # SNAP dumps carry sparse 64-bit ids and a dense remap would OOM
     ids = np.unique(np.concatenate([src, dst]))
-    remap = np.zeros(ids.max() + 1 if ids.size else 1, np.int64)
-    remap[ids] = np.arange(ids.size)
+    src = np.searchsorted(ids, src)
+    dst = np.searchsorted(ids, dst)
     weights = (np.asarray(w, np.float32) if weighted
                else np.ones(src.size, np.float32))
-    return CSRGraph.from_edges(int(ids.size), remap[src], remap[dst],
+    return CSRGraph.from_edges(int(ids.size), src, dst,
                                weights, symmetrize=symmetrize)
 
 

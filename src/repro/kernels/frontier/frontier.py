@@ -32,6 +32,7 @@ def _on_tpu() -> bool:
 
 
 def frontier_tile(buf: jax.Array, dist: jax.Array, *, delta: float,
+                  strict: bool = False,
                   ) -> Tuple[jax.Array, jax.Array, jax.Array,
                              jax.Array, jax.Array]:
     """Δ-window frontier math over one resident [QT, B] tile, kernel-safe.
@@ -41,8 +42,12 @@ def frontier_tile(buf: jax.Array, dist: jax.Array, *, delta: float,
     active set each inner round.  Expression-for-expression identical to
     the XLA ``minplus_algebra.begin`` math in ``core/visit.py`` — the
     basis for the fused path's bit-parity with the megastep oracle.
+    ``strict`` mirrors ``minplus_algebra(strict=...)``: the zero-weight
+    cc instantiation pends ops only on strict improvement (``buf < dist``)
+    so equal label re-sends cannot livelock the visit loop.
     """
-    pending = jnp.isfinite(buf) & (buf <= dist)
+    pending = jnp.isfinite(buf) & ((buf < dist) if strict
+                                   else (buf <= dist))
     d1 = jnp.minimum(dist, jnp.where(pending, buf, INF))
     alpha = jnp.min(jnp.where(pending, d1, INF), axis=1, keepdims=True)
     active = pending & (d1 <= alpha + delta)

@@ -206,6 +206,8 @@ def make_fused_visit(dg, algebra, max_rounds: int, *,
     if u_chunk is None:
         u_chunk = SPARSE_U_CHUNK if sparse else B
     window = algebra.param("window") if name == "minplus" else 0.0
+    strict = (bool(dict(algebra.params).get("strict", 0.0))
+              if name == "minplus" else False)
     alpha = algebra.param("alpha") if name == "push" else 0.0
     eps = algebra.param("eps") if name == "push" else 0.0
     combine = algebra.combine
@@ -254,7 +256,8 @@ def make_fused_visit(dg, algebra, max_rounds: int, *,
             if name == "minplus":
                 d0 = state_ref[0, 0]
                 d1, _, alpha0, pending0, _ = frontier(buf_row, d0,
-                                                      delta=window)
+                                                      delta=window,
+                                                      strict=strict)
 
                 def act_of(d, pending, eq):
                     return (pending & (d <= alpha0 + window)

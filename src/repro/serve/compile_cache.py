@@ -76,19 +76,24 @@ def session_uid(session) -> int:
 
 def warm_key(session, graph: str, kind: str, k_visits: int, capacity: int, *,
              fused: bool = False, alpha: float = 0.15, eps: float = 1e-4,
-             schedule: str = "priority", seed: int = 0) -> tuple:
+             schedule: str = "priority", seed: int = 0, k: int = 8,
+             length: int = 32, walk_seed: int = 0) -> tuple:
     """The cache key: every parameter that reaches the traced program,
     including the identity of the session whose graph constants the
-    executable bakes in (:func:`session_uid`)."""
+    executable bakes in (:func:`session_uid`).  ``k`` (the kreach hop
+    budget) shifts the engine's finalize, ``length``/``walk_seed``
+    parameterize the rw walk visit — each reaches some kind's compiled
+    program, so each is in every key."""
     return (str(graph), str(kind), int(k_visits), int(capacity),
             bool(fused), float(alpha), float(eps), str(schedule), int(seed),
-            session_uid(session))
+            int(k), int(length), int(walk_seed), session_uid(session))
 
 
 def build_warm_megastep(session, kind: str, capacity: int, *,
                         schedule: str = "priority", alpha: float = 0.15,
                         eps: float = 1e-4, seed: int = 0, k_visits: int = 64,
-                        fused: bool = False):
+                        fused: bool = False, k: int = 8, length: int = 32,
+                        walk_seed: int = 0):
     """AOT-compile the streaming megastep for these parameters.
 
     Returns a ``jax.stages.Compiled`` with the executor's calling
@@ -98,10 +103,27 @@ def build_warm_megastep(session, kind: str, capacity: int, *,
     this capacity.  Injected via ``StreamingExecutor(megastep=...)`` (or
     ``session.stream(megastep=...)``) it replaces the trace the executor
     would otherwise do on first pump.
+
+    ``kind="rw"`` has no megastep — its lane is the buffered walk visit —
+    so the warm executable is the AOT-compiled ``make_walk_visit`` for
+    (``length``, ``walk_seed``) at this capacity, injected via
+    ``WalkExecutor(visit=...)`` through the same ``megastep=`` plumbing.
     """
+    if kind == "rw":
+        from repro.core.engine import DeviceGraph
+        from repro.core.randomwalk import make_walk_visit
+        from repro.core.yielding import NO_YIELD
+        bg, _perm = session.prepared()
+        dg = DeviceGraph.build(bg, NO_YIELD, int(capacity))
+        visit = make_walk_visit(dg, int(length), int(walk_seed))
+        Q = int(capacity)
+        zi = jnp.zeros(Q, jnp.int32)
+        occ = jnp.zeros((Q, dg.num_parts * dg.block_size), jnp.float32)
+        return visit.lower(zi, zi, zi, zi, jnp.zeros(Q, jnp.uint32), occ,
+                           jnp.int32(0)).compile()
     engine, _bg, _perm = build_stream_engine(
         session, kind, int(capacity), schedule=schedule, alpha=alpha,
-        eps=eps, seed=seed, k_visits=k_visits, fused=fused)
+        eps=eps, seed=seed, k_visits=k_visits, fused=fused, k=k)
     megastep = build_stream_megastep(engine, schedule)
     state = _visit.init_engine_state(
         engine.algebra, engine.dg, np.empty(0, dtype=np.int64),
@@ -160,9 +182,11 @@ class MegastepCache:
     def get_or_build(self, session, graph: str, kind: str, capacity: int, *,
                      k_visits: int = 64, fused: bool = False,
                      alpha: float = 0.15, eps: float = 1e-4,
-                     schedule: str = "priority", seed: int = 0):
+                     schedule: str = "priority", seed: int = 0,
+                     k: int = 8, length: int = 32, walk_seed: int = 0):
         key = warm_key(session, graph, kind, k_visits, capacity, fused=fused,
-                       alpha=alpha, eps=eps, schedule=schedule, seed=seed)
+                       alpha=alpha, eps=eps, schedule=schedule, seed=seed,
+                       k=k, length=length, walk_seed=walk_seed)
         while True:
             with self._lock:
                 if key in self._cache:
@@ -183,7 +207,8 @@ class MegastepCache:
                 t0 = time.perf_counter()
                 exe = build_warm_megastep(
                     session, kind, capacity, schedule=schedule, alpha=alpha,
-                    eps=eps, seed=seed, k_visits=k_visits, fused=fused)
+                    eps=eps, seed=seed, k_visits=k_visits, fused=fused,
+                    k=k, length=length, walk_seed=walk_seed)
                 with self._lock:
                     self._cache[key] = exe
                     self._cache.move_to_end(key)

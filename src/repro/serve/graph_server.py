@@ -4,10 +4,13 @@ The paper's fork-processing pattern — many independent queries sharing one
 graph — is exactly the shape of a serving workload, and DESIGN.md §4.2
 documents this module as its production-facing front end.  A
 :class:`GraphServer` accepts a continuous stream of heterogeneous
-:class:`GraphRequest`\\ s — mixed kinds (sssp/bfs/ppr), mixed priorities,
-multiple registered graphs, multiple tenants — and multiplexes them onto
-per-(graph, kind) **lane pools**, each backed by the §3.3
-``StreamingExecutor`` and its device-resident K-visit megastep (§2.3).
+:class:`GraphRequest`\\ s — mixed kinds (sssp/bfs/ppr/cc/kreach/rw), mixed
+priorities, multiple registered graphs, multiple tenants — and multiplexes
+them onto per-(graph, kind) **lane pools**, each backed by the §3.3
+``StreamingExecutor`` and its device-resident K-visit megastep (§2.3)
+(random-walk pools ride the ``WalkExecutor``'s buffered walk visit behind
+the same executor surface; ``k``/``length``/``walk_seed`` parameterize the
+kreach and rw pools server-wide, exactly as ``alpha``/``eps`` do ppr).
 
 Serving runs as a **continuous-batching engine** with three concurrent
 lanes (serve/dispatch.py):
@@ -86,7 +89,7 @@ from repro.fpp.session import FPPSession
 from repro.serve.compile_cache import MegastepCache, session_uid, warm_key
 from repro.serve.result_cache import CacheEntry, ResultCache, result_key
 
-SERVABLE_KINDS = ("sssp", "bfs", "ppr")
+SERVABLE_KINDS = ("sssp", "bfs", "ppr", "cc", "kreach", "rw")
 
 #: stamp value for pools with nothing queued or in flight (never selected —
 #: their priority is +inf — but keeps the stamp array total)
@@ -154,18 +157,23 @@ class _LanePool:
     def __init__(self, graph: str, kind: str, session: FPPSession,
                  capacity: int, k_visits: int, alpha: float, eps: float,
                  *, fused: bool = False, megastep=None,
-                 lock: Optional[threading.RLock] = None):
+                 lock: Optional[threading.RLock] = None,
+                 k: int = 8, length: int = 32, walk_seed: int = 0):
         self.graph = graph
         self.kind = kind
         self.session = session
         self.capacity = int(capacity)
         self.k_visits = int(k_visits)
         self.alpha, self.eps = alpha, eps
+        self.k = int(k)
+        self.length, self.walk_seed = int(length), int(walk_seed)
         self.fused = bool(fused)
         self.exec = session.stream(kind, capacity=self.capacity,
                                    k_visits=self.k_visits,
                                    alpha=alpha, eps=eps,
-                                   fused=self.fused, megastep=megastep)
+                                   fused=self.fused, megastep=megastep,
+                                   k=self.k, length=self.length,
+                                   seed=self.walk_seed)
         # tenant -> heap of (priority, seq, rid): priority then arrival
         self.queues: Dict[str, List[Tuple[float, int, int]]] = {}
         self.qid_rid: Dict[int, int] = {}      # executor qid -> server rid
@@ -211,7 +219,9 @@ class _LanePool:
         self.exec = self.session.stream(self.kind, capacity=self.capacity,
                                         k_visits=self.k_visits,
                                         alpha=self.alpha, eps=self.eps,
-                                        fused=self.fused, megastep=megastep)
+                                        fused=self.fused, megastep=megastep,
+                                        k=self.k, length=self.length,
+                                        seed=self.walk_seed)
         self.qid_rid = {}
 
 
@@ -265,6 +275,7 @@ class GraphServer:
     def __init__(self, *, capacity: int = 8, max_capacity: int = 64,
                  k_visits: int = 64, schedule: str = "priority",
                  alpha: float = 0.15, eps: float = 1e-4,
+                 k: int = 8, length: int = 32, walk_seed: int = 0,
                  autoscaler: Optional[Callable[[dict], int]]
                  = default_autoscaler,
                  clock: Callable[[], float] = time.monotonic,
@@ -284,6 +295,10 @@ class GraphServer:
         self.max_capacity = int(max_capacity)
         self.k_visits = int(k_visits)
         self.alpha, self.eps = float(alpha), float(eps)
+        # per-kind answer parameters, server-wide like alpha/eps: the
+        # kreach hop budget, the rw walk length and tape seed
+        self.k = int(k)
+        self.length, self.walk_seed = int(length), int(walk_seed)
         self.autoscaler = autoscaler
         self.clock = clock
         self.fused = fused
@@ -453,8 +468,12 @@ class GraphServer:
         return self
 
     def _resolve_fused(self, session: FPPSession, kind: str) -> bool:
+        if kind == "rw":
+            return False     # the walk visit has no megastep body to fuse
         if self.fused == "auto":
-            bg, _ = session.prepared(unit_weights=(kind == "bfs"))
+            from repro.core.queries import WEIGHT_VARIANTS
+            bg, _ = session.prepared(
+                weights=WEIGHT_VARIANTS.get(kind, "natural"))
             return _planner.auto_fused(kind, self.k_visits,
                                        dmax=bg.nbr_part.shape[1])
         return bool(self.fused)
@@ -465,7 +484,8 @@ class GraphServer:
         return dict(k_visits=self.k_visits,
                     fused=self._resolve_fused(session, kind),
                     alpha=self.alpha, eps=self.eps,
-                    schedule=session.current_plan.schedule, seed=0)
+                    schedule=session.current_plan.schedule, seed=0,
+                    k=self.k, length=self.length, walk_seed=self.walk_seed)
 
     def _pool(self, graph: str, kind: str) -> _LanePool:
         key = (graph, kind)
@@ -485,7 +505,9 @@ class GraphServer:
                                                    if k != "k_visits"}))
             pool = _LanePool(graph, kind, session, cap, self.k_visits,
                              self.alpha, self.eps, fused=params["fused"],
-                             megastep=megastep, lock=self._lock)
+                             megastep=megastep, lock=self._lock,
+                             k=self.k, length=self.length,
+                             walk_seed=self.walk_seed)
             self._pools[key] = pool
             self._pool_order.append(pool)
             if self._running:
@@ -494,8 +516,21 @@ class GraphServer:
 
     # --------------------------------------------------------------- submit
 
+    def _kind_params(self, kind: str) -> tuple:
+        """The per-kind answer identity beyond (kind, source, alpha, eps):
+        whatever else changes what the lane computes.  Folded into both
+        the dedup window and the result-cache key so a kreach answer at
+        one hop budget (or a walk at one length/seed) can never be served
+        for another."""
+        if kind == "kreach":
+            return (self.k,)
+        if kind == "rw":
+            return (self.length, self.walk_seed)
+        return ()
+
     def _dedup_key(self, req: GraphRequest) -> tuple:
-        return (req.graph, req.kind, int(req.source), self.alpha, self.eps)
+        return (req.graph, req.kind, int(req.source), self.alpha,
+                self.eps) + self._kind_params(req.kind)
 
     def _result_key(self, req: GraphRequest) -> tuple:
         """The result-cache key for this request: the dedup identity with
@@ -503,7 +538,8 @@ class GraphServer:
         that survives name reuse and bounds staleness across updates."""
         return result_key(session_uid(self._sessions[req.graph]),
                           self._epochs[req.graph], req.kind, req.source,
-                          self.alpha, self.eps)
+                          self.alpha, self.eps,
+                          params=self._kind_params(req.kind))
 
     def submit(self, req: GraphRequest) -> int:
         """Book one request; returns its rid (``result``/``poll`` for the

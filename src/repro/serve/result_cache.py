@@ -51,11 +51,17 @@ import numpy as np
 
 
 def result_key(session_uid: int, epoch: int, kind: str, source: int,
-               alpha: float, eps: float) -> tuple:
+               alpha: float, eps: float, params: tuple = ()) -> tuple:
     """The cache key: the dedup key's identity fields with the graph name
-    replaced by (session_uid, epoch) — value identity, not name identity."""
+    replaced by (session_uid, epoch) — value identity, not name identity.
+
+    ``params`` carries the extra per-kind answer identity beyond
+    (kind, source, alpha, eps): the kreach hop budget, the rw
+    (length, seed) pair.  It is part of the tuple, so two kinds whose
+    other fields collide (e.g. a cc and an sssp request on the same
+    source) still key distinctly through ``kind`` itself."""
     return (int(session_uid), int(epoch), str(kind), int(source),
-            float(alpha), float(eps))
+            float(alpha), float(eps)) + tuple(params)
 
 
 @dataclasses.dataclass(frozen=True)

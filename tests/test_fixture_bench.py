@@ -1,0 +1,146 @@
+"""The committed SNAP-style fixture and what rides on it.
+
+``tests/data/snap_tiny.txt.gz`` is the one graph in the repo that is
+*data*, not a generator: sparse 64-bit vertex ids, tab-separated integer
+weights, comment header, hub-heavy degree tail.  These tests pin
+
+  * the ingestion path — ``build_suite("snap-tiny")`` goes through
+    ``graphs.io.load_edge_list`` (id compaction, weight parsing) and
+    lands on the exact committed shape;
+  * the new kinds on really-ingested data — cc / kreach / rw match their
+    sequential oracles on the fixture, not just on generator graphs;
+  * degree-aware partition sizing — the planner's ``est_dmax`` guard
+    (DESIGN.md §3.1) picks a smaller block size than the degree-blind
+    model when hubs would drag a mega-neighborhood through VMEM;
+  * the fig9 bench path CI runs — ``fig9_overall.run(graphs=[fixture])``
+    produces well-formed BC/LL/NCP rows.
+"""
+import numpy as np
+import pytest
+
+from repro.core import oracles
+from repro.core.graph import CSRGraph
+from repro.fpp.planner import MemoryModel, est_dmax, model_block_size
+from repro.fpp.session import FPPSession
+from repro.graphs.generators import build_suite
+
+
+@pytest.fixture(scope="module")
+def fixture_graph():
+    return build_suite("snap-tiny")
+
+
+@pytest.fixture(scope="module")
+def fixture_sess(fixture_graph):
+    return FPPSession(fixture_graph).plan(num_queries=4, block_size=64)
+
+
+def test_fixture_loads_to_committed_shape(fixture_graph):
+    """The committed bytes parse to exactly this graph — a change here
+    means the fixture file was regenerated, which must be deliberate."""
+    g = fixture_graph
+    assert (g.n, g.m) == (960, 4822)
+    deg = g.out_degree()
+    # the hub tail the degree-aware planner exists for
+    assert deg.max() >= 40 * max(1.0, deg.mean())
+    # text weights: integers 1..9, parsed not defaulted
+    assert set(np.unique(g.weights)) <= set(float(x) for x in range(1, 10))
+    assert len(np.unique(g.weights)) > 1
+
+
+def test_fixture_unweighted_view(fixture_graph):
+    gu = build_suite("snap-tiny", weighted=False)
+    assert (gu.n, gu.m) == (fixture_graph.n, fixture_graph.m)
+    assert np.all(gu.weights == 1.0)
+
+
+def test_fixture_cc_matches_union_find(fixture_sess):
+    want = oracles.connected_components(fixture_sess.graph)
+    r = fixture_sess.run("cc", np.array([0, 7, 500]))
+    for q in range(3):
+        assert np.array_equal(r.values[q], want.astype(np.float32))
+
+
+def test_fixture_kreach_matches_dijkstra(fixture_sess):
+    srcs = np.array([3, 411])
+    r = fixture_sess.run("kreach", srcs, k=3)
+    for q, s in enumerate(srcs):
+        vals, hops, _ = oracles.kreach(fixture_sess.graph, int(s), 3,
+                                       stride=fixture_sess.kreach_stride)
+        assert np.array_equal(r.values[q], vals)
+        assert np.array_equal(r.residual[q], hops)
+
+
+def test_fixture_rw_replays_host_tape(fixture_sess):
+    srcs = np.array([5, 902])
+    r = fixture_sess.run("rw", srcs, length=10, seed=3)
+    bg, perm = fixture_sess.prepared()
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    for q, s in enumerate(srcs):
+        posns = oracles.random_walk(bg, int(perm[s]), 10, seed=3)
+        occ = np.zeros(fixture_sess.graph.n, np.float32)
+        for p in posns:
+            occ[inv[p]] += 1.0
+        assert np.array_equal(r.values[q], occ)
+
+
+# --------------------------------------------- degree-aware partition sizing
+
+
+def _star(n=4097):
+    hub = np.zeros(n - 1, np.int64)
+    leaves = np.arange(1, n, dtype=np.int64)
+    return CSRGraph.from_edges(n, hub, leaves, symmetrize=True)
+
+
+def test_est_dmax_sees_hubs():
+    g = _star()
+    # the hub's edges alone span ~every partition; a uniform ring doesn't
+    assert est_dmax(g, 256) >= 8
+    ring = CSRGraph.from_edges(
+        4096, np.arange(4096, dtype=np.int64),
+        (np.arange(4096, dtype=np.int64) + 1) % 4096, symmetrize=True)
+    assert est_dmax(ring, 256) <= est_dmax(g, 256)
+
+
+def test_degree_aware_sizing_shrinks_blocks_on_hub_graphs():
+    """On a star, the degree-blind model picks the largest B whose visit
+    working set fits; the degree-aware guard must reject candidates whose
+    hub *neighborhood* (diagonal + est_dmax boundary blocks) outgrows the
+    same VMEM budget and land on a smaller B."""
+    g = _star()
+    mem = MemoryModel(vmem_bytes=4 * 1024 * 1024)
+    blind = model_block_size(g, 8, mem, degree_aware=False)
+    aware = model_block_size(g, 8, mem, degree_aware=True)
+    assert aware < blind
+    # the guard's own arithmetic: the chosen B keeps the neighborhood in
+    # budget, the rejected one does not
+    assert (1 + est_dmax(g, aware)) * aware * aware * 4 <= mem.vmem_bytes
+    assert (1 + est_dmax(g, blind)) * blind * blind * 4 > mem.vmem_bytes
+
+
+def test_degree_aware_is_noop_on_uniform_graphs(fixture_graph):
+    """At the default (large) VMEM budget the guard never binds — even on
+    the hub-tailed fixture — so existing plans are unchanged."""
+    mem = MemoryModel()
+    assert model_block_size(fixture_graph, 8, mem, degree_aware=True) == \
+        model_block_size(fixture_graph, 8, mem, degree_aware=False)
+
+
+# ---------------------------------------------------------- fig9 bench path
+
+
+def test_fig9_runs_on_the_fixture():
+    """The CI bench step runs fig9 quick, whose sweep starts with the
+    fixture; pin the row contract on the fixture alone so a fixture or
+    session regression fails here, not in a bench artifact."""
+    from benchmarks.fig9_overall import COLUMNS, run
+    rows = run(quick=True, graphs=["snap-tiny"])
+    assert [r["app"] for r in rows] == ["BC", "LL", "NCP"]
+    for r in rows:
+        assert r["graph"] == "snap-tiny"
+        assert set(COLUMNS) <= set(r) | {"max_err"}
+        assert r["forkgraph_s"] > 0 and r["baseline_s"] > 0
+    # landmark labeling is exact vs the synchronous baseline
+    assert rows[1]["max_err"] == 0.0

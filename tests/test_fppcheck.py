@@ -350,9 +350,11 @@ def test_committed_budgets_cover_full_matrix():
     import json
     budgets = json.loads(
         (ROOT / "src" / "repro" / "analysis" / "budgets.json").read_text())
-    kinds = ("sssp", "bfs", "ppr")
+    kinds = ("sssp", "bfs", "ppr", "cc", "kreach", "rw")
     want = {f"{b}/{k}" for b in ("engine", "streaming", "baselines")
             for k in kinds}
+    want |= {f"engine-serve/{k}" for k in kinds}
+    want |= {f"engine-fused/{k}" for k in kinds if k != "rw"}
     want |= {f"distributed/{k}@d{d}" for k in kinds for d in (1, 8)}
     assert want <= set(budgets)
     for key, row in budgets.items():

@@ -47,3 +47,95 @@ def test_edge_list_comments_and_unweighted(tmp_path):
     g = load_edge_list(str(p), symmetrize=False)
     assert g.n == 3 and g.m == 3
     assert np.all(g.weights == 1.0)
+
+
+def test_edge_list_mixed_arity_raises(tmp_path):
+    """Inferring weightedness from the first line silently dropped the
+    weights of every later 3-column line; a mix must fail loudly."""
+    import pytest
+    p = tmp_path / "g.txt"
+    p.write_text("0 1\n1 2 3.5\n")
+    with pytest.raises(ValueError, match="inconsistent edge-list arity"):
+        load_edge_list(str(p))
+
+
+def test_edge_list_explicit_weighted_stays_lenient(tmp_path):
+    p = tmp_path / "g.txt"
+    p.write_text("0 1\n1 2 3.5\n2 0 2.0 extra-col-ignored\n")
+    g = load_edge_list(str(p), symmetrize=False, weighted=True)
+    s, d, w = g.edges()
+    got = {(int(a), int(b)): float(c) for a, b, c in zip(s, d, w)}
+    assert got == {(0, 1): 1.0, (1, 2): 3.5, (2, 0): 2.0}
+    gu = load_edge_list(str(p), symmetrize=False, weighted=False)
+    assert np.all(gu.weights == 1.0)
+
+
+def test_edge_list_compacts_sparse_64bit_ids(tmp_path):
+    """SNAP dumps carry sparse 64-bit vertex ids; compaction is a sorted
+    search, never a dense [0, max_id] table (which would OOM here)."""
+    big = 10 ** 14
+    p = tmp_path / "g.txt"
+    p.write_text(f"{big} {big + 7}\n{big + 7} 12\n12 {big}\n")
+    g = load_edge_list(str(p), symmetrize=False)
+    assert g.n == 3 and g.m == 3
+    # ids map order-preserving: 12 -> 0, big -> 1, big+7 -> 2
+    s, d, _ = g.edges()
+    assert {(int(a), int(b)) for a, b in zip(s, d)} == \
+        {(1, 2), (2, 0), (0, 1)}
+
+
+def test_edge_list_gz_fuzz_roundtrip(tmp_path):
+    """Deterministic fuzz of the text ⇄ CSRGraph ⇄ npz loop: duplicate
+    edges, self-loops, isolated vertices, comments, gz compression.  The
+    reloaded graph equals the saved one edge-for-edge under the loader's
+    id compaction (isolated vertices vanish, self-loops drop, duplicates
+    fold by min weight — all of which from_edges already canonicalized on
+    the way in, so the round trip is the identity)."""
+    from repro.core.graph import CSRGraph
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(8, 40))
+        m = int(rng.integers(n, 5 * n))
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)      # self-loops + duplicates likely
+        w = rng.integers(1, 100, m).astype(np.float64)  # %.6g-exact
+        g = CSRGraph.from_edges(n, src, dst, w)
+        ids = np.unique(np.concatenate([src[src != dst], dst[src != dst]]))
+
+        p = str(tmp_path / f"g{seed}.txt.gz")
+        save_edge_list(p, g)
+        g2 = load_edge_list(p, symmetrize=False)
+        assert g2.n == ids.size          # isolated vertices compact away
+        assert g2.m == g.m
+        s1, d1, w1 = g.edges()
+        remap = {int(v): i for i, v in enumerate(ids)}
+        e1 = sorted((remap[int(a)], remap[int(b)], float(c))
+                    for a, b, c in zip(s1, d1, w1))
+        s2, d2, w2 = g2.edges()
+        e2 = sorted((int(a), int(b), float(c))
+                    for a, b, c in zip(s2, d2, w2))
+        assert e1 == e2
+
+        pz = str(tmp_path / f"g{seed}.npz")
+        save_npz(pz, g2)
+        g3 = load_npz(pz)
+        assert np.array_equal(g3.indptr, g2.indptr)
+        assert np.array_equal(g3.indices, g2.indices)
+        assert np.array_equal(g3.weights, g2.weights)
+
+
+def test_from_edges_is_idempotent_under_its_own_canonicalization():
+    """Feeding a canonicalized graph's edges back through from_edges is
+    the identity: dedup, self-loop dropping, and sorting are stable."""
+    from repro.core.graph import CSRGraph
+    rng = np.random.default_rng(42)
+    src = rng.integers(0, 30, 200)
+    dst = rng.integers(0, 30, 200)
+    w = rng.uniform(0.5, 4.0, 200)
+    g = CSRGraph.from_edges(30, src, dst, w)
+    s, d, ww = g.edges()
+    g2 = CSRGraph.from_edges(30, np.asarray(s), np.asarray(d),
+                             np.asarray(ww))
+    assert np.array_equal(g.indptr, g2.indptr)
+    assert np.array_equal(g.indices, g2.indices)
+    assert np.array_equal(g.weights, g2.weights)

@@ -1,0 +1,271 @@
+"""Oracle-differential layer for the new visit-algebra workloads.
+
+Every new kind (cc, kreach, rw) is pinned three ways:
+
+  * backend differential — engine / baselines / distributed must agree
+    *bitwise* (cc and kreach run integer-valued f32 minplus; rw replays a
+    per-(source, step) tape), so any divergence is a real defect, never
+    tolerance noise;
+  * sequential oracle — union-find (cc), f32 Dijkstra over hop-shifted
+    weights (kreach), host tape replay (rw) in ``core/oracles.py``;
+  * serving differential — a ``GraphServer`` lane must hand back the very
+    bits ``session.run`` computes, including on a result-cache hit.
+
+Property tests (hypothesis) cover the invariants a fixed fixture can't:
+cc labelings are permutation-equivariant, kreach distances are monotone
+in the hop budget, and the cc fixpoint equals union-find on arbitrary
+random graphs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import oracles
+from repro.core.graph import CSRGraph
+from repro.fpp.session import FPPSession
+
+BACKENDS3 = ("engine", "baselines", "distributed")
+K = 3
+WALK_LEN = 12
+WALK_SEED = 7
+
+
+def _random_graph(n=96, m=500, seed=0, weighted=True):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.integers(1, 10, m).astype(np.float64) if weighted else None
+    return CSRGraph.from_edges(n, src, dst, w)
+
+
+@pytest.fixture(scope="module")
+def sess():
+    return FPPSession(_random_graph()).plan(num_queries=4, block_size=16)
+
+
+@pytest.fixture(scope="module")
+def sources():
+    return np.array([0, 5, 17, 63])
+
+
+# ------------------------------------------------------------------ cc
+
+
+@pytest.mark.parametrize("backend", BACKENDS3)
+def test_cc_matches_union_find_bitwise(sess, sources, backend):
+    """Every backend's cc plane == union-find labels, every lane."""
+    want = oracles.connected_components(sess.graph).astype(np.float32)
+    r = sess.run("cc", sources, backend=backend)
+    assert r.values.shape == (len(sources), sess.graph.n)
+    for q in range(len(sources)):
+        assert np.array_equal(r.values[q], want), backend
+
+
+def test_label_prop_oracle_agrees_with_union_find(sess):
+    """The sequential min-label twin converges to the union-find labels."""
+    labels, rounds = oracles.label_prop(sess.graph)
+    assert rounds >= 1
+    assert np.array_equal(labels, oracles.connected_components(sess.graph))
+
+
+def test_cc_terminates_without_visit_ceiling(sess, sources):
+    """Zero-weight propagation must reach a fixpoint on its own: equal
+    re-sent labels may not keep partitions pending (the strict-pending
+    rule in ``visit.minplus_algebra``) — a livelock here shows up as a
+    visit count at the engine's max_visits ceiling."""
+    r = sess.run("cc", sources, backend="engine")
+    bg, _ = sess.prepared(weights="zero")
+    assert r.stats["visits"] < 2000 * bg.num_parts
+
+
+# -------------------------------------------------------------- kreach
+
+
+@pytest.mark.parametrize("backend", BACKENDS3)
+def test_kreach_matches_dijkstra_oracle_bitwise(sess, sources, backend):
+    r = sess.run("kreach", sources, backend=backend, k=K)
+    for q, s in enumerate(sources):
+        vals, hops, _ = oracles.kreach(sess.graph, int(s), K,
+                                       stride=sess.kreach_stride)
+        assert np.array_equal(r.values[q], vals), (backend, s)
+        assert np.array_equal(r.residual[q], hops), (backend, s)
+
+
+def test_kreach_hop_budget_monotone(sess, sources):
+    """Raising k only adds reachable vertices, never changes a distance:
+    the k-budget is a post-filter on one packed lex-(hops, dist) plane."""
+    prev = None
+    for k in range(1, 5):
+        r = sess.run("kreach", sources, k=k)
+        finite = np.isfinite(r.values)
+        if prev is not None:
+            pfin, pvals = prev
+            assert (finite | ~pfin).all()          # reach set grows
+            assert np.array_equal(r.values[pfin], pvals[pfin])
+        prev = (finite, r.values)
+
+
+def test_kreach_respects_hop_budget_exactly(sess, sources):
+    r = sess.run("kreach", sources, k=K)
+    finite = np.isfinite(r.values)
+    assert (r.residual[finite] <= K).all()
+    # a reachable vertex past the budget is reported unreachable
+    over = np.isfinite(r.residual) & (r.residual > K)
+    assert not np.isfinite(r.values[over]).any()
+
+
+# ------------------------------------------------------------------ rw
+
+
+def test_rw_backends_bitwise_identical(sess, sources):
+    rs = [sess.run("rw", sources, backend=bk, length=WALK_LEN,
+                   seed=WALK_SEED) for bk in BACKENDS3]
+    for r in rs[1:]:
+        assert np.array_equal(rs[0].values, r.values)
+        assert np.array_equal(rs[0].edges_processed, r.edges_processed)
+
+
+def test_rw_matches_host_tape_replay(sess, sources):
+    """Occupancy planes == the sequential per-(source, step) tape replay,
+    mapped back through the partition permutation."""
+    r = sess.run("rw", sources, length=WALK_LEN, seed=WALK_SEED)
+    bg, perm = sess.prepared()
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    n = sess.graph.n
+    for q, s in enumerate(sources):
+        posns = oracles.random_walk(bg, int(perm[s]), WALK_LEN,
+                                    seed=WALK_SEED)
+        occ = np.zeros(n, np.float32)
+        for p in posns:
+            occ[inv[p]] += 1.0
+        assert np.array_equal(r.values[q], occ), s
+        assert r.edges_processed[q] == len(posns) - 1
+
+
+def test_rw_trajectory_independent_of_batch_composition(sess, sources):
+    """A walker's tape depends only on (graph, seed, source, length):
+    running a source alone, in a different lane, or alongside different
+    co-walkers returns the same bits."""
+    full = sess.run("rw", sources, length=WALK_LEN, seed=WALK_SEED)
+    solo = sess.run("rw", sources[2:3], length=WALK_LEN, seed=WALK_SEED)
+    assert np.array_equal(full.values[2], solo.values[0])
+    flipped = sess.run("rw", sources[::-1], length=WALK_LEN, seed=WALK_SEED)
+    assert np.array_equal(full.values, flipped.values[::-1])
+
+
+# ----------------------------------------------------- streaming lanes
+
+
+@pytest.mark.parametrize("kind", ("cc", "kreach"))
+def test_streaming_matches_oneshot(sess, sources, kind):
+    ex = sess.stream(kind, capacity=2, k=K)
+    qids = ex.submit(sources)
+    out = ex.run()
+    ref = sess.run(kind, sources, k=K)
+    for i, qid in enumerate(qids):
+        assert np.array_equal(out[qid], ref.values[i]), (kind, i)
+
+
+def test_walk_executor_matches_oneshot(sess, sources):
+    """The rw serving lane (WalkExecutor) is slot- and visit-order
+    independent: admitting through a 2-lane pool returns the same bits
+    as the one-shot batched run, including per-walk step counts."""
+    ex = sess.stream("rw", capacity=2, length=WALK_LEN, seed=WALK_SEED)
+    qids = ex.submit(sources)
+    out = ex.run()
+    ref = sess.run("rw", sources, length=WALK_LEN, seed=WALK_SEED)
+    for i, qid in enumerate(qids):
+        assert np.array_equal(out[qid], ref.values[i])
+        assert ex.result(qid).edges == ref.edges_processed[i]
+
+
+# ------------------------------------------------------------- serving
+
+
+def test_served_kinds_match_session(sess, sources):
+    from repro.serve.graph_server import GraphRequest, GraphServer
+    srv = GraphServer(capacity=4, k=K, length=WALK_LEN, walk_seed=WALK_SEED)
+    srv.register_graph("g", sess)
+    kinds = ("cc", "kreach", "rw")
+    rids = [srv.submit(GraphRequest(kind=kd, source=int(s), graph="g"))
+            for kd in kinds for s in sources]
+    srv.serve()
+    for i, kd in enumerate(kinds):
+        ref = sess.run(kd, sources, k=K, length=WALK_LEN, seed=WALK_SEED)
+        for j, s in enumerate(sources):
+            resp = srv.poll(rids[i * len(sources) + j])
+            assert resp.status == "ok", (kd, s)
+            assert np.array_equal(resp.values, ref.values[j]), (kd, s)
+
+
+def test_result_cache_hit_is_bit_identical(sess, sources):
+    """Satellite: a repeat submit after completion is served from the
+    result cache with the *same* bits the cold run produced."""
+    from repro.serve.graph_server import GraphRequest, GraphServer
+    srv = GraphServer(capacity=4, k=K, length=WALK_LEN, walk_seed=WALK_SEED)
+    srv.register_graph("g", sess)
+    s = int(sources[1])
+    for kd in ("cc", "rw"):
+        cold = srv.submit(GraphRequest(kind=kd, source=s, graph="g"))
+        srv.serve()
+        warm = srv.submit(GraphRequest(kind=kd, source=s, graph="g"))
+        srv.serve()
+        c, w = srv.poll(cold), srv.poll(warm)
+        assert c.status == w.status == "ok"
+        assert w.stats.get("cached") is True, kd
+        assert np.array_equal(c.values, w.values), kd
+
+
+def test_result_cache_keys_do_not_collide_across_kinds(sess, sources):
+    """cc and sssp on the same source must key distinctly — ``kind`` is
+    part of the cache identity, so a cc plane can never answer an sssp."""
+    from repro.serve.graph_server import GraphRequest, GraphServer
+    srv = GraphServer(capacity=4, k=K, length=WALK_LEN, walk_seed=WALK_SEED)
+    srv.register_graph("g", sess)
+    s = int(sources[0])
+    r1 = srv.submit(GraphRequest(kind="cc", source=s, graph="g"))
+    srv.serve()
+    r2 = srv.submit(GraphRequest(kind="sssp", source=s, graph="g"))
+    srv.serve()
+    a, b = srv.poll(r1), srv.poll(r2)
+    assert a.status == b.status == "ok"
+    assert not b.stats.get("cached")
+    assert not np.array_equal(a.values, b.values)
+
+
+# ------------------------------------- deterministic property variants
+# (the hypothesis generalizations live in test_workloads_property.py and
+# skip wholesale where hypothesis is unavailable; these fixed-seed twins
+# always run)
+
+
+def test_cc_is_permutation_equivariant_fixed_seed():
+    """Relabeling the vertices relabels the components and nothing else:
+    two vertices share a component in g iff their images share one in the
+    permuted graph."""
+    g = _random_graph(n=48, m=140, seed=11)
+    rng = np.random.default_rng(3)
+    sigma = rng.permutation(g.n)
+    src, dst, w = g.edges()
+    gp = CSRGraph.from_edges(g.n, sigma[src], sigma[dst], w)
+    a = FPPSession(g).plan(num_queries=1, block_size=16).run(
+        "cc", np.zeros(1, dtype=np.int64)).values[0]
+    b = FPPSession(gp).plan(num_queries=1, block_size=16).run(
+        "cc", np.zeros(1, dtype=np.int64)).values[0]
+    for u in range(0, g.n, 5):
+        same_a = a == a[u]
+        same_b = b[sigma] == b[sigma[u]]
+        assert np.array_equal(same_a, same_b)
+
+
+def test_cc_on_disconnected_and_isolated_vertices():
+    """Isolated vertices keep their own label; components never merge
+    across a missing edge."""
+    # two triangles + two isolated vertices
+    src = np.array([0, 1, 2, 3, 4, 5])
+    dst = np.array([1, 2, 0, 4, 5, 3])
+    g = CSRGraph.from_edges(8, src, dst)
+    r = FPPSession(g).plan(num_queries=1, block_size=4).run(
+        "cc", np.zeros(1, dtype=np.int64))
+    assert np.array_equal(
+        r.values[0], np.array([0, 0, 0, 3, 3, 3, 6, 7], np.float32))

@@ -1,0 +1,91 @@
+"""Hypothesis properties of the new visit-algebra workloads.
+
+Generalizes the fixed-seed differential pins in test_workloads_oracle.py
+to arbitrary random graphs: cc == union-find everywhere and is
+permutation-equivariant, kreach == the f32 Dijkstra oracle bitwise for
+any hop budget, and rw trajectories replay the host tape regardless of
+layout.  Skips wholesale where hypothesis is unavailable (the
+deterministic twins still run).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import oracles
+from repro.core.graph import CSRGraph
+from repro.fpp.session import FPPSession
+
+SETTINGS = dict(deadline=None, max_examples=8,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@st.composite
+def small_graph(draw):
+    n = draw(st.integers(16, 64))
+    m = draw(st.integers(n // 2, 3 * n))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.integers(1, 8, m).astype(np.float64)
+    return CSRGraph.from_edges(n, src, dst, w)
+
+
+@given(small_graph())
+@settings(**SETTINGS)
+def test_cc_fixpoint_equals_union_find(g):
+    sess = FPPSession(g).plan(num_queries=1, block_size=16)
+    r = sess.run("cc", np.zeros(1, dtype=np.int64))
+    assert np.array_equal(
+        r.values[0], oracles.connected_components(g).astype(np.float32))
+
+
+@given(small_graph(), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_cc_is_permutation_equivariant(g, seed):
+    """Two vertices share a component in g iff their images share one in
+    the vertex-relabeled graph."""
+    rng = np.random.default_rng(seed)
+    sigma = rng.permutation(g.n)
+    src, dst, w = g.edges()
+    gp = CSRGraph.from_edges(g.n, sigma[src], sigma[dst], w)
+    a = FPPSession(g).plan(num_queries=1, block_size=16).run(
+        "cc", np.zeros(1, dtype=np.int64)).values[0]
+    b = FPPSession(gp).plan(num_queries=1, block_size=16).run(
+        "cc", np.zeros(1, dtype=np.int64)).values[0]
+    for u in range(0, g.n, 7):
+        same_a = a == a[u]
+        same_b = b[sigma] == b[sigma[u]]
+        assert np.array_equal(same_a, same_b)
+
+
+@given(small_graph(), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_kreach_any_graph_matches_oracle(g, k):
+    sess = FPPSession(g).plan(num_queries=2, block_size=16)
+    srcs = np.array([0, g.n - 1])
+    r = sess.run("kreach", srcs, k=k)
+    for q, s in enumerate(srcs):
+        vals, hops, _ = oracles.kreach(g, int(s), k,
+                                       stride=sess.kreach_stride)
+        assert np.array_equal(r.values[q], vals)
+        assert np.array_equal(r.residual[q], hops)
+
+
+@given(small_graph(), st.integers(0, 2 ** 10), st.integers(1, 20))
+@settings(**SETTINGS)
+def test_rw_replays_host_tape_any_graph(g, seed, length):
+    sess = FPPSession(g).plan(num_queries=1, block_size=16)
+    src = np.array([g.n // 2])
+    r = sess.run("rw", src, length=length, seed=seed)
+    bg, perm = sess.prepared()
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    posns = oracles.random_walk(bg, int(perm[src[0]]), length, seed=seed)
+    occ = np.zeros(g.n, np.float32)
+    for p in posns:
+        occ[inv[p]] += 1.0
+    assert np.array_equal(r.values[0], occ)
